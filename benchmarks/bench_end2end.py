@@ -1,0 +1,78 @@
+"""Paper Fig. 5: end-to-end overhead of the block/tree discipline on a
+real workload -- here, serving decode with a PAGED KV cache vs a
+CONTIGUOUS KV cache (the virtual-memory-style preallocated rectangle),
+on the reduced gemma-2b.
+
+Also reports the paper's §3 claim that performance is insensitive to
+block size (bench_blocksize section)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import get_config
+from repro.core.paged_kv import PagedKVCache, PagedKVManager
+from repro.models.api import build_model, make_concrete_batch
+
+
+def _contiguous_decode_step(model, cfg, max_seq):
+    """Baseline: dense (B, S_max, KVH, hd) cache per layer, no tables."""
+
+    def step(p, tokens, k_cache, v_cache, lens):
+        # emulate via a paged cache with identity tables and bt = max_seq
+        B = tokens.shape[0]
+        kvcfg = model.kv_config(max_seq=max_seq, num_blocks=B, batch=B)
+        kvcfg = dataclasses.replace(kvcfg, block_tokens=max_seq,
+                                    num_blocks=B, max_blocks_per_seq=1)
+        cache = PagedKVCache(k_cache, v_cache,
+                             jnp.arange(B, dtype=jnp.int32)[:, None],
+                             lens, kvcfg)
+        logits, cache = model.decode_step(p, tokens, cache)
+        return logits, cache.k_pool, cache.v_pool, cache.seq_lens
+
+    return step
+
+
+def run() -> None:
+    cfg = get_config("gemma_2b").reduced()
+    model = build_model(cfg)
+    p, _ = model.init(jax.random.PRNGKey(0))
+    B, max_seq = 8, 256
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, B))
+
+    for bt in (8, 16, 32, 64):
+        kvcfg = dataclasses.replace(
+            model.kv_config(max_seq=max_seq, batch=B), block_tokens=bt,
+            num_blocks=B * max_seq // bt, max_blocks_per_seq=max_seq // bt)
+        cache = PagedKVCache.create(kvcfg, B)
+        mgr = PagedKVManager(kvcfg)
+        tb = []
+        for s in range(B):
+            mgr.admit(s, max_seq)
+            tb.append(mgr.device_table(s))
+        cache = dataclasses.replace(
+            cache, block_tables=jnp.asarray(np.stack(tb)),
+            seq_lens=jnp.full((B,), max_seq // 2, jnp.int32))
+        f = jax.jit(lambda pp, tt, cc: model.decode_step(pp, tt, cc))
+        us = time_fn(f, p, tokens, cache)
+        emit(f"decode_paged_bt{bt}", us, f"B={B},ctx={max_seq // 2}")
+
+    # contiguous baseline
+    L, KVH, hd = cfg.num_layers, cfg.kv_heads, cfg.hd
+    k_cache = jnp.zeros((L, B, max_seq, KVH, hd), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    lens = jnp.full((B,), max_seq // 2, jnp.int32)
+    step = _contiguous_decode_step(model, cfg, max_seq)
+    f = jax.jit(step)
+    us = time_fn(f, p, tokens, k_cache, v_cache, lens)
+    emit("decode_contiguous", us, f"B={B},ctx={max_seq // 2}")
+
+
+if __name__ == "__main__":
+    run()

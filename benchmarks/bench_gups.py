@@ -1,0 +1,72 @@
+"""Paper Fig. 4: GUPS (random update) and a pointer-chase workload
+(red-black-tree analogue), tree vs contiguous.
+
+GUPS: scatter-add at pseudorandom indices.  The tree pays depth-1
+indirection per access; the paper's point is that this software cost is
+small and flat while hardware translation costs grow with footprint.
+Pointer-chase: a linked permutation walked sequentially -- identical
+data structure in both layouts (the paper used the same red-black tree
+on both systems), so the delta isolates the addressing substrate.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.treearray import TreeArray
+
+SIZES = [("4MB", 1 << 20), ("64MB", 1 << 24), ("256MB", 1 << 26)]
+N_UPD = 1 << 16
+
+
+def run() -> None:
+    rng = np.random.RandomState(0)
+    for label, n in SIZES:
+        x = np.zeros(n, np.float32)
+        idx = jnp.asarray(rng.randint(0, n, N_UPD))
+        upd = jnp.asarray(rng.randn(N_UPD).astype(np.float32))
+
+        xd = jnp.asarray(x)
+        f_dense = jax.jit(lambda a, i, u: a.at[i].add(u))
+        us_dense = time_fn(f_dense, xd, idx, upd)
+        emit(f"gups_dense_{label}", us_dense, f"n={n}")
+
+        t = TreeArray.from_dense(x, leaf_size=8192, fanout=256,
+                                 shuffle_seed=1)
+        f_tree = jax.jit(lambda tt, i, u: tt.add(i, u))
+        us_tree = time_fn(f_tree, t, idx, upd)
+        emit(f"gups_tree_{label}", us_tree,
+             f"depth={t.depth},ratio={us_tree / us_dense:.3f}")
+
+    # pointer chase: permutation cycle walk, same structure both layouts
+    n = 1 << 20
+    perm = rng.permutation(n).astype(np.int32)
+    nxt_dense = jnp.asarray(perm)
+    t_nxt = TreeArray.from_dense(perm.astype(np.float32), leaf_size=8192,
+                                 fanout=256, shuffle_seed=2)
+
+    def chase_dense(nxt, steps=4096):
+        def body(i, _):
+            return nxt[i], None
+        last, _ = jax.lax.scan(body, jnp.asarray(0, jnp.int32), None,
+                               length=steps)
+        return last
+
+    def chase_tree(tt, steps=4096):
+        def body(i, _):
+            return tt.get_naive(i).astype(jnp.int32), None
+        last, _ = jax.lax.scan(body, jnp.asarray(0, jnp.int32), None,
+                               length=steps)
+        return last
+
+    us_d = time_fn(jax.jit(chase_dense), nxt_dense, iters=5)
+    emit("chase_dense_4MB", us_d, "")
+    us_t = time_fn(jax.jit(chase_tree), t_nxt, iters=5)
+    emit("chase_tree_4MB", us_t, f"ratio={us_t / us_d:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Paper Table 2: linear & strided scans, tree vs contiguous array,
+naive vs iterator disciplines, across array sizes.
+
+CPU-host reproduction of the paper's microbenchmark (their 'physical
+memory' is simulated here by the absence of any translation layer in
+JAX's flat buffers -- what we measure is exactly the SOFTWARE overhead
+of the tree discipline, the quantity the paper isolates in Table 2).
+Sizes are scaled to container memory; depths 1-3 are all exercised.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.treearray import TreeArray
+
+LEAF = 8192          # 32 KB of f32 -- the paper's block
+FANOUT = 256         # keeps depth-3 reachable at bench sizes
+
+# (label, n elements)  4 KB .. 256 MB
+SIZES = [("4KB", 1 << 10), ("4MB", 1 << 20), ("64MB", 1 << 24),
+         ("256MB", 1 << 26)]
+
+
+def dense_linear_sum(x):
+    return jnp.sum(x)
+
+
+def dense_strided_sum(x, stride=1024):
+    return jnp.sum(x[::stride])
+
+
+def run() -> None:
+    rng = np.random.RandomState(0)
+    for label, n in SIZES:
+        x = rng.randn(n).astype(np.float32)
+        xd = jnp.asarray(x)
+        t = TreeArray.from_dense(x, leaf_size=LEAF, fanout=FANOUT,
+                                 shuffle_seed=1)
+
+        f_dense = jax.jit(dense_linear_sum)
+        us_dense = time_fn(f_dense, xd)
+        emit(f"linear_scan_dense_{label}", us_dense, f"depth=0,n={n}")
+
+        f_iter = jax.jit(lambda tt: tt.scan_sum_iter())
+        us_iter = time_fn(f_iter, t)
+        emit(f"linear_scan_tree_iter_{label}", us_iter,
+             f"depth={t.depth},ratio={us_iter / us_dense:.3f}")
+
+        if n <= (1 << 20):   # naive per-element walk is O(n) sequential
+            f_naive = jax.jit(lambda tt: tt.scan_sum_naive())
+            us_naive = time_fn(f_naive, t, iters=3, warmup=1)
+            emit(f"linear_scan_tree_naive_{label}", us_naive,
+                 f"ratio={us_naive / us_dense:.3f}")
+
+        # strided: every 1024th element (paper: 4 KB apart)
+        idx = jnp.arange(0, n, 1024)
+        f_sd = jax.jit(dense_strided_sum)
+        us_sd = time_fn(f_sd, xd)
+        emit(f"strided_scan_dense_{label}", us_sd, "")
+        f_st = jax.jit(lambda tt, ii: jnp.sum(tt.get_naive(ii)))
+        us_st = time_fn(f_st, t, idx)
+        emit(f"strided_scan_tree_{label}", us_st,
+             f"ratio={us_st / us_sd:.3f}")
+
+
+if __name__ == "__main__":
+    run()

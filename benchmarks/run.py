@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  These are CPU-host
+measurements of the SOFTWARE disciplines the paper isolates (tree
+indirection, split-stack checks, paged vs contiguous serving); the TPU
+roofline numbers live in the dry-run pipeline (EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m benchmarks.run [--only tree_scan,gups,...]
+"""
+
+import argparse
+import sys
+import traceback
+
+MODULES = ["tree_scan", "gups", "stack", "end2end"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failed = []
+    for m in mods:
+        try:
+            mod = __import__(f"benchmarks.bench_{m}", fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failed.append(m)
+            print(f"{m},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == '__main__':
+    main()

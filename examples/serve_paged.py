@@ -1,0 +1,51 @@
+"""Serving example: continuous batching over the paged KV pool,
+including admission pressure and preemption-by-swap.
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs.base import get_config
+from repro.models.api import build_model
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    cfg = get_config("gemma_2b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    # a pool deliberately too small for all requests at once: the engine
+    # queues, admits by free-block count, and swaps under pressure
+    eng = Engine(model, params, slots=2, max_seq=64, num_blocks=20,
+                 eos_id=-1)
+    rng = np.random.RandomState(0)
+    for i in range(6):
+        plen = int(rng.randint(4, 12))
+        eng.submit(Request(rid=i, prompt=rng.randint(2, cfg.vocab_size,
+                                                     size=plen),
+                           max_new=8))
+    print(f"submitted 6 requests into a {eng.mgr.allocator.num_blocks}"
+          f"-block pool, 2 slots")
+
+    while eng.queue or eng.running or len(eng.preempted):
+        eng.step()
+        if eng.steps % 4 == 0:
+            print(f"  step {eng.steps:3d}: running={len(eng.running)} "
+                  f"queued={len(eng.queue)} done={len(eng.done)} "
+                  f"pool={eng.mgr.utilization:.0%}")
+        if eng.steps > 200:
+            break
+
+    for req in sorted(eng.done, key=lambda r: r.rid):
+        print(f"request {req.rid}: prompt[{len(req.prompt)}] -> "
+              f"{req.generated}")
+    assert len(eng.done) == 6
+    print("all requests completed; peak pool utilization bounded by the "
+          "block allocator (no overcommit).")
+
+
+if __name__ == "__main__":
+    main()

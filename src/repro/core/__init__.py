@@ -1,0 +1,14 @@
+"""Core: the paper's software memory management as composable JAX modules."""
+
+from repro.core.blockpool import (BlockAllocator, BlockPool, NULL_BLOCK,
+                                  OutOfBlocksError)
+from repro.core.treearray import TreeArray, tree_depth_for
+from repro.core.paged_kv import PagedKVCache, PagedKVConfig, PagedKVManager
+from repro.core.stack import BlockStack, DeviceBlockStack
+
+__all__ = [
+    "BlockAllocator", "BlockPool", "NULL_BLOCK", "OutOfBlocksError",
+    "TreeArray", "tree_depth_for",
+    "PagedKVCache", "PagedKVConfig", "PagedKVManager",
+    "BlockStack", "DeviceBlockStack",
+]

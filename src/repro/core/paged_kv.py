@@ -1,0 +1,295 @@
+"""Paged KV cache: the paper's block-allocated memory applied to serving.
+
+A decoding sequence's KV cache is the canonical "large, growing array"
+that virtual memory used to make contiguous.  Here it is stored the
+paper's way: fixed-size blocks of ``block_tokens`` tokens drawn from a
+shared pool, addressed through a per-sequence **block table** (a depth-1
+tree; ``TreeArray`` provides deeper tables when max_blocks_per_seq
+exceeds one table block -- see ``block_table.py``).
+
+Pools are stacked over layers (leading L axis) so the per-layer slice
+threads through ``lax.scan`` over the model's layers.  One block id is
+valid across all layers/heads -- the pool's trailing dims carry
+(kv_heads, head_dim), which also gives the natural sharding:
+
+    (L, num_blocks[data], block_tokens, kv_heads[model], head_dim)
+
+Standard (k,v) pools and MLA latent pools (single compressed c_kv stream,
+DeepSeek-V2/MiniCPM3) are both supported; MLA's latent blocks are ~4x
+smaller per token -- the paper's "choose your own block quantum" argument
+in action.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockpool import BlockAllocator, NULL_BLOCK
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    num_layers: int
+    kv_heads: int          # 0 for MLA latent mode
+    head_dim: int          # per-head dim; for MLA: latent_dim = kv_lora + rope
+    block_tokens: int = 64
+    num_blocks: int = 1024
+    max_blocks_per_seq: int = 16
+    latent: bool = False   # MLA: single stream, no separate V pool
+    # split-latent mode (latent TP): k_pool holds the kv_lora stream
+    # (head_dim = kv_lora, shardable over 'model'), v_pool holds the
+    # shared rope keys of width latent_rope.
+    latent_rope: int = 0
+    dtype: jnp.dtype = jnp.bfloat16
+    # data-parallel pool groups: the pool's block dim is split into
+    # dp_groups contiguous ranges co-sharded with the batch, and block
+    # tables hold GROUP-LOCAL ids.  This makes every table gather/scatter
+    # structurally local (a batched gather), so GSPMD never needs to move
+    # pool blocks across the data axis.
+    dp_groups: int = 1
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.max_blocks_per_seq * self.block_tokens
+
+    def token_shape(self) -> Tuple[int, ...]:
+        return (self.head_dim,) if self.latent else (self.kv_heads, self.head_dim)
+
+    def pool_shape(self) -> Tuple[int, ...]:
+        return (self.num_layers, self.num_blocks, self.block_tokens,
+                *self.token_shape())
+
+    def bytes_per_token_per_layer(self) -> int:
+        streams = 1 if self.latent else 2
+        per = int(np.prod(self.token_shape()))
+        return streams * per * jnp.dtype(self.dtype).itemsize
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """Functional paged KV state threaded through decode steps."""
+
+    k_pool: jax.Array            # (L, NB, BT, KVH, HD) or (L, NB, BT, LAT) for MLA
+    v_pool: Optional[jax.Array]  # None in latent (MLA) mode
+    block_tables: jax.Array      # (B, max_blocks_per_seq) int32
+    seq_lens: jax.Array          # (B,) int32 -- tokens already cached
+    config: PagedKVConfig = dataclasses.field(metadata=dict(static=True))
+
+    def tree_flatten(self):
+        return (self.k_pool, self.v_pool, self.block_tables, self.seq_lens), self.config
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch, aux)
+
+    # -- constructors --------------------------------------------------
+    @classmethod
+    def create(cls, config: PagedKVConfig, batch: int) -> "PagedKVCache":
+        k = jnp.zeros(config.pool_shape(), config.dtype)
+        if config.latent:
+            v = (jnp.zeros((*config.pool_shape()[:-1], config.latent_rope),
+                           config.dtype) if config.latent_rope else None)
+        else:
+            v = jnp.zeros(config.pool_shape(), config.dtype)
+        tables = jnp.full((batch, config.max_blocks_per_seq), NULL_BLOCK, jnp.int32)
+        lens = jnp.zeros((batch,), jnp.int32)
+        return cls(k, v, tables, lens, config)
+
+    @classmethod
+    def specs(cls, config: PagedKVConfig, batch: int) -> "PagedKVCache":
+        """ShapeDtypeStruct stand-in for the dry-run (no allocation)."""
+        sds = jax.ShapeDtypeStruct
+        k = sds(config.pool_shape(), config.dtype)
+        if config.latent:
+            v = (sds((*config.pool_shape()[:-1], config.latent_rope),
+                     config.dtype) if config.latent_rope else None)
+        else:
+            v = sds(config.pool_shape(), config.dtype)
+        tables = sds((batch, config.max_blocks_per_seq), jnp.int32)
+        lens = sds((batch,), jnp.int32)
+        return cls(k, v, tables, lens, config)
+
+    @property
+    def batch(self) -> int:
+        return self.block_tables.shape[0]
+
+    # -- addressing ------------------------------------------------------
+    def _addr(self, pos: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Logical position -> (physical block id per seq, offset)."""
+        blk_no = pos // self.config.block_tokens
+        off = pos % self.config.block_tokens
+        b = jnp.arange(self.batch)
+        phys = self.block_tables[b, blk_no]
+        return phys, off
+
+    # -- writes ---------------------------------------------------------
+    def append_token(self, k_new: jax.Array,
+                     v_new: Optional[jax.Array]) -> "PagedKVCache":
+        """Write one new token's KV for ALL layers at position seq_lens.
+
+        k_new: (L, B, KVH, HD) (or (L, B, LAT) latent).  Returns cache
+        with seq_lens advanced by 1.
+        """
+        phys, off = self._addr(self.seq_lens)
+        b = jnp.arange(self.batch)
+        k_pool = self.k_pool.at[:, phys, off].set(
+            jnp.moveaxis(k_new, 1, 1).astype(self.config.dtype))
+        v_pool = self.v_pool
+        if v_new is not None:
+            v_pool = self.v_pool.at[:, phys, off].set(v_new.astype(self.config.dtype))
+        return dataclasses.replace(
+            self, k_pool=k_pool, v_pool=v_pool, seq_lens=self.seq_lens + 1)
+
+    def write_layer_token(self, layer_kv, layer: jax.Array):
+        """Per-layer single-token write, for use inside lax.scan bodies.
+
+        layer_kv: (k (B,KVH,HD), v or None).  Positions taken from
+        seq_lens (NOT advanced here -- call ``advance`` once per step).
+        Returns updated per-layer pool slices to be re-stacked by scan.
+        """
+        raise NotImplementedError("use pool slices via scan xs; see models/")
+
+    def _scatter_blocks(self, pool, tbl, payload):
+        """pool (L, NB, BT, ...) .at[:, tbl].set(payload) with dp-group
+        local block ids when dp_groups > 1 (see PagedKVConfig)."""
+        dp = self.config.dp_groups
+        if dp <= 1:
+            return pool.at[:, tbl].set(payload)
+        L, NB = pool.shape[:2]
+        B = tbl.shape[0]
+        pg = pool.reshape(L, dp, NB // dp, *pool.shape[2:])
+        tg = tbl.reshape(dp, B // dp, tbl.shape[1])
+        pay = payload.reshape(payload.shape[0], dp, B // dp,
+                              *payload.shape[2:])
+        out = jax.vmap(lambda pl, tb, pp: pl.at[:, tb].set(pp),
+                       in_axes=(1, 0, 1), out_axes=1)(pg, tg, pay)
+        return out.reshape(pool.shape)
+
+    def write_prefill(self, k: jax.Array, v: Optional[jax.Array],
+                      lengths: jax.Array) -> "PagedKVCache":
+        """Bulk-write prompts.  k: (L, B, S, KVH, HD); positions 0..S-1.
+
+        Tokens beyond ``lengths[b]`` are written too (harmless -- masked
+        by seq_lens at read time), keeping the write dense/regular.
+        """
+        L, B, S = k.shape[:3]
+        bt = self.config.block_tokens
+        assert S % bt == 0, "prefill length must be block-aligned"
+        nblk = S // bt
+        tbl = jnp.maximum(self.block_tables[:, :nblk], 0)       # (B, nblk)
+        kb = k.reshape(L, B, nblk, bt, *k.shape[3:]).astype(self.config.dtype)
+        k_pool = self._scatter_blocks(self.k_pool, tbl, kb)
+        v_pool = self.v_pool
+        if v is not None:
+            vb = v.reshape(L, B, nblk, bt, *v.shape[3:]).astype(self.config.dtype)
+            v_pool = self._scatter_blocks(self.v_pool, tbl, vb)
+        return dataclasses.replace(self, k_pool=k_pool, v_pool=v_pool,
+                                   seq_lens=lengths.astype(jnp.int32))
+
+    def advance(self, n: int = 1) -> "PagedKVCache":
+        return dataclasses.replace(self, seq_lens=self.seq_lens + n)
+
+    # -- reads ----------------------------------------------------------
+    def gather_layer(self, layer_k: jax.Array, layer_v: Optional[jax.Array]):
+        """Materialize (B, S_max, ...) views of one layer's pool slices.
+
+        This is the *reference* read path (the Pallas paged_attention
+        kernel streams blocks instead).  Invalid table entries are
+        clipped; callers mask by seq_lens.
+        """
+        tbl = jnp.maximum(self.block_tables, 0)  # clip NULL
+        k = layer_k[tbl]            # (B, nblk, BT, ...)
+        k = k.reshape(k.shape[0], -1, *k.shape[3:])
+        if layer_v is None:
+            return k, None
+        v = layer_v[tbl]
+        v = v.reshape(v.shape[0], -1, *v.shape[3:])
+        return k, v
+
+
+class PagedKVManager:
+    """Host-side allocator policy for the cache (the 'OS').
+
+    Owns a BlockAllocator over the pool; grows/frees per-sequence tables
+    as the engine admits, extends, preempts, and finishes requests.
+    Swap-out/in moves whole blocks to/from a host-side store at block
+    granularity -- the paper's application-controlled swapping.
+    """
+
+    def __init__(self, config: PagedKVConfig):
+        self.config = config
+        self.allocator = BlockAllocator(config.num_blocks)
+        # block ids per live sequence (host view of the device tables)
+        self.tables: dict[int, List[int]] = {}
+        self.swapped: dict[int, Tuple[List[int], np.ndarray, Optional[np.ndarray]]] = {}
+
+    # -- admission/extension ------------------------------------------
+    def blocks_needed(self, tokens: int) -> int:
+        bt = self.config.block_tokens
+        return (tokens + bt - 1) // bt
+
+    def can_admit(self, tokens: int) -> bool:
+        return self.allocator.num_free >= self.blocks_needed(tokens)
+
+    def admit(self, seq_id: int, tokens: int) -> List[int]:
+        blocks = self.allocator.alloc_many(self.blocks_needed(tokens))
+        self.tables[seq_id] = blocks
+        return blocks
+
+    def extend(self, seq_id: int, new_total_tokens: int) -> List[int]:
+        """Ensure capacity for new_total_tokens; returns newly added ids."""
+        have = self.tables[seq_id]
+        need = self.blocks_needed(new_total_tokens)
+        fresh = self.allocator.alloc_many(max(0, need - len(have)))
+        have.extend(fresh)
+        return fresh
+
+    def release(self, seq_id: int) -> None:
+        self.allocator.free_many(self.tables.pop(seq_id))
+
+    def fork(self, parent_id: int, child_id: int, shared_tokens: int) -> None:
+        """COW prefix sharing: child aliases parent's full prefix blocks."""
+        bt = self.config.block_tokens
+        shared = shared_tokens // bt  # only fully-shared blocks alias
+        parent = self.tables[parent_id]
+        child = [self.allocator.share(b) for b in parent[:shared]]
+        self.tables[child_id] = child
+
+    # -- swapping ---------------------------------------------------------
+    def swap_out(self, seq_id: int, k_pool: np.ndarray,
+                 v_pool: Optional[np.ndarray]) -> None:
+        """Copy a preempted sequence's blocks to host store; free them."""
+        blocks = self.tables.pop(seq_id)
+        idx = np.asarray(blocks, dtype=np.int32)
+        k_save = np.asarray(k_pool[:, idx])
+        v_save = None if v_pool is None else np.asarray(v_pool[:, idx])
+        self.allocator.free_many(blocks)
+        self.swapped[seq_id] = (blocks, k_save, v_save)
+
+    def swap_in(self, seq_id: int):
+        """Reallocate (anywhere!) and return (new_ids, payloads) to write.
+
+        The new physical blocks need not match the old ones -- block
+        tables absorb the relocation, which is the paper's 'Relocation /
+        Migration' row implemented in software.
+        """
+        old_ids, k_save, v_save = self.swapped.pop(seq_id)
+        new_ids = self.allocator.alloc_many(len(old_ids))
+        self.tables[seq_id] = new_ids
+        return new_ids, k_save, v_save
+
+    def device_table(self, seq_id: int) -> np.ndarray:
+        t = np.full(self.config.max_blocks_per_seq, NULL_BLOCK, np.int32)
+        blocks = self.tables[seq_id]
+        t[: len(blocks)] = blocks
+        return t
+
+    @property
+    def utilization(self) -> float:
+        return self.allocator.num_used / self.allocator.num_blocks

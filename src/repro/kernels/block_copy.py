@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: batched physical block copy (swap-in / compaction).
+
+Executes a (src, dst) copy plan against the arena: the device-side half
+of the paper's 'Relocation / Migration' and 'Swapping' rows.  The plan
+is a scalar-prefetch operand, so the DMA schedule is driven from SMEM —
+the same discipline as the other kernels; compaction plans come from
+``core.block_table.compaction_plan``.
+
+Copies must be applied to a SNAPSHOT (the plan generator guarantees
+src/dst disjointness for compaction: movers come from beyond the dense
+prefix, holes lie inside it — asserted in core.block_table tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _copy_kernel(src_ref, dst_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+def block_copy(pool: jax.Array, src: jax.Array, dst: jax.Array,
+               *, interpret: bool = False) -> jax.Array:
+    """pool: (NB, *block); src/dst: (n,) int32 -> pool with plan applied.
+
+    Grid step i DMAs block ``src[i]`` into position ``dst[i]``; untouched
+    blocks are pre-seeded by aliasing the input (donate) or, in this
+    functional form, by a first pass-through write.
+    """
+    n = src.shape[0]
+    blk = pool.shape[1:]
+    ones = (1,) + blk
+    zeros = tuple(0 for _ in blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[pl.BlockSpec(ones, lambda i, s, d: (s[i],) + zeros)],
+        out_specs=pl.BlockSpec(ones, lambda i, s, d: (d[i],) + zeros),
+    )
+    moved = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+        input_output_aliases={2: 0},
+    )(src, dst, pool)
+    return moved

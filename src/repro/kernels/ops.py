@@ -1,0 +1,73 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Mosaic kernels run natively; on CPU
+(this container) ``interpret=True`` executes the kernel bodies exactly,
+and the *reference* path is what the dry-run lowers (see
+``repro.models.attention.decode_attention``).  ``force`` overrides for
+tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_copy as _bc
+from repro.kernels import paged_attention as _pa
+from repro.kernels import tree_gather as _tg
+from repro.kernels import ref as kref
+
+
+def _use_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_gather(leaves, leaf_table, interpret: Optional[bool] = None):
+    return _tg.tree_gather(leaves, leaf_table,
+                           interpret=_use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_block_sum(leaves, leaf_table, interpret: Optional[bool] = None):
+    return _tg.tree_block_sum(leaves, leaf_table,
+                              interpret=_use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def tree_gather_rows(pool, row_ids, leaf_table, rows_per_block: int,
+                     interpret: Optional[bool] = None):
+    return _tg.tree_gather_rows(pool, row_ids, leaf_table, rows_per_block,
+                                interpret=_use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "window", "v_dim", "interpret"))
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens,
+                    scale: Optional[float] = None,
+                    softcap: Optional[float] = None,
+                    window: Optional[int] = None,
+                    v_dim: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    return _pa.paged_attention(
+        q, k_pool, v_pool, block_tables, seq_lens, scale=scale,
+        softcap=softcap, window=window, v_dim=v_dim,
+        interpret=_use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def block_copy(pool, src, dst, interpret: Optional[bool] = None):
+    return _bc.block_copy(pool, src, dst,
+                          interpret=_use_interpret(interpret))
+
+
+# re-export oracles for convenience
+tree_gather_ref = kref.tree_gather_ref
+tree_block_sum_ref = kref.tree_block_sum_ref
+tree_gather_rows_ref = kref.tree_gather_rows_ref
+paged_attention_ref = kref.paged_attention_ref

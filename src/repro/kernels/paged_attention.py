@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: flash-decoding attention over a paged KV cache.
+
+One new query token per sequence attends over KV stored in fixed-size
+token blocks addressed through a block table (the paper's arrays-as-trees
+applied to the KV cache).  The block table and sequence lengths are
+**scalar-prefetch** operands in SMEM: the BlockSpec index_map dereferences
+``table[b, j]`` to pick which physical KV block the next grid step DMAs
+into VMEM -- the iterator/PTW-cache discipline, so the "tree walk" is
+entirely off the critical path (overlapped with the previous block's
+flash update).
+
+Grid: ``(batch, kv_heads, max_blocks_per_seq)``; the last axis is the
+sequential flash-decoding sweep with running (m, l, acc) scratch in VMEM.
+Blocks past ``ceil(seq_len / bt)`` contribute nothing (masked to -1e30),
+matching the reference exactly; a production TPU build would additionally
+early-out via ``pltpu.when``-guarded DMA, which does not change results.
+
+Supports:
+  * GQA/MQA: q has ``G = q_heads // kv_heads`` rows per kv head.
+  * logit softcap (gemma2), sliding window (gemma2/gemma3 local layers).
+  * MLA latent mode: ``kv_heads=1``, ``head_dim = kv_lora + rope`` and
+    values are the first ``v_dim`` (= kv_lora) lanes of the SAME latent
+    blocks -- the "absorbed" DeepSeek decode, where the paged pool stores
+    only the compressed stream.
+
+MXU alignment: head_dim (128/256) and block_tokens (64..256 multiple of
+8) give (8,128)-tileable operands; the score matmul is (G, HD) x (HD, BT)
+and the value matmul (G, BT) x (BT, VD).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+_NEG = -1e30
+
+
+def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, block_tokens: int,
+                       scale: float, softcap: Optional[float],
+                       window: Optional[int], num_blocks_grid: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, HD)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (BT, HD)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)    # (BT, VD)
+
+    s = jax.lax.dot_general(q * scale, k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, BT)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    seq_len = lens_ref[b]
+    pos = j * block_tokens + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < seq_len
+    if window is not None:
+        valid = jnp.logical_and(valid, pos >= seq_len - window)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_scr[...]                          # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)              # (G, 1)
+    p = jnp.exp(s - m_new)                       # (G, BT)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == num_blocks_grid - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, seq_lens: jax.Array, *,
+                    scale: Optional[float] = None,
+                    softcap: Optional[float] = None,
+                    window: Optional[int] = None,
+                    v_dim: Optional[int] = None,
+                    interpret: bool = False) -> jax.Array:
+    """Flash-decoding over paged KV.
+
+    q           : (B, KVH, G, HD) one token's queries, grouped per kv head
+    k_pool      : (NB, BT, KVH, HD)
+    v_pool      : (NB, BT, KVH, VD)  (pass k_pool + v_dim for MLA latent)
+    block_tables: (B, MB) int32 (NULL entries allowed past seq end)
+    seq_lens    : (B,)   int32
+    returns     : (B, KVH, G, VD)
+    """
+    B, KVH, G, HD = q.shape
+    NB, BT, KVH_k, HD_k = k_pool.shape
+    assert KVH_k == KVH and HD_k == HD, (q.shape, k_pool.shape)
+    MB = block_tables.shape[1]
+    VD = v_dim if v_dim is not None else v_pool.shape[-1]
+    if scale is None:
+        scale = HD ** -0.5
+
+    kernel = functools.partial(
+        _paged_attn_kernel, block_tokens=BT, scale=float(scale),
+        softcap=softcap, window=window, num_blocks_grid=MB)
+
+    def k_map(b, h, j, tbl, lens):
+        return (jnp.maximum(tbl[b, j], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, HD), lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, BT, 1, HD), k_map),
+            pl.BlockSpec((1, BT, 1, VD), k_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, VD),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, VD), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, VD), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pool, v_pool)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (no pallas imports).
+
+These are also the implementations the dry-run compiles (kernels are
+TPU-targeted; the CPU container validates them in interpret mode against
+these oracles -- see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def tree_gather_ref(leaves: jax.Array, leaf_table: jax.Array) -> jax.Array:
+    return leaves[leaf_table]
+
+
+def tree_block_sum_ref(leaves: jax.Array, leaf_table: jax.Array) -> jax.Array:
+    return jnp.sum(leaves[leaf_table].astype(jnp.float32), axis=1)
+
+
+def tree_gather_rows_ref(pool: jax.Array, row_ids: jax.Array,
+                         leaf_table: jax.Array, rows_per_block: int) -> jax.Array:
+    phys = leaf_table[row_ids // rows_per_block]
+    return pool[phys, row_ids % rows_per_block]
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, seq_lens: jax.Array, *,
+                        scale: Optional[float] = None,
+                        softcap: Optional[float] = None,
+                        window: Optional[int] = None,
+                        v_dim: Optional[int] = None) -> jax.Array:
+    """Dense-gather decode attention.  Shapes as in kernels.paged_attention."""
+    B, KVH, G, HD = q.shape
+    NB, BT, _, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    VD = v_dim if v_dim is not None else v_pool.shape[-1]
+    if scale is None:
+        scale = HD ** -0.5
+
+    tbl = jnp.maximum(block_tables, 0)
+    k = k_pool[tbl].reshape(B, MB * BT, KVH, HD)      # (B, S, KVH, HD)
+    v = v_pool[tbl].reshape(B, MB * BT, KVH, -1)[..., :VD]
+
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(MB * BT)[None, :]
+    valid = pos < seq_lens[:, None]
+    if window is not None:
+        valid = jnp.logical_and(valid, pos >= (seq_lens[:, None] - window))
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: stream a TreeArray in logical order.
+
+This is the paper's **iterator optimization as a DMA schedule**: the
+(flattened) leaf table is a *scalar-prefetch* operand living in SMEM, and
+the ``BlockSpec.index_map`` reads it to decide which physical leaf block
+to DMA from HBM into VMEM next.  The Mosaic pipeline overlaps the table
+lookup + DMA of block ``i+1`` with compute on block ``i`` -- i.e. the
+software equivalent of a page-table-walk cache *plus* the prefetcher the
+paper credits for hiding TLB miss latency (§4.4), with zero translation
+hardware.
+
+Kernels
+-------
+``tree_gather``     : materialize the logical array (linear scan / copy).
+``tree_block_sum``  : per-leaf partial sums (linear-scan reduce) -- the
+                      Table 2 'Linear Scan: Iter' discipline.
+``tree_gather_rows``: gather logical *rows* of a 2-D blocked array via the
+                      table (paged embedding lookup; GUPS-style random
+                      access uses ``ref.tree_gather_elems`` -- truly random
+                      single-element access has no block locality to
+                      exploit, which is the paper's own observation about
+                      GUPS).
+
+Block shapes: leaves are ``(leaf_size,)`` with leaf_size a multiple of
+128*8 so a (8,128)-tiled f32 block is MXU/VPU aligned; 8192 f32 elements
+= the paper's 32 KB block.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU grid spec (works under interpret mode on CPU too)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _gather_kernel(table_ref, leaves_ref, out_ref):
+    # whole-block copy; the interesting work happened in the index_map
+    out_ref[...] = leaves_ref[...]
+
+
+def _block_sum_kernel(table_ref, leaves_ref, out_ref):
+    out_ref[0] = jnp.sum(leaves_ref[...], dtype=jnp.float32)
+
+
+def tree_gather(leaves: jax.Array, leaf_table: jax.Array,
+                *, interpret: bool = False) -> jax.Array:
+    """(num_blocks, leaf) pool + (n_logical,) table -> (n_logical, leaf)."""
+    n_logical = leaf_table.shape[0]
+    leaf = leaves.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_logical,),
+        in_specs=[pl.BlockSpec((1, leaf), lambda i, tbl: (tbl[i], 0))],
+        out_specs=pl.BlockSpec((1, leaf), lambda i, tbl: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_logical, leaf), leaves.dtype),
+        interpret=interpret,
+    )(leaf_table, leaves)
+
+
+def tree_block_sum(leaves: jax.Array, leaf_table: jax.Array,
+                   *, interpret: bool = False) -> jax.Array:
+    """Per-logical-leaf partial sums: (n_logical,) f32."""
+    n_logical = leaf_table.shape[0]
+    leaf = leaves.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_logical,),
+        in_specs=[pl.BlockSpec((1, leaf), lambda i, tbl: (tbl[i], 0))],
+        out_specs=pl.BlockSpec((1,), lambda i, tbl: (i,)),
+    )
+    return pl.pallas_call(
+        _block_sum_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_logical,), jnp.float32),
+        interpret=interpret,
+    )(leaf_table, leaves)
+
+
+def _gather_rows_kernel(row_block_ref, row_off_ref, pool_ref, out_ref):
+    # one logical row per grid step; the block is selected by the
+    # index_map, the row-within-block by an SMEM offset here.
+    i = pl.program_id(0)
+    off = row_off_ref[i]
+    out_ref[0, :] = pool_ref[0, off, :]
+
+
+def tree_gather_rows(pool: jax.Array, row_ids: jax.Array, leaf_table: jax.Array,
+                     rows_per_block: int, *, interpret: bool = False) -> jax.Array:
+    """Gather rows of a blocked 2-D array (paged embedding table).
+
+    pool: (num_blocks, rows_per_block, width); row_ids: (n,) logical row
+    numbers; leaf_table: (num_logical_blocks,) physical block of each
+    logical block.  Returns (n, width).
+
+    The index_map composes table lookup with the row's block number --
+    a full software 'page walk' per row, but hoisted into the prefetch
+    pipeline (iterator discipline for the block, SMEM offset for the row).
+    """
+    n = row_ids.shape[0]
+    width = pool.shape[2]
+    row_block = row_ids // rows_per_block           # logical block per row
+    row_off = (row_ids % rows_per_block).astype(jnp.int32)
+    phys = leaf_table[row_block].astype(jnp.int32)  # resolve once (bulk walk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # phys block per row, offset per row
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, rows_per_block, width),
+                               lambda i, blk, off: (blk[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, width), lambda i, blk, off: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, width), pool.dtype),
+        interpret=interpret,
+    )(phys, row_off, pool)

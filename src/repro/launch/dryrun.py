@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``):
+the XLA_FLAGS line above runs before any other import so the 512
+placeholder host devices exist before jax locks the device count.
+
+For each runnable cell (see configs/shapes.py):
+  * train_4k      -> train_step (fwd+bwd+AdamW update)
+  * prefill_32k   -> forward-only loss (inference prefill)
+  * decode_32k / long_500k -> serve_step (one token, paged KV)
+
+Outputs per cell: compile OK/FAIL, memory_analysis, cost_analysis, and
+roofline terms (repro.roofline) appended to a JSONL report.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, cell_is_runnable
+from repro import roofline as RL
+from repro.launch import shardings as SH
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.steps import (build_forward_step, build_serve_step,
+                                build_train_step, dp_groups_for)
+from repro.models.api import build_model, decode_specs, input_specs
+from repro.optim import adamw as OPT
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
+               rules=None, opt_overrides=None, cfg_transform=None):
+    """Returns (lowered, model_flops, chips)."""
+    cfg = get_config(arch)
+    if opt_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **opt_overrides)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg, max_positions=max(4096, shape.seq_len
+                                               if shape.kind == "train" else 4096))
+    chips = mesh.devices.size
+    if shape.kind == "train":
+        specs = input_specs(cfg, shape)
+        if shape_name.startswith("prefill"):
+            step = build_forward_step(model, mesh, rules=rules, remat=False)
+            pshapes, _ = model.param_specs()
+            lowered = step.lower(pshapes, specs)
+        else:
+            opt_cfg = OPT.AdamWConfig()
+            # ZeRO-1 is mandatory at 27B scale on 16 GB chips: replicated
+            # AdamW moments alone (8 bytes/param over the 16-way model
+            # shard) would exceed HBM.
+            step = build_train_step(model, mesh, opt_cfg, rules=rules,
+                                    remat=remat, zero1=True)
+            pshapes, _ = model.param_specs()
+            oshapes = OPT.state_specs(pshapes)
+            lowered = step.lower(pshapes, oshapes, specs)
+    else:
+        dp = dp_groups_for(mesh, shape.global_batch)
+        tokens, state = decode_specs(cfg, shape, model=model, dp_groups=dp)
+        step = build_serve_step(model, mesh, state, rules=rules)
+        pshapes, _ = model.param_specs()
+        lowered = step.lower(pshapes, tokens, state)
+    return lowered, RL.model_flops_for(cfg, shape), chips
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             compile_: bool = True, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "pod2x16x16" if multi_pod else "16x16"
+    ok, why = cell_is_runnable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_desc,
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    try:
+        lowered, model_flops, chips = lower_cell(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        if not compile_:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_desc,
+                    "status": "lowered", "t_lower_s": t_lower}
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rl = RL.analyze(compiled, arch=arch, shape=shape_name,
+                        mesh_desc=mesh_desc, chips=chips,
+                        model_flops=model_flops)
+        row = rl.row()
+        row.update(status="ok", t_lower_s=round(t_lower, 1),
+                   t_compile_s=round(t_compile, 1))
+        if verbose:
+            mem = compiled.memory_analysis()
+            print(f"  memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+                  f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+                  f"out={mem.output_size_in_bytes/1e9:.2f}GB", flush=True)
+        return row
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_desc,
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="dryrun_report.jsonl")
+    ap.add_argument("--lower-only", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = set()
+    if os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") in ("ok", "skipped", "lowered"):
+                done.add((r["arch"], r["shape"], r["mesh"]))
+
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    key = (arch, shape, "pod2x16x16" if mp else "16x16")
+                    if key in done:
+                        continue
+                    desc = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                    print(f"[dryrun] {desc} ...", flush=True)
+                    row = run_cell(arch, shape, mp,
+                                   compile_=not args.lower_only)
+                    status = row["status"]
+                    if status == "ok":
+                        print(f"  OK  bottleneck={row['bottleneck']} "
+                              f"t=({row['t_compute_s']:.4f}, "
+                              f"{row['t_memory_s']:.4f}, "
+                              f"{row['t_collective_s']:.4f})s "
+                              f"frac={row['roofline_fraction']:.3f}",
+                              flush=True)
+                    elif status == "FAIL":
+                        n_fail += 1
+                        print(f"  FAIL {row['error']}", flush=True)
+                    else:
+                        print(f"  {status}: {row.get('reason','')}",
+                              flush=True)
+                    row.pop("trace", None)
+                    f.write(json.dumps(row) + "\n")
+                    f.flush()
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Logical-axis sharding: maps model-declared logical axes onto the mesh.
+
+Models annotate activations via ``constrain(x, "batch", None, "model")``
+and parameters via logical-axis trees (see models/common.py).  The
+launcher activates a mesh + rule set with ``use_rules``; without one,
+``constrain`` is the identity (single-device smoke tests).
+
+Rules (logical axis -> mesh axes):
+    batch  -> ("pod", "data")   activations' batch dim
+    heads  -> "model"           attn heads / ffn hidden / expert hidden
+    vocab  -> "model"
+    embed  -> None (replicated) or ("data",) under FSDP-style ZeRO-3
+    expert -> None (TP-in-expert baseline) or "model" (EP mode)
+    seq    -> "model"           sequence parallelism (norms/residuals)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "attn_heads": "model",  # set to None per-arch when heads % tp != 0
+    "vocab": "model",
+    "embed": None,
+    "expert": None,
+    "layers": None,
+    # sequence-parallel residual stream (Megatron-SP): the saved remat
+    # carry and all norms/elementwise work shard the seq dim over model
+    "seq": "model",
+    # context parallelism: attention for archs whose head count does not
+    # divide the model axis (MQA gemma-2b, whisper 6H, internvl 14H,
+    # minicpm3 40H) shards the QUERY SEQUENCE over "model" instead of
+    # replicating the whole attention computation per model rank.
+    "ctx": "model",
+}
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[Dict[str, Any]] = None):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes that don't exist (single-pod mesh has no "pod")
+    axes = set(mesh.axis_names)
+
+    def filt(v):
+        if v is None:
+            return None
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in axes)
+            return kept if kept else None
+        return v if v in axes else None
+
+    merged = {k: filt(v) for k, v in merged.items()}
+    prev = _current()
+    _state.ctx = (mesh, merged)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def spec_for(logical: Tuple[Optional[str], ...],
+             rules: Optional[Dict[str, Any]] = None) -> P:
+    ctx = _current()
+    if rules is None:
+        rules = ctx[1] if ctx else DEFAULT_RULES
+    return P(*(rules.get(a) if a else None for a in logical))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Sharding-constrain an activation by logical axis names (no-op when
+    no mesh rules are active)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = P(*(rules.get(a) if a else None for a in logical))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active_mesh() -> Optional[Mesh]:
+    ctx = _current()
+    return ctx[0] if ctx else None
+
+
+def tp_size() -> int:
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def use_ctx_parallel(num_heads: int) -> bool:
+    """True when per-head sharding over 'model' is impossible and
+    attention should be context-parallel instead."""
+    tp = tp_size()
+    return tp > 1 and num_heads % tp != 0
+
+
+def param_shardings(axes_tree, mesh: Mesh,
+                    rules: Optional[Dict[str, Any]] = None):
+    """Map a logical-axes pytree (from model init) to NamedShardings."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    axes = set(mesh.axis_names)
+
+    def one(t):
+        spec = []
+        for a in t:
+            v = merged.get(a) if a else None
+            if isinstance(v, tuple):
+                v = tuple(x for x in v if x in axes) or None
+            elif v is not None and v not in axes:
+                v = None
+            spec.append(v)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda t: isinstance(t, tuple))

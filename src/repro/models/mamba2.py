@@ -1,0 +1,172 @@
+"""Mamba2 (SSD) block, chunked-parallel, for the Zamba2 hybrid.
+
+Per head (P = head_dim, N = state_dim), scalar decay a_t = exp(dt_t * A_h):
+
+    S_t = a_t S_{t-1} + (dt_t x_t) B_t^T          S: (P, N)
+    y_t = S_t C_t + D_h x_t
+
+Chunked form (chunk C) with inclusive log-decay cumsum c_t (all exponents
+<= 0 -- stable):
+
+    y_inter[t] = exp(c_t) * (S_in C_t)
+    M[t,s]     = exp(c_t - c_s) (C_t . B_s) dt_s     (s <= t)
+    y_intra    = M @ x
+    S_out      = exp(c_last) S_in
+                 + sum_s exp(c_last - c_s) (dt_s x_s) B_s^T
+
+Input path: in_proj -> (z, xBC, dt); causal conv1d (width 4) + silu on
+xBC; gated RMSNorm before out_proj (Mamba2 paper).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import AxTree, Params, dense_init, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.head_dim, s.state_dim, s.conv_width
+
+
+def init_mamba2(rng, cfg: ModelConfig) -> Tuple[Params, AxTree]:
+    d, dt = cfg.d_model, cfg.jdtype
+    d_inner, H, P, N, W = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    r = jax.random.split(rng, 5)
+    p: Params = {
+        "in_proj": dense_init(r[0], d, 2 * d_inner + 2 * N + H, dt),
+        "conv_w": 0.1 * jax.random.normal(r[1], (W, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),         # per-head A
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(r[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(r[3], d_inner, d, dt),
+    }
+    ax = AxTree(in_proj=("embed", "heads"), conv_w=(None, "heads"),
+                conv_b=("heads",), A_log=(None,), dt_bias=(None,), D=(None,),
+                norm=("heads",), out_proj=("heads", "embed"))
+    return p, ax
+
+
+def _split_proj(p, x, cfg):
+    d_inner, H, P, N, W = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: 2 * d_inner + 2 * N]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + p["dt_bias"])
+    return z, xBC, dt
+
+
+def _conv(p, xBC, conv_state):
+    """Causal conv1d over (B, S, conv_dim) given (B, W-1, conv_dim) state."""
+    W = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state, xBC.astype(jnp.float32)], axis=1)
+    out = sum(full[:, i: full.shape[1] - (W - 1 - i)] * p["conv_w"][i]
+              for i in range(W))
+    return jax.nn.silu(out + p["conv_b"]), full[:, -(W - 1):]
+
+
+def mamba2_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
+               conv_state: Optional[jax.Array] = None,
+               ssd_state: Optional[jax.Array] = None):
+    """x: (B, S, d) -> (y, (conv_state, ssd_state))."""
+    B, S, d = x.shape
+    d_inner, H, P, N, W = _dims(cfg)
+    C_len = min(cfg.ssm.chunk, S)
+    assert S % C_len == 0
+    z, xBC, dt = _split_proj(p, x, cfg)
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, d_inner + 2 * N), jnp.float32)
+    xBC, conv_out_state = _conv(p, xBC, conv_state)
+    xs = xBC[..., :d_inner].reshape(B, S, H, P)
+    Bm = xBC[..., d_inner: d_inner + N]                      # (B,S,N)
+    Cm = xBC[..., d_inner + N:]                              # (B,S,N)
+    A = -jnp.exp(p["A_log"])                                 # (H,) < 0
+    logdecay = dt * A                                        # (B,S,H) <= 0
+
+    nc = S // C_len
+
+    def chunk(t, trailing):
+        return t.reshape(B, nc, C_len, *trailing).swapaxes(0, 1)
+    xs_c = chunk(xs, (H, P))
+    B_c, C_c = chunk(Bm, (N,)), chunk(Cm, (N,))
+    dt_c, ld_c = chunk(dt, (H,)), chunk(logdecay, (H,))
+
+    S0 = (ssd_state.astype(jnp.float32) if ssd_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def body(S_in, xsb):
+        xb, Bb, Cb, dtb, ldb = xsb           # (B,C,H,P) (B,C,N) (B,C,H)
+        c = jnp.cumsum(ldb, axis=1)          # (B,C,H) inclusive
+        y_inter = jnp.einsum("bth,bhpn,btn->bthp", jnp.exp(c),
+                             S_in, Cb.astype(jnp.float32))
+        cb = Cb.astype(jnp.float32) @ Bb.astype(jnp.float32).swapaxes(1, 2)
+        decay = jnp.exp(jnp.clip(c[:, :, None, :] - c[:, None, :, :],
+                                 -60.0, 0.0))                # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((C_len, C_len), bool))
+        M = cb[:, :, :, None] * decay * dtb[:, None, :, :]   # (B,t,s,H)
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xb.astype(jnp.float32))
+        clast = c[:, -1:, :]                                 # (B,1,H)
+        w = jnp.exp(clast - c) * dtb                         # (B,C,H)
+        S_out = (jnp.exp(clast)[:, 0, :, None, None] * S_in +
+                 jnp.einsum("bth,bthp,btn->bhpn", w,
+                            xb.astype(jnp.float32), Bb.astype(jnp.float32)))
+        return S_out, y_inter + y_intra
+
+    S_fin, yc = jax.lax.scan(jax.checkpoint(body), S0,
+                             (xs_c, B_c, C_c, dt_c, ld_c))
+    y = yc.swapaxes(0, 1).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_out_state, S_fin)
+
+
+def mamba2_step(p: Params, x: jax.Array, cfg: ModelConfig,
+                conv_state: jax.Array, ssd_state: jax.Array):
+    """Single-token recurrence.  x: (B, d)."""
+    B, d = x.shape
+    d_inner, H, P, N, W = _dims(cfg)
+    z, xBC, dt = _split_proj(p, x[:, None], cfg)
+    xBC, conv_state = _conv(p, xBC, conv_state)
+    xs = xBC[:, 0, :d_inner].reshape(B, H, P)
+    Bm = xBC[:, 0, d_inner: d_inner + N]
+    Cm = xBC[:, 0, d_inner + N:]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0] * A)                                # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xs.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    S_new = a[:, :, None, None] * ssd_state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z[:, 0]), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (conv_state, S_new)
+
+
+def mamba2_ref(p: Params, x: jax.Array, cfg: ModelConfig):
+    """Sequential oracle."""
+    B, S, d = x.shape
+    d_inner, H, P, N, W = _dims(cfg)
+
+    def body(carry, xt):
+        cs, ss = carry
+        y, (cs, ss) = mamba2_step(p, xt, cfg, cs, ss)
+        return (cs, ss), y
+
+    init = (jnp.zeros((B, W - 1, d_inner + 2 * N), jnp.float32),
+            jnp.zeros((B, H, P, N), jnp.float32))
+    _, ys = jax.lax.scan(body, init, x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1)

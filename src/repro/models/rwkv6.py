@@ -1,0 +1,232 @@
+"""RWKV6 ("Finch"): attention-free time mixing with data-dependent
+per-channel decay, in chunked-parallel form.
+
+Per head (dk = dv = head_dim), with r/k/v/w from data-dependent token
+shift (ddlerp):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Chunked evaluation (chunk C, all log-space, every exponent <= 0 so no
+overflow is possible):
+
+    c_t      = sum_{i<=t} log w_i        (chunk-local inclusive cumsum)
+    o_inter  = (r . exp(c_prev)) @ S_in
+    M[t,s]   = sum_d r_td k_sd exp(c_prev[t,d] - c[s,d])   (s < t)
+    o_intra  = M @ v + (r . u . k summed) v                 (diagonal)
+    S_out    = exp(c_last) . S_in + (k . exp(c_last - c))^T @ v
+
+The intra term uses the direct (C, C, dk) contraction -- exact and
+stable; the factored two-matmul form overflows for fast-decay channels
+(see tests/test_rwkv_numerics.py).  C defaults to 32 to bound the
+(C, C, dk) working set; §Perf evaluates the subchunked factored variant.
+
+The paper's technique does not apply to the O(1) recurrent state (no
+large arrays to page) -- see DESIGN.md §5 -- but the block-quantum
+discipline is used for the state *checkpoints* in training.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import AxTree, Params, dense_init, rmsnorm
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv6_mix(rng, cfg: ModelConfig) -> Tuple[Params, AxTree]:
+    d, dt = cfg.d_model, cfg.jdtype
+    s = cfg.ssm
+    r = jax.random.split(rng, 12)
+    p: Params = {
+        "mu_x": 0.5 * jnp.ones((d,), dt),
+        "mu": 0.5 * jnp.ones((5, d), dt),                   # r,k,v,w,g
+        "mix_w1": dense_init(r[0], d, 5 * s.mix_lora, dt, scale=0.01),
+        "mix_w2": 0.01 * dense_init(r[1], 5 * s.mix_lora, d, dt
+                                    ).reshape(5, s.mix_lora, d),
+        "wr": dense_init(r[2], d, d, dt),
+        "wk": dense_init(r[3], d, d, dt),
+        "wv": dense_init(r[4], d, d, dt),
+        "wg": dense_init(r[5], d, d, dt),
+        "wo": dense_init(r[6], d, d, dt),
+        "w0": -6.0 + 5.0 * jax.random.uniform(r[7], (d,), jnp.float32),
+        "decay_w1": dense_init(r[8], d, s.decay_lora, dt, scale=0.01),
+        "decay_w2": 0.01 * dense_init(r[9], s.decay_lora, d, dt),
+        "u": 0.5 * jax.random.normal(r[10], (d,), jnp.float32),
+        "ln_x": jnp.ones((d,), dt),                          # group norm
+    }
+    ax = AxTree({k: tuple(None for _ in v.shape) for k, v in p.items()})
+    for k in ("wr", "wk", "wv", "wg"):
+        ax[k] = ("embed", "heads")
+    ax["wo"] = ("heads", "embed")
+    return p, ax
+
+
+def _ddlerp(p: Params, x: jax.Array, xx: jax.Array):
+    """Data-dependent token-shift interpolation -> per-channel mixes."""
+    base = x + (xx - x) * p["mu_x"]
+    lora = jnp.tanh(base @ p["mix_w1"])                      # (B,S,5*lora)
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    off = jnp.einsum("bsfl,fld->bsfd", lora, p["mix_w2"])   # (B,S,5,d)
+    mix = p["mu"] + off
+    vals = x[..., None, :] + (xx - x)[..., None, :] * mix    # (B,S,5,d)
+    return tuple(vals[..., i, :] for i in range(5))
+
+
+def _decay(p: Params, xw: jax.Array) -> jax.Array:
+    """log w_t in (-inf, 0): w = exp(-exp(w0 + lora(x)))."""
+    lw = p["w0"] + (jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+                    ).astype(jnp.float32)
+    return -jnp.exp(lw)                                       # log-decay <= 0
+
+
+def _heads(x, H):
+    return x.reshape(*x.shape[:-1], H, -1)
+
+
+def rwkv6_mix_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
+                  prev_x: Optional[jax.Array] = None,
+                  state_in: Optional[jax.Array] = None):
+    """Full-sequence chunked time mixing.
+
+    x: (B, S, d).  Returns (y, (last_x, S_out)) so training can stream
+    and decode can continue.  state_in: (B, H, dk, dv).
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dk = d // H
+    C = min(cfg.ssm.chunk, S)
+    assert S % C == 0, (S, C)
+    xx = jnp.concatenate(
+        [prev_x[:, None] if prev_x is not None else jnp.zeros((B, 1, d), x.dtype),
+         x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = _heads(xr @ p["wr"], H).astype(jnp.float32)
+    k = _heads(xk @ p["wk"], H).astype(jnp.float32)
+    v = _heads(xv @ p["wv"], H).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = _heads(_decay(p, xw), H)                          # (B,S,H,dk)
+    u = p["u"].reshape(H, dk)
+
+    # chunk: (B, nc, C, H, dk) -> scan over nc
+    def chunkify(t):
+        return t.reshape(B, S // C, C, H, dk).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = map(chunkify, (r, k, v, logw))          # (nc,B,H,C,dk)
+
+    S0 = (state_in.astype(jnp.float32) if state_in is not None
+          else jnp.zeros((B, H, dk, dk), jnp.float32))
+
+    sub = cfg.ssm.subchunk if (cfg.ssm.subchunk and
+                               cfg.ssm.subchunk < C) else C
+
+    intra_dt = jnp.dtype(cfg.ssm.intra_dtype)
+
+    def tile(S_in, rb, kb, vb, wb, n):
+        """One (B,H,n,dk) tile: direct intra + inter via S_in."""
+        c = jnp.cumsum(wb, axis=2)                           # inclusive
+        cprev = c - wb                                       # exclusive
+        o_inter = jnp.einsum("bhtd,bhdv->bhtv", rb * jnp.exp(cprev), S_in)
+        # direct intra contraction (exact, stable); the (n,n,dk) decay
+        # tensor optionally in bf16 (halves the dominant traffic)
+        dmat = jnp.exp(jnp.clip(cprev[:, :, :, None, :] - c[:, :, None, :, :],
+                                -30.0, 0.0)).astype(intra_dt)  # (B,H,n,n,dk)
+        M = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rb.astype(intra_dt),
+                       kb.astype(intra_dt), dmat,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.tril(jnp.ones((n, n), bool), k=-1)
+        M = jnp.where(mask, M, 0.0)
+        o_intra = jnp.einsum("bhts,bhsv->bhtv", M, vb)
+        diag = jnp.sum(rb * u[None, :, None, :] * kb, axis=-1)  # (B,H,n)
+        o = o_inter + o_intra + diag[..., None] * vb
+        clast = c[:, :, -1:, :]                              # (B,H,1,dk)
+        S_out = (jnp.exp(clast[:, :, 0, :, None]) * S_in +
+                 jnp.einsum("bhtd,bhtv->bhdv", kb * jnp.exp(clast - c), vb))
+        return S_out, o
+
+    def body(S_in, xs):
+        rb, kb, vb, wb = xs                                  # (B,H,C,dk)
+        if sub == C:
+            return tile(S_in, rb, kb, vb, wb, C)
+        # unrolled subchunk tiles: the (n,n,dk) decay tensor shrinks by
+        # C/sub and cross-tile terms ride the state recursion with NO
+        # extra while-loop trips (python unroll)
+        S = S_in
+        outs = []
+        for j in range(C // sub):
+            sl = slice(j * sub, (j + 1) * sub)
+            S, o = tile(S, rb[:, :, sl], kb[:, :, sl], vb[:, :, sl],
+                        wb[:, :, sl], sub)
+            outs.append(o)
+        return S, jnp.concatenate(outs, axis=2)
+
+    # checkpoint the chunk body: backward recomputes the (C, C, dk)
+    # decay tensor per chunk instead of saving nc of them
+    S_fin, oc = jax.lax.scan(jax.checkpoint(body), S0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(B, S, d)
+    o = rmsnorm(o.astype(x.dtype), p["ln_x"], cfg.norm_eps) * g
+    y = o @ p["wo"]
+    return y, (x[:, -1], S_fin)
+
+
+def rwkv6_mix_step(p: Params, x: jax.Array, cfg: ModelConfig,
+                   prev_x: jax.Array, state: jax.Array):
+    """Single-token recurrence.  x, prev_x: (B, d); state: (B,H,dk,dk)."""
+    B, d = x.shape
+    H = cfg.num_heads
+    dk = d // H
+    xr, xk, xv, xw, xg = _ddlerp(p, x[:, None], prev_x[:, None])
+    r = _heads(xr[:, 0] @ p["wr"], H).astype(jnp.float32)    # (B,H,dk)
+    k = _heads(xk[:, 0] @ p["wk"], H).astype(jnp.float32)
+    v = _heads(xv[:, 0] @ p["wv"], H).astype(jnp.float32)
+    g = jax.nn.silu(xg[:, 0] @ p["wg"])
+    w = jnp.exp(_heads(_decay(p, xw[:, 0]), H))              # (B,H,dk)
+    u = p["u"].reshape(H, dk)
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v)
+    o = jnp.einsum("bhd,bhdv->bhv", r, state.astype(jnp.float32)
+                   + u[None, :, :, None] * kv)
+    state = w[..., None] * state.astype(jnp.float32) + kv
+    o = rmsnorm(o.reshape(B, d).astype(x.dtype), p["ln_x"], cfg.norm_eps) * g
+    return o @ p["wo"], (x, state)
+
+
+def rwkv6_mix_ref(p: Params, x: jax.Array, cfg: ModelConfig):
+    """Pure sequential oracle (scan over single steps) for tests."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dk = d // H
+
+    def body(carry, xt):
+        prev_x, state = carry
+        y, (px, st) = rwkv6_mix_step(p, xt, cfg, prev_x, state)
+        return (px, st), y
+
+    init = (jnp.zeros((B, d), x.dtype), jnp.zeros((B, H, dk, dk), jnp.float32))
+    _, ys = jax.lax.scan(body, init, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)
+
+
+# -- channel mixing (RWKV ffn) ---------------------------------------------
+def init_rwkv6_ffn(rng, cfg: ModelConfig) -> Tuple[Params, AxTree]:
+    d, dt = cfg.d_model, cfg.jdtype
+    r = jax.random.split(rng, 3)
+    p = {"mu_k": 0.5 * jnp.ones((d,), dt),
+         "mu_r": 0.5 * jnp.ones((d,), dt),
+         "wk": dense_init(r[0], d, cfg.d_ff, dt),
+         "wv": dense_init(r[1], cfg.d_ff, d, dt),
+         "wr": dense_init(r[2], d, d, dt)}
+    ax = AxTree(mu_k=(None,), mu_r=(None,), wk=("embed", "heads"),
+                wv=("heads", "embed"), wr=("embed", "embed"))
+    return p, ax
+
+
+def rwkv6_ffn(p: Params, x: jax.Array, xx: jax.Array):
+    """x: (..., d); xx: token-shifted x of the same shape."""
+    xk = x + (xx - x) * p["mu_k"]
+    xr = x + (xx - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])

@@ -1,0 +1,203 @@
+"""§Perf hillclimb driver: lower a cell VARIANT, compare roofline terms.
+
+Each variant is (name, cfg_transform, rules, lower kwargs); results go to
+perf_report.jsonl with the hypothesis text, so EXPERIMENTS.md §Perf is
+generated from measured artifacts, not prose.
+
+Run as:  PYTHONPATH=src python -m repro.perf --cell rwkv_train --variant all
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Callable, Dict, Optional
+
+from repro import roofline as RL
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+@dataclasses.dataclass
+class Variant:
+    cell: str                    # "arch/shape"
+    name: str
+    hypothesis: str
+    cfg_transform: Optional[Callable] = None
+    rules: Optional[Dict] = None
+    lower_kwargs: Optional[Dict] = None
+
+
+def _chunk(cfg, n, sub=0):
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(
+        cfg.ssm, chunk=n, subchunk=sub))
+
+
+def _intra_bf16(cfg):
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(
+        cfg.ssm, intra_dtype="bfloat16"))
+
+
+def _moe_ep(cfg):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, parallel_mode="ep"))
+
+
+def _kv_bt(n):
+    def t(cfg):
+        return dataclasses.replace(cfg, kv_block_tokens=n)
+    return t
+
+
+def _latent_tp(cfg):
+    return dataclasses.replace(cfg, mla_latent_tp=True)
+
+
+def _latent_tp_bt(n):
+    def t(cfg):
+        return dataclasses.replace(cfg, mla_latent_tp=True,
+                                   kv_block_tokens=n)
+    return t
+
+
+VARIANTS = [
+    # ---- Cell A: rwkv6_7b x train_4k (worst roofline fraction) ----
+    Variant("rwkv6_7b/train_4k", "baseline",
+            "paper-faithful baseline: chunked RWKV6, C=64 direct intra"),
+    Variant("rwkv6_7b/train_4k", "chunk16",
+            "H1: the direct (C,C,dk) decay tensor dominates HBM traffic "
+            "(~C*dk*4B per token per head); C 64->16 should cut the memory "
+            "term ~3-4x at the cost of 4x more (cheap) state carries",
+            cfg_transform=lambda c: _chunk(c, 16)),
+    Variant("rwkv6_7b/train_4k", "chunk8",
+            "H2: continue C->8; predicted further ~2x on the intra term, "
+            "diminishing as ddlerp/projection traffic starts to dominate",
+            cfg_transform=lambda c: _chunk(c, 8)),
+    Variant("rwkv6_7b/train_4k", "sub16",
+            "H3 (after H1/H2 REFUTED -- traffic scales 1/C, i.e. per-"
+            "while-iteration constants dominate, not the decay tensor): "
+            "keep C=64 outer trips but tile the body into UNROLLED "
+            "subchunks of 16 -- decay tensor shrinks 4x AND iteration "
+            "count stays put",
+            cfg_transform=lambda c: _chunk(c, 64, 16)),
+    Variant("rwkv6_7b/train_4k", "sub16_c256",
+            "H4: if per-iteration constants dominate, C=256 with sub=16 "
+            "cuts while trips 4x at unchanged tile cost",
+            cfg_transform=lambda c: _chunk(c, 256, 16)),
+    Variant("rwkv6_7b/train_4k", "intra_bf16",
+            "H5 (H3/H4 also refuted -- smaller tiles multiply fusion-"
+            "boundary materializations; the monolithic C=64 body is the "
+            "pure-JAX optimum; the true fix is a fused chunk kernel): "
+            "bf16 for the (C,C,dk) decay tensor and score operands, f32 "
+            "accumulation -- predicted ~1.8x on the dominant term",
+            cfg_transform=_intra_bf16),
+    # ---- Cell B: qwen3_moe x decode_32k (most collective-bound) ----
+    Variant("qwen3_moe_30b_a3b/decode_32k", "baseline",
+            "baseline: TP-in-expert MoE (d_ff sharded), kv pool replicated "
+            "over model (kvh=4 < 16)"),
+    Variant("qwen3_moe_30b_a3b/decode_32k", "attn_pinned",
+            "H2: HLO shows a 51.5GB f32 all-gather of the WHOLE pool "
+            "carry + 12.9GB/layer K gathers: GSPMD picked a replicated "
+            "layout for the ambiguous kvh=4<16 attention. Pin decode "
+            "attention to batch-only sharding (replicated compute is "
+            "~1ms); predicted: both gathers vanish, collective -> ~0",
+            ),
+    Variant("qwen3_moe_30b_a3b/decode_32k", "attn_pinned_xsys",
+            "H3: combine the pinned attention layout with xs->ys pool "
+            "threading (the pool-as-carry form copies the whole carry "
+            "per layer: measured 10.0s memory). Predicted: collective ~0 "
+            "(from H2) AND memory back under the 1.45s baseline since "
+            "the 0.67TB of f32 layout-gathers are gone too"),
+    Variant("qwen3_moe_30b_a3b/decode_32k", "qpin_bf16_final",
+            "H4 (landed default): pin only q/o (pinning k/v fights the "
+            "pool layout, H3 refuted at 10.4s mem); bf16 attention "
+            "operands with f32 accumulation. S-split flash-decoding over "
+            "'model' also tried and refuted (GSPMD involuntary full "
+            "remat of the gather)."),
+    Variant("qwen3_moe_30b_a3b/decode_32k", "moe_ep",
+            "H1: decode is collective-bound; TP MoE psums the full (B,d) "
+            "activation per layer over model=16. EP with all_to_all moves "
+            "only top_k routed token copies: predicted collective bytes "
+            "drop ~(2*top_k/TP) vs psum -> ~x4 less",
+            cfg_transform=_moe_ep),
+    # ---- Cell C: deepseek x decode_32k (paper-technique representative) --
+    Variant("deepseek_v2_lite_16b/decode_32k", "baseline",
+            "paper-faithful baseline: absorbed-MLA paged latent pool, "
+            "replicated over the model axis (latent has no head dim)"),
+    Variant("deepseek_v2_lite_16b/decode_32k", "latent_tp",
+            "H1 (beyond-paper): shard the latent pool over 'model' on the "
+            "kv_lora dim (rope stream separate); score/value contractions "
+            "become partial + tiny psums. Pool bytes/chip /16: memory term "
+            "predicted ~2.0s -> ~0.2s",
+            cfg_transform=_latent_tp),
+    Variant("deepseek_v2_lite_16b/decode_32k", "latent_tp_bt128",
+            "H2: with the pool sharded, per-block bookkeeping and partial-"
+            "block waste shrink with bigger blocks; bt 64->128",
+            cfg_transform=_latent_tp_bt(128)),
+]
+
+
+def run_variant(v: Variant, out_path: str):
+    mesh = make_production_mesh()
+    arch, shape = v.cell.split("/")
+    t0 = time.time()
+    row = {"cell": v.cell, "variant": v.name, "hypothesis": v.hypothesis}
+    try:
+        kw = dict(v.lower_kwargs or {})
+        lowered, mf, chips = lower_cell(
+            arch, shape, mesh, rules=v.rules,
+            cfg_transform=v.cfg_transform, **kw)
+        compiled = lowered.compile()
+        rl = RL.analyze(compiled, arch=arch, shape=shape, mesh_desc="16x16",
+                        chips=chips, model_flops=mf)
+        row.update(rl.row())
+        row["status"] = "ok"
+        row["t_total_s"] = round(time.time() - t0, 1)
+    except Exception as e:
+        row["status"] = "FAIL"
+        row["error"] = f"{type(e).__name__}: {e}"
+        row["trace"] = traceback.format_exc()[-1500:]
+    with open(out_path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--out", default="perf_report.jsonl")
+    args = ap.parse_args()
+    done = set()
+    if os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") == "ok":
+                done.add((r["cell"], r["variant"]))
+    for v in VARIANTS:
+        if args.cell != "all" and not v.cell.startswith(args.cell):
+            continue
+        if args.variant != "all" and v.name != args.variant:
+            continue
+        if (v.cell, v.name) in done:
+            continue
+        print(f"[perf] {v.cell} :: {v.name}", flush=True)
+        row = run_variant(v, args.out)
+        if row["status"] == "ok":
+            print(f"  t=({row['t_compute_s']:.3f}, {row['t_memory_s']:.3f}, "
+                  f"{row['t_collective_s']:.3f})s bn={row['bottleneck']} "
+                  f"frac={row['roofline_fraction']:.4f}", flush=True)
+        else:
+            print(f"  FAIL {row['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

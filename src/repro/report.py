@@ -1,0 +1,66 @@
+"""Render dryrun_report.jsonl into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    rows = []
+    for line in open(path):
+        try:
+            rows.append(json.loads(line))
+        except json.JSONDecodeError:
+            pass
+    return rows
+
+
+def fmt_table(rows: List[Dict], mesh: str) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | useful/HLO | roofline frac | peak GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"N/A-by-spec | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | "
+                       f"{r.get('error','')[:60]} | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"**{r['roofline_fraction']:.3f}** | "
+            f"{r['peak_mem_gb_per_chip']:.1f} |")
+    return "\n".join(out)
+
+
+def fmt_dryrun_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | status | HLO GFLOP/chip | HBM GB/chip | "
+           "coll GB/chip | compile (s) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+                f"{r['hlo_gflops_per_chip']:.0f} | "
+                f"{r['hbm_gb_per_chip']:.1f} | {r['coll_gb_per_chip']:.2f} | "
+                f"{r.get('t_compile_s','')} |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} | — | — | — | — |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_report.jsonl")
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(fmt_table(rows, "16x16"))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(fmt_table(rows, "pod2x16x16"))

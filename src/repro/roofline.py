@@ -1,0 +1,194 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program totals:
+with SPMD partitioning XLA reports the per-partition program, so we
+multiply by the partition count to get global, then divide by chips --
+i.e. the per-chip figure IS cost_analysis of the partitioned module).
+collective_bytes is not in cost_analysis: we parse the optimized HLO and
+sum operand bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (guidance constants from the grading protocol).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> byte count; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of collective ops in optimized HLO, by kind.
+
+    Output-shape accounting approximates wire bytes within 2x for every
+    collective kind (all-gather output = full gathered size; all-reduce
+    in-place size; all-to-all permuted size) and is uniform across
+    schedule variants, which is what the §Perf comparisons need.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match "<shape> <name>-start(...)" or "= <shape> all-reduce(...)"
+        m = re.match(r".*= ([^=]*?)\s*([a-z\-]+)(?:-start)?\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        if op in _COLLECTIVES:
+            out[op] += _shape_bytes(m.group(1))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    peak_memory_per_chip: float
+    model_flops: float           # 6*N*D (or 6*N_active*D)
+    coll_by_kind: Optional[Dict[str, float]] = None
+    xla_raw: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time (the score)."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        return t_useful / max(self.t_bound, 1e-30)
+
+    @property
+    def flops_utilization(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs -- remat/redundancy waste detector."""
+        return self.model_flops / max(self.flops_per_chip * self.chips, 1e-30)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops_per_chip": self.flops_per_chip / 1e9,
+            "hbm_gb_per_chip": self.bytes_per_chip / 1e9,
+            "coll_gb_per_chip": self.coll_bytes_per_chip / 1e9,
+            "peak_mem_gb_per_chip": self.peak_memory_per_chip / 1e9,
+            "model_gflops_global": self.model_flops / 1e9,
+            "useful_flops_ratio": self.flops_utilization,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_by_kind_gb": {k: v / 1e9 for k, v in
+                                (self.coll_by_kind or {}).items()},
+            "xla_raw": self.xla_raw or {},
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
+            model_flops: float) -> Roofline:
+    """Derive roofline terms from the compiled SPMD module.
+
+    Primary source: the trip-count-aware HLO cost model (repro.hlo_cost)
+    -- ``compiled.cost_analysis()`` counts while-loop bodies once, which
+    under-reports scanned models by ~num_layers (validated in
+    tests/test_hlo_cost.py).  The raw XLA numbers are kept in the row for
+    reference.
+    """
+    from repro import hlo_cost
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze_text(hlo)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes +
+                     mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    except Exception:
+        peak = 0.0
+    rl = Roofline(arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+                  flops_per_chip=cost.flops, bytes_per_chip=cost.bytes,
+                  coll_bytes_per_chip=cost.coll_total,
+                  peak_memory_per_chip=peak, model_flops=model_flops)
+    rl.coll_by_kind = {k: v for k, v in cost.coll.items() if v}
+    try:
+        xla_cost = compiled.cost_analysis()
+        if isinstance(xla_cost, list):
+            xla_cost = xla_cost[0]
+        rl.xla_raw = {"flops": float(xla_cost.get("flops", 0.0)),
+                      "bytes": float(xla_cost.get("bytes accessed", 0.0))}
+    except Exception:
+        rl.xla_raw = {}
+    return rl
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D for training; 2*N*D forward-only; decode: 2*N_active per token
+    (+ attention KV term folded into HLO accounting, not the model number)."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if shape.name.startswith("prefill"):
+            return 2.0 * n_active * B * S
+        return 6.0 * n_active * B * S
+    # decode: one token per sequence
+    return 2.0 * n_active * B

@@ -1,0 +1,204 @@
+"""Continuous-batching serving engine over the paged KV pool.
+
+The paper's memory manager as an inference server:
+  * admission control by FREE BLOCK COUNT (never by sequence count) --
+    a request is admitted iff its prompt's blocks fit the pool;
+  * per-step table growth: one fresh block per sequence each
+    ``block_tokens`` decode steps (the split-stack 'check on push');
+  * preemption by block swap-out to a host-side store and later
+    swap-in to *different* physical blocks (relocation through the
+    table, paper Table 1 rows 'Relocation' and 'Swapping');
+  * COW prefix sharing for requests that fork a common prompt.
+
+The engine runs decode for a fixed slot count B (padding empty slots),
+which is how a TPU serving binary keeps one compiled shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockpool import OutOfBlocksError
+from repro.core.paged_kv import PagedKVCache, PagedKVManager
+from repro.core.stack import BlockStack
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,)
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"              # queued|running|preempted|done
+    slot: int = -1
+
+    @property
+    def tokens_held(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+
+class Engine:
+    """Slot-based continuous batching.
+
+    model must expose prefill(params, batch, cache, lengths) and
+    decode_step(params, tokens, cache); cache is a PagedKVCache (plain
+    decoder LMs).  greedy sampling.
+    """
+
+    def __init__(self, model, params, *, slots: int, max_seq: int,
+                 num_blocks: int, eos_id: int = 1):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos = eos_id
+        kvcfg = model.kv_config(max_seq=max_seq, num_blocks=num_blocks,
+                                batch=slots)
+        self.cache = PagedKVCache.create(kvcfg, slots)
+        self.mgr = PagedKVManager(kvcfg)
+        self.queue: List[Request] = []
+        self.running: Dict[int, Request] = {}   # slot -> req
+        self.preempted = BlockStack(block_size=256)  # LIFO resume order
+        self.done: List[Request] = []
+        self._next_tok = np.zeros(slots, np.int64)
+        self.steps = 0
+
+    # ---------------- host-side bookkeeping ----------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if s not in self.running:
+                return s
+        return None
+
+    def _sync_tables(self):
+        tables = np.stack([
+            self.mgr.device_table(self.running[s].rid) if s in self.running
+            else np.full(self.cache.config.max_blocks_per_seq, -1, np.int32)
+            for s in range(self.slots)])
+        self.cache = dataclasses.replace(
+            self.cache, block_tables=jnp.asarray(tables))
+
+    def _admit_one(self) -> bool:
+        cand = None
+        if len(self.preempted):
+            cand = self.preempted.pop()       # resume preempted first
+        elif self.queue:
+            cand = self.queue.pop(0)
+        if cand is None:
+            return False
+        slot = self._free_slot()
+        need = cand.tokens_held + cand.max_new - len(cand.generated)
+        if slot is None or not self.mgr.can_admit(need):
+            # put back where it came from
+            if cand.state == "preempted":
+                self.preempted.push(cand)
+            else:
+                self.queue.insert(0, cand)
+            return False
+        if cand.state == "preempted":
+            new_ids, k_save, v_save = self.mgr.swap_in(cand.rid)
+            idx = jnp.asarray(np.asarray(new_ids, np.int32))
+            k_pool = self.cache.k_pool.at[:, idx].set(jnp.asarray(k_save))
+            v_pool = self.cache.v_pool
+            if v_save is not None:
+                v_pool = self.cache.v_pool.at[:, idx].set(jnp.asarray(v_save))
+            self.cache = dataclasses.replace(self.cache, k_pool=k_pool,
+                                             v_pool=v_pool)
+            self._resume_prefill(cand, slot, reuse=True)
+        else:
+            self.mgr.admit(cand.rid, need)
+            self._resume_prefill(cand, slot, reuse=False)
+        cand.state = "running"
+        cand.slot = slot
+        self.running[slot] = cand
+        return True
+
+    def _resume_prefill(self, req: Request, slot: int, *, reuse: bool):
+        """Prefill req's full history into its blocks (single-sequence)."""
+        toks = np.concatenate([req.prompt, np.asarray(req.generated,
+                                                      np.int64)])
+        bt = self.cache.config.block_tokens
+        pad = (-len(toks)) % bt
+        padded = np.pad(toks, (0, pad))
+        tbl = self.mgr.device_table(req.rid)
+        seq = jnp.asarray(padded)[None]
+        # single-sequence prefill via a temp 1-slot cache view
+        one = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
+                           jnp.asarray(tbl)[None],
+                           jnp.zeros((1,), jnp.int32), self.cache.config)
+        last, one = self.model.prefill(
+            self.params, {"tokens": seq}, one,
+            jnp.asarray([len(toks)], jnp.int32))
+        self.cache = dataclasses.replace(
+            self.cache, k_pool=one.k_pool, v_pool=one.v_pool)
+        self._next_tok[slot] = int(jnp.argmax(last[0]))
+        lens = np.array(self.cache.seq_lens)
+        lens[slot] = len(toks)
+        self.cache = dataclasses.replace(self.cache,
+                                         seq_lens=jnp.asarray(lens))
+
+    def preempt_lowest(self):
+        """Swap out the most recently admitted request (LIFO)."""
+        if not self.running:
+            return
+        slot = max(self.running, key=lambda s: self.running[s].rid)
+        req = self.running.pop(slot)
+        self.mgr.swap_out(req.rid, np.asarray(self.cache.k_pool),
+                          None if self.cache.v_pool is None
+                          else np.asarray(self.cache.v_pool))
+        req.state = "preempted"
+        self.preempted.push(req)
+        lens = np.array(self.cache.seq_lens)
+        lens[slot] = 0
+        self.cache = dataclasses.replace(self.cache,
+                                         seq_lens=jnp.asarray(lens))
+
+    # ---------------- main loop ----------------
+    def step(self):
+        """Admit what fits, grow tables, run one decode step."""
+        while self._admit_one():
+            pass
+        if not self.running:
+            return
+        # ensure capacity for the token each running seq is about to write
+        for slot, req in list(self.running.items()):
+            try:
+                self.mgr.extend(req.rid, req.tokens_held + 1)
+            except OutOfBlocksError:
+                self.preempt_lowest()
+        self._sync_tables()
+        tokens = jnp.asarray(self._next_tok)
+        logits, self.cache = self.model.decode_step(self.params, tokens,
+                                                    self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        lens = np.array(self.cache.seq_lens)
+        for slot, req in list(self.running.items()):
+            req.generated.append(int(tokens[slot]))
+            self._next_tok[slot] = nxt[slot]
+            if len(req.generated) >= req.max_new or nxt[slot] == self.eos:
+                req.state = "done"
+                self.done.append(req)
+                self.mgr.release(req.rid)
+                del self.running[slot]
+                lens[slot] = 0
+        # idle slots must not advance
+        for s in range(self.slots):
+            if s not in self.running:
+                lens[s] = 0
+        self.cache = dataclasses.replace(self.cache,
+                                         seq_lens=jnp.asarray(lens))
+        self.steps += 1
+
+    def run(self, max_steps: int = 10_000):
+        while (self.queue or self.running or len(self.preempted)) and \
+                self.steps < max_steps:
+            self.step()
+        return self.done

@@ -1,0 +1,126 @@
+"""Block-based checkpointing: fixed-size blocks + manifest.
+
+The paper's allocator discipline applied to checkpoints: every tensor is
+serialized into fixed-size blocks (default 4 MiB) named by content
+position, with a JSON manifest as the 'tree' (per-tensor block lists +
+shapes/dtypes).  Consequences, exactly the paper's claims:
+
+  * no contiguous file of model size is ever required (a 60 GB qwen3
+    checkpoint is 15k independent 4 MiB objects -- object stores and
+    parallel filesystems love this);
+  * **elastic restore**: a different mesh/device count just reads a
+    different block->shard mapping -- restore is a metadata remap, not a
+    repartition (tests/test_checkpoint.py restores 8-dev -> 4-dev);
+  * fault tolerance: write blocks + manifest-tmp, fsync, atomic rename;
+    a crashed writer never corrupts the previous checkpoint.  keep_last
+    garbage-collects old steps by deleting their block files.
+
+Layout:
+    <dir>/step_<k>/blocks/<tensor_idx>_<block_idx>.bin
+    <dir>/step_<k>/manifest.json          (atomic rename last)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+BLOCK_BYTES = 4 * 1024 * 1024
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep_last: int = 3,
+         block_bytes: int = BLOCK_BYTES) -> str:
+    """Serialize a pytree of arrays; returns the checkpoint path."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    blocks_dir = os.path.join(tmp_dir, "blocks")
+    os.makedirs(blocks_dir, exist_ok=True)
+
+    manifest: Dict[str, Any] = {"step": step, "block_bytes": block_bytes,
+                                "tensors": []}
+    for ti, (pth, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(leaf)
+        raw = arr.tobytes()
+        n_blocks = max(1, (len(raw) + block_bytes - 1) // block_bytes)
+        blocks = []
+        for bi in range(n_blocks):
+            chunk = raw[bi * block_bytes: (bi + 1) * block_bytes]
+            fname = f"{ti:05d}_{bi:05d}.bin"
+            with open(os.path.join(blocks_dir, fname), "wb") as f:
+                f.write(chunk)
+            blocks.append(fname)
+        manifest["tensors"].append({
+            "path": pth, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "nbytes": len(raw), "blocks": blocks})
+    mpath = os.path.join(tmp_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)        # atomic commit
+
+    _gc(ckpt_dir, keep_last)
+    return step_dir
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+    for d in os.listdir(ckpt_dir):      # orphaned tmp dirs from crashes
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, *,
+            shardings=None):
+    """Rebuild the pytree (optionally placing each tensor with a sharding
+    from a pytree of NamedShardings -- the elastic-restore path: the
+    target mesh may differ arbitrarily from the writer's)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {t["path"]: t for t in manifest["tensors"]}
+    paths, leaves, treedef = _flatten_with_paths(like_tree)
+    shard_leaves = (None if shardings is None
+                    else treedef.flatten_up_to(shardings))
+    out = []
+    for i, (pth, leaf) in enumerate(zip(paths, leaves)):
+        t = by_path[pth]
+        raw = b"".join(
+            open(os.path.join(step_dir, "blocks", b), "rb").read()
+            for b in t["blocks"])
+        arr = np.frombuffer(raw, dtype=np.dtype(t["dtype"])).reshape(
+            t["shape"]).copy()
+        if shard_leaves is not None and shard_leaves[i] is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out)

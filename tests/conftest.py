@@ -1,0 +1,13 @@
+import os
+
+# Tests run single-device (the dry-run alone forces 512 host devices).
+# Distributed tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

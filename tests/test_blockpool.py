@@ -1,0 +1,77 @@
+"""BlockAllocator / BlockPool invariants (property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.blockpool import (BlockAllocator, BlockPool, NULL_BLOCK,
+                                  OutOfBlocksError)
+
+
+@given(st.integers(1, 64))
+def test_alloc_free_roundtrip(n):
+    a = BlockAllocator(n)
+    blocks = a.alloc_many(n)
+    assert sorted(blocks) == list(range(n))
+    assert a.num_free == 0
+    with pytest.raises(OutOfBlocksError):
+        a.alloc()
+    a.free_many(blocks)
+    assert a.num_free == n
+
+
+@given(st.lists(st.sampled_from(["alloc", "free", "share"]), max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_allocator_state_machine(ops):
+    """No double allocation, refcounts never negative, free-list sound."""
+    a = BlockAllocator(16)
+    live = []
+    for op in ops:
+        if op == "alloc" and a.num_free:
+            b = a.alloc()
+            assert b not in [x for x, _ in live]
+            live.append((b, 1))
+        elif op == "free" and live:
+            b, rc = live.pop()
+            a.free(b)
+            if rc > 1:
+                live.append((b, rc - 1))
+        elif op == "share" and live:
+            b, rc = live.pop()
+            a.share(b)
+            live.append((b, rc + 1))
+        # invariant: used + free == total
+        assert a.num_used + a.num_free == 16
+        assert a.num_used == len(set(b for b, _ in live))
+
+
+def test_double_free_raises():
+    a = BlockAllocator(4)
+    b = a.alloc()
+    a.free(b)
+    with pytest.raises(ValueError):
+        a.free(b)
+
+
+def test_cow_fork():
+    a = BlockAllocator(4)
+    b = a.alloc()
+    a.share(b)
+    nb, copy = a.fork_for_write(b)
+    assert copy and nb != b
+    assert a.refcount(b) == 1 and a.refcount(nb) == 1
+    nb2, copy2 = a.fork_for_write(nb)
+    assert not copy2 and nb2 == nb
+
+
+def test_blockpool_rw(rng):
+    pool = BlockPool.create(8, (4, 4), jnp.float32)
+    payload = jnp.asarray(rng.randn(4, 4).astype(np.float32))
+    pool = pool.write(3, payload)
+    np.testing.assert_array_equal(np.asarray(pool.read(jnp.asarray(3))),
+                                  np.asarray(payload))
+    pool = pool.copy_block(3, 5)
+    np.testing.assert_array_equal(np.asarray(pool.data[5]),
+                                  np.asarray(payload))

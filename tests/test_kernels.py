@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("nblocks,leaf", [(4, 128), (16, 256), (7, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_tree_gather_sweep(nblocks, leaf, dtype, rng):
+    leaves = jnp.asarray(rng.randn(nblocks, leaf).astype(dtype))
+    table = jnp.asarray(rng.permutation(nblocks).astype(np.int32))
+    out = ops.tree_gather(leaves, table, interpret=True)
+    ref = ops.tree_gather_ref(leaves, table)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(ref, np.float32))
+
+
+@pytest.mark.parametrize("nblocks,leaf", [(4, 128), (9, 1024)])
+def test_tree_block_sum_sweep(nblocks, leaf, rng):
+    leaves = jnp.asarray(rng.randn(nblocks, leaf).astype(np.float32))
+    table = jnp.asarray(rng.permutation(nblocks)[: nblocks - 1].astype(np.int32))
+    out = ops.tree_block_sum(leaves, table, interpret=True)
+    ref = ops.tree_block_sum_ref(leaves, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("rows_per_block,width,n", [(8, 128, 17), (16, 64, 64)])
+def test_tree_gather_rows_sweep(rows_per_block, width, n, rng):
+    nb = 6
+    pool = jnp.asarray(rng.randn(nb, rows_per_block, width).astype(np.float32))
+    ltab = jnp.asarray(rng.permutation(nb).astype(np.int32))
+    rows = jnp.asarray(rng.randint(0, nb * rows_per_block, n).astype(np.int32))
+    out = ops.tree_gather_rows(pool, rows, ltab, rows_per_block,
+                               interpret=True)
+    ref = ops.tree_gather_rows_ref(pool, rows, ltab, rows_per_block)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,KVH,G,HD,BT,MB", [
+    (2, 1, 8, 64, 16, 4),      # MQA
+    (3, 2, 4, 128, 32, 3),     # GQA
+    (1, 4, 1, 64, 8, 8),       # MHA-ish
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, KVH, G, HD, BT, MB, dtype, rng):
+    NB = B * MB + 2
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(dtype))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(dtype))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(dtype))
+    tables = jnp.asarray(rng.permutation(NB)[: B * MB].reshape(B, MB)
+                         .astype(np.int32))
+    lens = jnp.asarray(rng.randint(1, MB * BT + 1, B).astype(np.int32))
+    out = ops.paged_attention(q, k_pool, v_pool, tables, lens,
+                              interpret=True)
+    ref = ops.paged_attention_ref(q, k_pool, v_pool, tables, lens)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("softcap,window", [(None, None), (30.0, None),
+                                            (None, 40), (50.0, 24)])
+def test_paged_attention_softcap_window(softcap, window, rng):
+    B, KVH, G, HD, BT, MB = 2, 2, 2, 64, 16, 5
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(np.float32))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(np.arange(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([61, 33], np.int32))
+    out = ops.paged_attention(q, k_pool, v_pool, tables, lens,
+                              softcap=softcap, window=window, interpret=True)
+    ref = ops.paged_attention_ref(q, k_pool, v_pool, tables, lens,
+                                  softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_mla_latent(rng):
+    """Absorbed-MLA mode: values are the first v_dim lanes of the latent."""
+    B, H, LAT, VD, BT, MB = 2, 8, 96, 64, 16, 4
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, 1, H, LAT).astype(np.float32))
+    c_pool = jnp.asarray(rng.randn(NB, BT, 1, LAT).astype(np.float32))
+    tables = jnp.asarray(rng.permutation(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([50, 17], np.int32))
+    out = ops.paged_attention(q, c_pool, c_pool, tables, lens, v_dim=VD,
+                              interpret=True)
+    ref = ops.paged_attention_ref(q, c_pool, c_pool, tables, lens, v_dim=VD)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_matches_model_decode_path(rng):
+    """Kernel contract == the model's reference decode attention
+    (_paged_ref + self-token merge)."""
+    from repro.models.attention import _merge_self, _paged_ref
+    B, KVH, G, HD, BT, MB = 2, 2, 3, 32, 8, 4
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(np.float32))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(np.arange(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([20, 9], np.int32))
+    out = ops.paged_attention(q, k_pool, v_pool, tables, lens,
+                              interpret=True)
+    o, l, m = _paged_ref(q, k_pool, v_pool, tables, lens, scale=HD ** -0.5,
+                         softcap=None, window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("nb,blk", [(10, (4, 8)), (6, (16,)), (12, (2, 4, 8))])
+def test_block_copy_plan(nb, blk, rng):
+    """Device-side compaction/swap-in: apply a (src, dst) copy plan."""
+    from repro.core.block_table import apply_compaction, compaction_plan
+    from repro.kernels.block_copy import block_copy
+    pool = jnp.asarray(rng.randn(nb, *blk).astype(np.float32))
+    live = sorted(rng.permutation(nb)[: nb // 2].tolist())
+    plan = compaction_plan(live)
+    if not plan:
+        return
+    src = jnp.asarray(np.array([s for s, _ in plan], np.int32))
+    dst = jnp.asarray(np.array([d for _, d in plan], np.int32))
+    out = block_copy(pool, src, dst, interpret=True)
+    ref = np.asarray(pool).copy()
+    for s, d in plan:
+        ref[d] = np.asarray(pool)[s]
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    # tables rewritten to the dense prefix address the same contents
+    tables = {0: list(live)}
+    apply_compaction(tables, plan)
+    for old, new in zip(live, tables[0]):
+        np.testing.assert_array_equal(ref[new], np.asarray(pool)[old])

@@ -1,0 +1,110 @@
+"""PagedKVCache semantics: append/prefill/gather, manager policies, swap."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.blockpool import OutOfBlocksError
+from repro.core.paged_kv import PagedKVCache, PagedKVConfig, PagedKVManager
+
+
+def make(B=3, S=32, layers=2, kvh=2, hd=4, bt=8):
+    cfg = PagedKVConfig(num_layers=layers, kv_heads=kvh, head_dim=hd,
+                        block_tokens=bt, num_blocks=B * S // bt + 4,
+                        max_blocks_per_seq=S // bt, dtype=jnp.float32)
+    cache = PagedKVCache.create(cfg, B)
+    mgr = PagedKVManager(cfg)
+    tables = []
+    for sid in range(B):
+        mgr.admit(sid, S)
+        tables.append(mgr.device_table(sid))
+    cache = dataclasses.replace(cache,
+                                block_tables=jnp.asarray(np.stack(tables)))
+    return cfg, cache, mgr
+
+
+def test_append_then_gather_equals_dense(rng):
+    cfg, cache, _ = make()
+    L, B, T = cfg.num_layers, 3, 20
+    ks = rng.randn(T, L, B, cfg.kv_heads, cfg.head_dim).astype(np.float32)
+    vs = rng.randn(T, L, B, cfg.kv_heads, cfg.head_dim).astype(np.float32)
+    for t in range(T):
+        cache = cache.append_token(jnp.asarray(ks[t]), jnp.asarray(vs[t]))
+    for l in range(L):
+        k, v = cache.gather_layer(cache.k_pool[l], cache.v_pool[l])
+        np.testing.assert_allclose(np.asarray(k)[:, :T],
+                                   ks[:, l].transpose(1, 0, 2, 3), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v)[:, :T],
+                                   vs[:, l].transpose(1, 0, 2, 3), rtol=1e-6)
+
+
+def test_prefill_equals_appends(rng):
+    cfg, cache1, _ = make()
+    _, cache2, _ = make()
+    L, B, T = cfg.num_layers, 3, 16   # block aligned
+    k = rng.randn(L, B, T, cfg.kv_heads, cfg.head_dim).astype(np.float32)
+    v = rng.randn(L, B, T, cfg.kv_heads, cfg.head_dim).astype(np.float32)
+    cache1 = cache1.write_prefill(jnp.asarray(k), jnp.asarray(v),
+                                  jnp.full((B,), T, jnp.int32))
+    for t in range(T):
+        cache2 = cache2.append_token(jnp.asarray(k[:, :, t]),
+                                     jnp.asarray(v[:, :, t]))
+    np.testing.assert_allclose(np.asarray(cache1.k_pool),
+                               np.asarray(cache2.k_pool), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cache1.seq_lens),
+                                  np.asarray(cache2.seq_lens))
+
+
+def test_manager_admission_by_blocks():
+    cfg = PagedKVConfig(num_layers=1, kv_heads=1, head_dim=4,
+                        block_tokens=8, num_blocks=4, max_blocks_per_seq=4)
+    mgr = PagedKVManager(cfg)
+    assert mgr.can_admit(32)           # exactly 4 blocks
+    mgr.admit(0, 24)                   # 3 blocks
+    assert mgr.can_admit(8) and not mgr.can_admit(16)
+    with pytest.raises(OutOfBlocksError):
+        mgr.admit(1, 17)               # needs 3 blocks, 1 free
+    mgr.release(0)
+    assert mgr.can_admit(32)
+
+
+def test_swap_out_in_relocates(rng):
+    """Swap-in may land on different physical blocks; tables absorb it."""
+    cfg, cache, mgr = make(B=2, S=16)
+    k_np = rng.randn(*cache.k_pool.shape).astype(np.float32)
+    cache = dataclasses.replace(cache, k_pool=jnp.asarray(k_np))
+    blocks_before = list(mgr.tables[0])
+    mgr.swap_out(0, np.asarray(cache.k_pool), np.asarray(cache.v_pool))
+    assert 0 not in mgr.tables
+    # occupy some freed blocks so swap-in must relocate
+    mgr.admit(99, 8)
+    new_ids, k_save, v_save = mgr.swap_in(0)
+    assert new_ids != blocks_before
+    np.testing.assert_array_equal(
+        k_save, k_np[:, np.asarray(blocks_before)])
+
+
+def test_cow_fork_shares_blocks():
+    cfg, cache, mgr = make(B=2, S=32)
+    used_before = mgr.allocator.num_used
+    mgr.fork(0, 7, shared_tokens=16)   # 2 full blocks shared
+    assert mgr.allocator.num_used == used_before  # no new blocks
+    assert mgr.tables[7] == mgr.tables[0][:2]
+    mgr.release(7)                      # refcount drop, parent intact
+    assert all(mgr.allocator.is_allocated(b) for b in mgr.tables[0])
+
+
+def test_dp_grouped_semantics(rng):
+    """dp_groups>1 with group-local ids == dp_groups=1 with global ids."""
+    from repro.models.attention import _grouped_gather
+    B, MB, NB, BT, K, H = 4, 2, 8, 4, 2, 3
+    pool = jnp.asarray(rng.randn(NB, BT, K, H).astype(np.float32))
+    # group-local tables: groups of 2 sequences, each group owns NB/2=4
+    tbl_local = jnp.asarray(rng.randint(0, 4, (B, MB)).astype(np.int32))
+    tbl_global = np.asarray(tbl_local).copy()
+    tbl_global[2:] += 4
+    out_dp = _grouped_gather(pool, tbl_local, 2)
+    out_ref = pool[jnp.asarray(tbl_global)]
+    np.testing.assert_array_equal(np.asarray(out_dp), np.asarray(out_ref))

@@ -1,0 +1,79 @@
+"""BlockStack (split-stack analogue) + block-table utilities."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blockpool import BlockAllocator
+from repro.core.stack import BlockStack, DeviceBlockStack
+from repro.core import block_table as BT
+
+
+@given(st.lists(st.sampled_from(["push", "pop"]), max_size=300),
+       st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_blockstack_matches_list(ops, bs):
+    s = BlockStack(block_size=bs)
+    ref = []
+    n = 0
+    for op in ops:
+        if op == "push":
+            s.push(n)
+            ref.append(n)
+            n += 1
+        elif ref:
+            assert s.pop() == ref.pop()
+        assert len(s) == len(ref)
+        if ref:
+            assert s.peek() == ref[-1]
+    # block count tracks occupancy (never more than 1 spare block)
+    assert s.num_blocks <= len(ref) // bs + 2
+
+
+def test_blockstack_with_shared_allocator():
+    alloc = BlockAllocator(8)
+    s1 = BlockStack(block_size=2, allocator=alloc)
+    s2 = BlockStack(block_size=2, allocator=alloc)
+    for i in range(6):
+        s1.push(i)
+        s2.push(i)
+    assert alloc.num_used == 6
+    for _ in range(6):
+        s1.pop()
+    assert alloc.num_used <= 4
+
+
+def test_device_block_stack():
+    import jax.numpy as jnp
+    s = DeviceBlockStack.full_of(jnp.arange(5))
+    v, s = s.pop()
+    assert int(v) == 4
+    s = s.push(jnp.asarray(9))
+    v, s = s.pop()
+    assert int(v) == 9
+
+
+def test_compaction_plan_minimal():
+    live = [0, 5, 2, 9, 1]
+    plan = BT.compaction_plan(live)
+    # only blocks outside the dense prefix move
+    assert sorted(src for src, _ in plan) == [5, 9]
+    assert sorted(dst for _, dst in plan) == [3, 4]
+    tables = {0: [0, 5], 1: [2, 9, 1]}
+    BT.apply_compaction(tables, plan)
+    used = sorted(b for t in tables.values() for b in t)
+    assert used == [0, 1, 2, 3, 4]
+
+
+def test_deep_table_resolution():
+    alloc = BlockAllocator(32)
+    data_blocks = alloc.alloc_many(20)
+    root, tb_ids = BT.deep_table(data_blocks, ids_per_block=8,
+                                 allocator=alloc)
+    storage = np.full((32, 8), -1, np.int32)
+    for i, tb in enumerate(tb_ids):
+        chunk = data_blocks[i * 8:(i + 1) * 8]
+        storage[tb, : len(chunk)] = chunk
+    logical = np.arange(20)
+    resolved = BT.resolve_deep(root, storage, logical, 8)
+    np.testing.assert_array_equal(resolved, np.asarray(data_blocks))

@@ -1,0 +1,88 @@
+"""TreeArray (arrays-as-trees) invariants (property-based)."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blockpool import BlockAllocator
+from repro.core.treearray import TreeArray, tree_depth_for
+
+
+@given(st.integers(1, 2000), st.sampled_from([4, 8, 16, 64]),
+       st.sampled_from([2, 4, 8]), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_any_shape(n, leaf, fanout, seed):
+    """to_dense(from_dense(x)) == x for all sizes/geometries/placements."""
+    x = np.arange(n, dtype=np.float32)
+    t = TreeArray.from_dense(x, leaf_size=leaf, fanout=fanout,
+                             shuffle_seed=seed)
+    assert t.depth == tree_depth_for(n, leaf, fanout)
+    np.testing.assert_array_equal(np.asarray(t.to_dense()), x)
+
+
+@given(st.integers(1, 500), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_naive_get_matches_dense(n, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    t = TreeArray.from_dense(x, leaf_size=8, fanout=4, shuffle_seed=seed)
+    idx = rng.randint(0, n, size=min(64, n))
+    np.testing.assert_array_equal(
+        np.asarray(t.get_naive(jnp.asarray(idx))), x[idx])
+
+
+@given(st.integers(1, 300), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_iterator_sum_equals_naive_sum(n, seed):
+    """The paper's core equivalence: iterator and naive disciplines
+    compute the same result."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    t = TreeArray.from_dense(x, leaf_size=8, fanout=4, shuffle_seed=seed)
+    s_iter = float(t.scan_sum_iter())
+    s_naive = float(t.scan_sum_naive())
+    np.testing.assert_allclose(s_iter, s_naive, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(s_iter, x.sum(), rtol=1e-4, atol=1e-3)
+
+
+def test_gups_scatter_add(rng):
+    n = 300
+    x = rng.randn(n).astype(np.float32)
+    t = TreeArray.from_dense(x, leaf_size=16, fanout=4, shuffle_seed=1)
+    idx = rng.randint(0, n, size=128)
+    upd = rng.randn(128).astype(np.float32)
+    t2 = t.add(jnp.asarray(idx), jnp.asarray(upd))
+    ref = x.copy()
+    np.add.at(ref, idx, upd)
+    np.testing.assert_allclose(np.asarray(t2.to_dense()), ref, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_shared_allocator_tenants():
+    """Many trees share one arena without interference."""
+    alloc = BlockAllocator(64)
+    xs = [np.arange(i * 13 + 1, dtype=np.float32) for i in range(5)]
+    ts = [TreeArray.from_dense(x, leaf_size=8, fanout=4, allocator=alloc)
+          for x in xs]
+    for x, t in zip(xs, ts):
+        np.testing.assert_array_equal(np.asarray(t.to_dense()), x)
+
+
+def test_set_updates_single_element(rng):
+    x = rng.randn(100).astype(np.float32)
+    t = TreeArray.from_dense(x, leaf_size=8, fanout=4, shuffle_seed=2)
+    t = t.set(jnp.asarray(42), jnp.asarray(7.0))
+    y = np.asarray(t.to_dense())
+    assert y[42] == 7.0
+    mask = np.arange(100) != 42
+    np.testing.assert_array_equal(y[mask], x[mask])
+
+
+def test_overhead_bytes_small():
+    """Paper footnote 1: indirection overhead is tiny vs data."""
+    n = 1 << 16
+    t = TreeArray.from_dense(np.zeros(n, np.float32), leaf_size=1024,
+                             fanout=256)
+    assert t.overhead_bytes < 0.02 * n * 4
