@@ -1,0 +1,166 @@
+"""Cost-model validation: predicted vs analytically-known bytes on the
+paper's two indirection primitives (paged-KV access, tree gather).
+
+For each workload we compile the pure-jnp reference (the thing the
+dry-run pipeline actually lowers), run ``repro.cost`` over the optimized
+HLO, and compare the predicted byte bill against the analytic ground
+truth (bytes the operation must move given its shapes).  XLA's own
+``cost_analysis()`` "bytes accessed" is recorded alongside -- it is the
+number the subsystem replaces (full-operand billing, loop bodies counted
+once).
+
+Emits CSV rows like every other bench AND writes ``BENCH_cost_model.json``
+(consumed by run.py / CI) with per-case predicted / analytic / xla bytes
+and the predicted:analytic ratio.  A case FAILS validation when the
+ratio leaves [0.5, 4.0] -- i.e. the instrument drifts by more than the
+fusion-materialization slack it is allowed.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import cost
+from repro.kernels import ref
+
+OUT_JSON = "BENCH_cost_model.json"
+RATIO_LO, RATIO_HI = 0.5, 4.0
+
+
+def _time_donated(jfn, specs, iters: int = 10, warmup: int = 3) -> float:
+    """Median us/call with fresh (donatable) args created outside the
+    timed region each call -- a donated program invalidates its inputs,
+    so the plain time_fn re-use pattern would die or silently re-copy."""
+    import time as _time
+
+    def mk():
+        return [jnp.zeros(s.shape, s.dtype) for s in specs]
+
+    for _ in range(warmup):
+        out = jfn(*mk())
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        args = mk()
+        jax.block_until_ready(args)
+        t0 = _time.perf_counter()
+        out = jfn(*args)
+        jax.block_until_ready(out)
+        times.append(_time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _case(name: str, fn, analytic_bytes: float, *specs,
+          donate: tuple = ()) -> Dict:
+    jfn = jax.jit(fn, donate_argnums=donate)
+    compiled = jfn.lower(*specs).compile()
+    predicted = cost.analyze_compiled(compiled)
+    xla_raw = cost.xla_cost_analysis(compiled)
+    # time the SAME donated program the byte bill was derived from
+    if donate:
+        us = _time_donated(jfn, specs)
+    else:
+        args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+        us = time_fn(jfn, *args)
+    ratio = predicted.bytes / max(analytic_bytes, 1.0)
+    row = {
+        "name": name,
+        "predicted_bytes": predicted.bytes,
+        "analytic_bytes": analytic_bytes,
+        "xla_bytes_accessed": float(xla_raw.get("bytes accessed", 0.0)),
+        "ratio_predicted_to_analytic": ratio,
+        "by_op": {k: v for k, v in sorted(predicted.by_op.items(),
+                                          key=lambda kv: -kv[1])},
+        "us_per_call": us,
+        "ok": RATIO_LO <= ratio <= RATIO_HI,
+    }
+    emit(f"cost_model_{name}", us,
+         f"pred={predicted.bytes:.0f},analytic={analytic_bytes:.0f},"
+         f"ratio={ratio:.2f},ok={row['ok']}")
+    return row
+
+
+def run() -> None:
+    rows: List[Dict] = []
+
+    # ---- tree gather: pool indirection (paper Table 2 discipline) ----
+    NB, LEAF = 512, 8192          # 16 MB pool of 32 KB blocks
+    NL = 64                       # gather 64 logical blocks (2 MB)
+    touched = NL * LEAF * 4
+    rows.append(_case(
+        "tree_gather",
+        ref.tree_gather_ref,
+        # read gathered leaves + write result + read table
+        2 * touched + NL * 4,
+        jax.ShapeDtypeStruct((NB, LEAF), jnp.float32),
+        jax.ShapeDtypeStruct((NL,), jnp.int32)))
+
+    # ---- tree gather rows: paged embedding lookup ----
+    RPB, W, NROW = 64, 256, 128
+    rows.append(_case(
+        "tree_gather_rows",
+        lambda pool, ids, tbl: ref.tree_gather_rows_ref(pool, ids, tbl, RPB),
+        2 * NROW * W * 4 + NROW * 4 + NROW * 4,
+        jax.ShapeDtypeStruct((NB // 8, RPB, W), jnp.float32),
+        jax.ShapeDtypeStruct((NROW,), jnp.int32),
+        jax.ShapeDtypeStruct((NB // 8,), jnp.int32)))
+
+    # ---- paged KV decode read: block-table gather + attention-sized
+    # reduce (the serving-path working set) ----
+    B, H, D, BT, S = 8, 4, 128, 16, 512
+    MB = S // BT
+    NBLK = 4 * B * MB             # pool 4x the live working set
+
+    def paged_read(pool, tbl):
+        pages = pool[jnp.maximum(tbl, 0)]          # (B, MB, BT, H, D)
+        return pages.sum(axis=(1, 2))
+
+    gathered = B * MB * BT * H * D * 4
+    rows.append(_case(
+        "paged_kv_read",
+        paged_read,
+        # gather read + materialized write + reduce re-read + output
+        3 * gathered + B * H * D * 4,
+        jax.ShapeDtypeStruct((NBLK, BT, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, MB), jnp.int32)))
+
+    # ---- paged KV token write: the in-place block update whose
+    # overcounting (full-pool billing) this subsystem exists to fix ----
+    def paged_write(pool, blk, off, kv):
+        flat = pool.reshape(NBLK * BT, H, D)
+        flat = flat.at[blk * BT + off].set(kv)
+        return flat.reshape(NBLK, BT, H, D)
+
+    token = B * H * D * 4
+    rows.append(_case(
+        "paged_kv_token_write",
+        paged_write,
+        2 * token,                 # read token + write slice, NOT pool
+        jax.ShapeDtypeStruct((NBLK, BT, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        donate=(0,)))
+
+    report = {
+        "bench": "cost_model",
+        "cases": rows,
+        "all_ok": all(r["ok"] for r in rows),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("cost_model_validation", 0.0,
+         f"all_ok={report['all_ok']},json={OUT_JSON}")
+    if not report["all_ok"]:
+        bad = [r["name"] for r in rows if not r["ok"]]
+        raise AssertionError(f"cost model drifted on: {bad}")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,7 @@ import argparse
 import sys
 import traceback
 
-MODULES = ["tree_scan", "gups", "stack", "end2end"]
+MODULES = ["tree_scan", "gups", "stack", "end2end", "cost_model"]
 
 
 def main() -> None:

@@ -1,0 +1,85 @@
+"""Version-portability layer for jax APIs that moved between releases.
+
+The repo targets the ``shard_map`` API as it exists in jax >= 0.5
+(``jax.shard_map`` with ``check_vma=`` and partial-manual ``axis_names=``).
+On jax 0.4.x the implementation lives in ``jax.experimental.shard_map``
+and spells those knobs ``check_rep=`` and ``auto=`` (the complement set:
+axes NOT listed are manual).  Every in-repo caller imports ``shard_map``
+from here so the translation happens in exactly one place:
+
+    from repro.compat import shard_map
+
+Resolution order:
+  1. ``jax.shard_map``                       (jax >= 0.5: passthrough)
+  2. ``jax.experimental.shard_map.shard_map`` (jax 0.4.x: kwargs mapped)
+
+``check_vma``/``check_rep`` are the same switch (the replication-
+invariance checker was renamed for "varying mesh axes"); ``axis_names``
+lists the axes the body is *manual* over, while 0.4.x ``auto`` lists the
+axes left to GSPMD -- we convert one into the other using the mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+
+__all__ = ["shard_map", "JAX_HAS_NATIVE_SHARD_MAP"]
+
+_native = getattr(jax, "shard_map", None)
+JAX_HAS_NATIVE_SHARD_MAP = _native is not None
+
+if not JAX_HAS_NATIVE_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _experimental
+    _EXP_PARAMS = frozenset(inspect.signature(_experimental).parameters)
+
+
+def shard_map(f: Optional[Callable] = None, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None,
+              axis_names: Optional[Any] = None,
+              auto: Optional[Any] = None) -> Callable:
+    """jax.shard_map with one spelling across jax versions.
+
+    Accepts both the new-API kwargs (``check_vma``, ``axis_names``) and
+    the 0.4.x kwargs (``check_rep``, ``auto``); whichever pair the
+    installed jax does not understand is translated.  Usable directly or
+    as ``functools.partial(shard_map, mesh=..., ...)`` exactly like the
+    real API.
+    """
+    if f is None:
+        return functools.partial(
+            shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, check_rep=check_rep,
+            axis_names=axis_names, auto=auto)
+
+    check = check_vma if check_vma is not None else check_rep
+
+    if JAX_HAS_NATIVE_SHARD_MAP:
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if check is not None:
+            kw["check_vma"] = check
+        if axis_names is None and auto is not None:
+            axis_names = frozenset(mesh.axis_names) - frozenset(auto)
+        if axis_names is not None:
+            kw["axis_names"] = frozenset(axis_names)
+        return _native(f, **kw)
+
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check is not None:
+        kw["check_rep"] = check
+    if auto is None and axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if auto:
+        if "auto" not in _EXP_PARAMS:
+            # silently dropping 'auto' would run the body manual over
+            # ALL axes -- different semantics; fail at the boundary
+            raise NotImplementedError(
+                "partial-manual shard_map (auto/axis_names) requested "
+                "but this jax's experimental shard_map has no 'auto' "
+                "parameter")
+        kw["auto"] = frozenset(auto)
+    return _experimental(f, **kw)

@@ -1,0 +1,187 @@
+"""Text-level HLO parsing: shapes, instructions, computations, trip counts.
+
+This is the lexical layer of the cost subsystem -- no accounting policy
+lives here.  It turns ``Compiled.as_text()`` into:
+
+  * ``Computation``: named instruction list with the ROOT marked,
+  * per-computation s32 literal constants (the legacy trip-count source),
+  * ``known_trip_count`` backend configs on ``while`` instructions (the
+    preferred trip-count source -- XLA writes it after loop analysis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_CONST_RE = re.compile(
+    r"\s*(?:ROOT\s+)?%([\w\.\-]+) = s32\[\] constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+
+ENTRY = "__entry__"
+
+
+def shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    """All 'dtype[d0,d1]' tokens in a (possibly tuple) shape string."""
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total byte size of a shape string (tuples summed)."""
+    total = 0
+    for dt, dims in shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str          # result shape string (may be a tuple)
+    opcode: str
+    operands: List[str]
+    args: str           # raw text inside the operand parens
+    attrs: str          # everything after the operand parens
+    is_root: bool = False
+
+    def param_index(self) -> Optional[int]:
+        """For ``parameter(N)`` instructions, N."""
+        if self.opcode != "parameter":
+            return None
+        m = re.match(r"\s*(\d+)", self.args)
+        return int(m.group(1)) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_entry: bool = False
+
+    @property
+    def root(self) -> Optional[Instr]:
+        for ins in self.instrs:
+            if ins.is_root:
+                return ins
+        return self.instrs[-1] if self.instrs else None
+
+    def symtab(self) -> Dict[str, str]:
+        return {i.name: i.shape for i in self.instrs}
+
+    def by_name(self) -> Dict[str, Instr]:
+        return {i.name: i for i in self.instrs}
+
+
+def parse_instruction(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    is_root = bool(m.group(1))
+    name, rest = m.group(2), m.group(3).strip()
+    # rest = "<shape> <opcode>(<args>), attrs..."; shape may be a tuple
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        shape = rest[: i + 1]
+        rest2 = rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        rest2 = rest[sp + 1:].strip()
+    pm = re.match(r"([\w\-]+)\((.*)$", rest2, re.DOTALL)
+    if not pm:
+        return None
+    opcode = pm.group(1)
+    tail = pm.group(2)
+    depth = 1
+    for i, ch in enumerate(tail):
+        depth += ch == "("
+        depth -= ch == ")"
+        if depth == 0:
+            break
+    args = tail[:i]
+    attrs = tail[i + 1:]
+    operands = re.findall(r"%([\w\.\-]+)", args)
+    return Instr(name, shape, opcode, operands, args, attrs, is_root)
+
+
+@dataclasses.dataclass
+class Module:
+    """Parsed HLO module: computations + trip-count evidence."""
+    comps: Dict[str, Computation]
+    consts: Dict[Tuple[str, str], int]    # (computation, instr) -> value
+
+    def entry(self) -> Optional[Computation]:
+        if ENTRY in self.comps:
+            return self.comps[ENTRY]
+        if not self.comps:
+            return None
+        return max(self.comps.values(), key=lambda c: len(c.instrs))
+
+    def max_s32_const(self, comp_name: str) -> Optional[int]:
+        vals = [v for (c, _), v in self.consts.items() if c == comp_name]
+        return max(vals) if vals else None
+
+    def trip_count(self, while_ins: Instr) -> int:
+        """Trip count of a ``while``: prefer XLA's ``known_trip_count``
+        backend config; fall back to the largest s32 literal in the
+        condition computation (a scan compares the induction variable
+        against ``constant(N)``); default 1."""
+        m = _TRIP_RE.search(while_ins.attrs)
+        if m:
+            return int(m.group(1))
+        cm = re.search(r"condition=%?([\w\.\-]+)", while_ins.attrs)
+        if cm:
+            v = self.max_s32_const(cm.group(1))
+            if v is not None:
+                return v
+        return 1
+
+
+def parse_module(hlo_text: str) -> Module:
+    comps: Dict[str, Computation] = {}
+    consts: Dict[Tuple[str, str], int] = {}
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            if cur.is_entry:
+                comps[ENTRY] = cur
+            cur = None
+            continue
+        ins = parse_instruction(line)
+        if ins:
+            cur.instrs.append(ins)
+            cm = _CONST_RE.match(line)
+            if cm:
+                consts[(cur.name, cm.group(1))] = int(cm.group(2))
+    return Module(comps, consts)

@@ -1,0 +1,41 @@
+"""Normalization of jax's ``Compiled.cost_analysis()`` across versions.
+
+jax has returned, depending on version: a dict, a list with one dict per
+partition (possibly empty), or raised for backends without the analysis.
+Every in-repo consumer goes through :func:`xla_cost_analysis` and gets a
+plain ``dict`` (empty when unavailable) -- never a list, never an
+exception.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def xla_cost_analysis(compiled: Any) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as a flat dict, ``{}`` on any failure.
+
+    Handles the 0.4.x list-of-dicts shape (the
+    ``TypeError: list indices must be integers`` trap) and the >=0.5
+    plain-dict shape uniformly.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    try:
+        return dict(ca)
+    except Exception:
+        return {}
+
+
+def xla_flops(compiled: Any) -> float:
+    return float(xla_cost_analysis(compiled).get("flops", 0.0))
+
+
+def xla_bytes_accessed(compiled: Any) -> float:
+    return float(xla_cost_analysis(compiled).get("bytes accessed", 0.0))

@@ -1,322 +1,18 @@
-"""Trip-count-aware cost model over optimized HLO text.
+"""Backward-compatibility shim -- the cost model moved to ``repro.cost``.
 
-``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
-built on ``lax.scan`` (every serious JAX model) under-reports FLOPs by
-~the layer count, and nested chunk scans compound it.  This module
-re-derives the three roofline quantities from the optimized HLO with
-loop trip counts multiplied through:
+The trip-count-aware HLO cost model grew into an instruction-level
+memory-traffic accounting subsystem (normalized parsing, per-op byte
+attribution with in-place/slice aliasing rules, ``Cost.by_op``
+category breakdown, version-normalized ``cost_analysis()``).  See
+``src/repro/cost/README.md``.  Existing imports keep working:
 
-  * flops            -- 2 * prod(result_dims) * prod(contracting_dims)
-                        for every ``dot`` (matmuls dominate; elementwise
-                        work is deliberately excluded, as in MFU math)
-  * bytes            -- per instruction: result + operand bytes
-                        (fusion internals excluded -- they don't touch
-                        HBM), i.e. XLA's "bytes accessed" convention
-  * collective bytes -- output bytes of all-gather / all-reduce /
-                        reduce-scatter / all-to-all / collective-permute,
-                        by kind
-
-Trip counts: a scan's ``while`` condition compares the induction
-variable against a literal ``constant(N)``; we take the largest s32
-constant in the condition computation.
-
-All quantities are per-partition (the dry-run compiles the SPMD
-partitioned module), which is exactly the per-chip roofline input.
+    from repro import hlo_cost
+    hlo_cost.analyze_text(...)  # same API, corrected accounting
 """
 
 from __future__ import annotations
 
-import dataclasses
-import re
-from typing import Dict, List, Optional, Tuple
-
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-    "token": 0, "opaque": 0,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
-
-COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
-                  "all-to-all", "collective-permute")
-
-
-def shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
-    """All 'dtype[d0,d1]' tokens in a (possibly tuple) shape string."""
-    out = []
-    for m in _SHAPE_RE.finditer(shape_str):
-        dims = [int(d) for d in m.group(2).split(",") if d]
-        out.append((m.group(1), dims))
-    return out
-
-
-def shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in shape_dims(shape_str):
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * _DTYPE_BYTES.get(dt, 4)
-    return total
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    shape: str        # result shape string (may be a tuple)
-    opcode: str
-    operands: List[str]
-    attrs: str
-
-
-def _parse_instr(line: str) -> Optional[Instr]:
-    m = _INSTR_RE.match(line)
-    if not m:
-        return None
-    name, rest = m.group(1), m.group(2)
-    # rest = "<shape> <opcode>(<args>), attrs..."  shape may be a tuple
-    rest = rest.strip()
-    if rest.startswith("("):
-        depth = 0
-        for i, ch in enumerate(rest):
-            depth += ch == "("
-            depth -= ch == ")"
-            if depth == 0:
-                break
-        shape = rest[: i + 1]
-        rest2 = rest[i + 1:].strip()
-    else:
-        sp = rest.find(" ")
-        if sp < 0:
-            return None
-        shape = rest[:sp]
-        rest2 = rest[sp + 1:].strip()
-    pm = re.match(r"([\w\-]+)\((.*)$", rest2, re.DOTALL)
-    if not pm:
-        return None
-    opcode = pm.group(1)
-    tail = pm.group(2)
-    depth = 1
-    for i, ch in enumerate(tail):
-        depth += ch == "("
-        depth -= ch == ")"
-        if depth == 0:
-            break
-    args = tail[:i]
-    attrs = tail[i + 1:]
-    operands = re.findall(r"%([\w\.\-]+)", args)
-    return Instr(name, shape, opcode, operands, attrs)
-
-
-def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
-    comps: Dict[str, List[Instr]] = {}
-    cur: Optional[str] = None
-    body: List[Instr] = []
-    for line in hlo.splitlines():
-        if cur is None:
-            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
-            if m:
-                cur = m.group(1)
-                body = []
-                if line.startswith("ENTRY"):
-                    comps["__entry__"] = body
-            continue
-        if line.startswith("}") or line.strip() == "}":
-            comps[cur] = body if cur not in comps or comps[cur] is not body \
-                else comps[cur]
-            comps.setdefault(cur, body)
-            comps[cur] = body
-            cur = None
-            continue
-        ins = _parse_instr(line)
-        if ins:
-            body.append(ins)
-    return comps
-
-
-@dataclasses.dataclass
-class Cost:
-    flops: float = 0.0
-    bytes: float = 0.0
-    coll: Optional[Dict[str, float]] = None
-
-    def __post_init__(self):
-        if self.coll is None:
-            self.coll = {k: 0.0 for k in COLLECTIVE_OPS}
-
-    def add(self, other: "Cost", times: float = 1.0):
-        self.flops += other.flops * times
-        self.bytes += other.bytes * times
-        for k in COLLECTIVE_OPS:
-            self.coll[k] += other.coll[k] * times
-
-    @property
-    def coll_total(self) -> float:
-        return sum(self.coll.values())
-
-
-_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
-               "bitcast", "after-all", "partition-id", "replica-id"}
-
-
-class HloCostModel:
-    def __init__(self, hlo_text: str):
-        self.comps = parse_computations(hlo_text)
-        # constant values need the raw args; reparse constants crudely
-        self._const: Dict[Tuple[str, str], int] = {}
-        cur = None
-        for line in hlo_text.splitlines():
-            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
-            if m and not line.strip().startswith("%constant"):
-                cur = m.group(1)
-                continue
-            cm = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+) = s32\[\] "
-                          r"constant\((\d+)\)", line)
-            if cm and cur:
-                self._const[(cur, cm.group(1))] = int(cm.group(2))
-        self._memo: Dict[str, Cost] = {}
-
-    def _symtab(self, comp: List[Instr]) -> Dict[str, str]:
-        return {i.name: i.shape for i in comp}
-
-    def trip_count(self, cond_name: str) -> int:
-        vals = [v for (c, _), v in self._const.items() if c == cond_name]
-        return max(vals) if vals else 1
-
-    def _dot_flops(self, ins: Instr, sym: Dict[str, str]) -> float:
-        res = 1
-        for _, dims in shape_dims(ins.shape):
-            for d in dims:
-                res *= d
-        lhs = sym.get(ins.operands[0]) if ins.operands else None
-        contract = 1
-        if lhs:
-            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
-            ldims = shape_dims(lhs)
-            if m and ldims:
-                dims = ldims[0][1]
-                for i in (int(x) for x in m.group(1).split(",") if x):
-                    if i < len(dims):
-                        contract *= dims[i]
-        return 2.0 * res * contract
-
-    def cost_of(self, name: str) -> Cost:
-        if name in self._memo:
-            return self._memo[name]
-        comp = self.comps.get(name, [])
-        sym = self._symtab(comp)
-        total = Cost()
-        self._memo[name] = total        # cycle guard
-        for ins in comp:
-            op = ins.opcode
-            if op == "dot":
-                total.flops += self._dot_flops(ins, sym)
-            elif op == "convolution":
-                # flops ~ 2 * result * (kernel spatial * in_ch): approximate
-                # with result * operand1 elements (rare in this codebase)
-                res = shape_bytes(ins.shape) / 2
-                total.flops += 2.0 * res
-            elif op == "while":
-                body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
-                cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
-                trips = self.trip_count(cond.group(1)) if cond else 1
-                if body:
-                    total.add(self.cost_of(body.group(1)), trips)
-                if cond:
-                    total.add(self.cost_of(cond.group(1)), trips)
-            elif op in ("call", "fusion", "conditional", "map",
-                        "reduce", "reduce-window", "sort", "scatter"):
-                for m in re.finditer(
-                        r"(?:calls|to_apply|branch_computations)="
-                        r"\{?%?([\w\.\-,% ]+)\}?", ins.attrs):
-                    for c in re.findall(r"[\w\.\-]+", m.group(1)):
-                        sub = self.cost_of(c)
-                        # fusion internals: flops yes, bytes no
-                        total.flops += sub.flops
-                        for k in COLLECTIVE_OPS:
-                            total.coll[k] += sub.coll[k]
-            if op in COLLECTIVE_OPS or any(
-                    op == f"{c}-start" for c in COLLECTIVE_OPS):
-                kind = op.replace("-start", "")
-                total.coll[kind] += shape_bytes(ins.shape)
-            if op not in _SKIP_BYTES:
-                if op == "dynamic-update-slice":
-                    # in-place: traffic = update read + slice write, NOT
-                    # the whole buffer (XLA aliases operand 0)
-                    upd = (shape_bytes(sym[ins.operands[1]])
-                           if len(ins.operands) > 1 and ins.operands[1] in sym
-                           else shape_bytes(ins.shape))
-                    total.bytes += 2 * upd
-                elif op == "dynamic-slice":
-                    total.bytes += 2 * shape_bytes(ins.shape)
-                elif op == "gather":
-                    total.bytes += 2 * shape_bytes(ins.shape)
-                elif op == "scatter":
-                    upd = (shape_bytes(sym[ins.operands[2]])
-                           if len(ins.operands) > 2 and ins.operands[2] in sym
-                           else shape_bytes(ins.shape))
-                    total.bytes += 2 * upd
-                else:
-                    b = shape_bytes(ins.shape)
-                    for o in ins.operands:
-                        if o in sym:
-                            b += shape_bytes(sym[o])
-                    total.bytes += b
-        self._memo[name] = total
-        return total
-
-    def entry_cost(self) -> Cost:
-        if "__entry__" in self.comps:
-            return self.cost_of("__entry__")
-        # fall back: largest computation
-        name = max(self.comps, key=lambda n: len(self.comps[n]))
-        return self.cost_of(name)
-
-
-def analyze_text(hlo_text: str) -> Cost:
-    return HloCostModel(hlo_text).entry_cost()
-
-
-def attribute(hlo_text: str, top: int = 20, min_bytes: float = 1e11):
-    """Per-(opcode, shape) byte attribution with trip multipliers --
-    the §Perf profiling tool (what dominates the memory term?)."""
-    import collections
-    model = HloCostModel(hlo_text)
-    tally = collections.Counter()
-
-    def walk(name, mult):
-        comp = model.comps.get(name, [])
-        sym = {i.name: i.shape for i in comp}
-        for ins in comp:
-            op = ins.opcode
-            if op == "while":
-                b = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
-                c = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
-                t = model.trip_count(c.group(1)) if c else 1
-                if b:
-                    walk(b.group(1), mult * t)
-                continue
-            if op in _SKIP_BYTES:
-                continue
-            if op == "dynamic-update-slice":
-                upd = (shape_bytes(sym[ins.operands[1]])
-                       if len(ins.operands) > 1 and ins.operands[1] in sym
-                       else 0)
-                b = 2 * upd
-            elif op in ("dynamic-slice", "gather"):
-                b = 2 * shape_bytes(ins.shape)
-            else:
-                b = shape_bytes(ins.shape)
-                for o in ins.operands:
-                    if o in sym:
-                        b += shape_bytes(sym[o])
-            bm = b * mult
-            key = (op, ins.shape[:48] if bm > min_bytes else "(small)")
-            tally[key] += bm
-
-    walk("__entry__", 1)
-    return tally.most_common(top)
+from repro.cost import (COLLECTIVE_OPS, Cost, HloCostModel,  # noqa: F401
+                        analyze_text, analyze_compiled, attribute,
+                        shape_bytes, shape_dims, xla_cost_analysis)
+from repro.cost.parser import Instr, parse_instruction  # noqa: F401

@@ -192,9 +192,13 @@ def main():
         print(f"[perf] {v.cell} :: {v.name}", flush=True)
         row = run_variant(v, args.out)
         if row["status"] == "ok":
+            by = row.get("mem_by_op_gb", {})
+            top = ", ".join(f"{k}={v:.2f}GB"
+                            for k, v in list(by.items())[:3])
             print(f"  t=({row['t_compute_s']:.3f}, {row['t_memory_s']:.3f}, "
                   f"{row['t_collective_s']:.3f})s bn={row['bottleneck']} "
-                  f"frac={row['roofline_fraction']:.4f}", flush=True)
+                  f"frac={row['roofline_fraction']:.4f}"
+                  + (f" mem[{top}]" if top else ""), flush=True)
         else:
             print(f"  FAIL {row['error']}", flush=True)
 

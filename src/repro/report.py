@@ -19,23 +19,25 @@ def load(path: str) -> List[Dict]:
 
 def fmt_table(rows: List[Dict], mesh: str) -> str:
     out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
-           "bottleneck | useful/HLO | roofline frac | peak GB/chip |",
-           "|---|---|---|---|---|---|---|---|---|"]
+           "bottleneck | dominant mem op | useful/HLO | roofline frac | "
+           "peak GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         if r["mesh"] != mesh:
             continue
         if r["status"] == "skipped":
             out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                       f"N/A-by-spec | — | — | — |")
+                       f"N/A-by-spec | — | — | — | — |")
             continue
         if r["status"] != "ok":
             out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | "
-                       f"{r.get('error','')[:60]} | | | |")
+                       f"{r.get('error','')[:60]} | | | | |")
             continue
         out.append(
             f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
             f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
-            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['bottleneck']} | {r.get('dominant_mem_op', '-')} | "
+            f"{r['useful_flops_ratio']:.3f} | "
             f"**{r['roofline_fraction']:.3f}** | "
             f"{r['peak_mem_gb_per_chip']:.1f} |")
     return "\n".join(out)

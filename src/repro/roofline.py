@@ -91,6 +91,7 @@ class Roofline:
     peak_memory_per_chip: float
     model_flops: float           # 6*N*D (or 6*N_active*D)
     coll_by_kind: Optional[Dict[str, float]] = None
+    bytes_by_op: Optional[Dict[str, float]] = None
     xla_raw: Optional[Dict[str, float]] = None
 
     @property
@@ -142,23 +143,33 @@ class Roofline:
             "roofline_fraction": self.roofline_fraction,
             "coll_by_kind_gb": {k: v / 1e9 for k, v in
                                 (self.coll_by_kind or {}).items()},
+            "mem_by_op_gb": {k: v / 1e9 for k, v in
+                             sorted((self.bytes_by_op or {}).items(),
+                                    key=lambda kv: -kv[1])},
+            "dominant_mem_op": self.dominant_mem_op,
             "xla_raw": self.xla_raw or {},
         }
+
+    @property
+    def dominant_mem_op(self) -> str:
+        from repro.cost.accounting import dominant_category
+        return dominant_category(self.bytes_by_op)
 
 
 def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
             model_flops: float) -> Roofline:
     """Derive roofline terms from the compiled SPMD module.
 
-    Primary source: the trip-count-aware HLO cost model (repro.hlo_cost)
-    -- ``compiled.cost_analysis()`` counts while-loop bodies once, which
-    under-reports scanned models by ~num_layers (validated in
-    tests/test_hlo_cost.py).  The raw XLA numbers are kept in the row for
-    reference.
+    Primary source: the instruction-level accounting subsystem
+    (``repro.cost``) -- ``compiled.cost_analysis()`` counts while-loop
+    bodies once, which under-reports scanned models by ~num_layers
+    (validated in tests/test_hlo_cost.py), and its byte counts bill
+    in-place updates and gathers at full-operand size.  The raw XLA
+    numbers are kept in the row for reference.
     """
-    from repro import hlo_cost
+    from repro import cost as COST
     hlo = compiled.as_text()
-    cost = hlo_cost.analyze_text(hlo)
+    cost = COST.analyze_text(hlo)
     try:
         mem = compiled.memory_analysis()
         peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes +
@@ -170,14 +181,11 @@ def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, chips: int,
                   coll_bytes_per_chip=cost.coll_total,
                   peak_memory_per_chip=peak, model_flops=model_flops)
     rl.coll_by_kind = {k: v for k, v in cost.coll.items() if v}
-    try:
-        xla_cost = compiled.cost_analysis()
-        if isinstance(xla_cost, list):
-            xla_cost = xla_cost[0]
-        rl.xla_raw = {"flops": float(xla_cost.get("flops", 0.0)),
-                      "bytes": float(xla_cost.get("bytes accessed", 0.0))}
-    except Exception:
-        rl.xla_raw = {}
+    rl.bytes_by_op = {k: v for k, v in cost.by_op.items() if v}
+    xla_cost = COST.xla_cost_analysis(compiled)
+    rl.xla_raw = {"flops": float(xla_cost.get("flops", 0.0)),
+                  "bytes": float(xla_cost.get("bytes accessed", 0.0))} \
+        if xla_cost else {}
     return rl
 
 

@@ -1,0 +1,128 @@
+"""Offline-safe ``hypothesis`` stand-in for the property-based tests.
+
+The container has no network access, so ``hypothesis`` may simply not be
+installable.  When the real package is present we re-export it verbatim;
+otherwise this module provides the tiny subset the test-suite uses
+(``given``, ``settings``, ``strategies.integers/lists/sampled_from/...``)
+backed by *seeded* numpy sampling:
+
+  * deterministic: the RNG is seeded from the test-function name, so a
+    failure reproduces exactly under plain ``pytest`` with no database;
+  * boundary-biased: example 0 is always the minimal example (smallest
+    integers, empty lists), which is where off-by-one bugs live;
+  * ``settings(max_examples=N)`` is honored in either decorator order.
+
+This is NOT a shrinker and does not try to be one -- a failing example
+prints its arguments so the repro can be inlined into a regular test.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # type: ignore  # noqa: F401
+    from hypothesis import strategies  # type: ignore  # noqa: F401
+    HAVE_REAL_HYPOTHESIS = True
+except ImportError:
+    HAVE_REAL_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A value source: ``_draw(rng)`` samples, ``_minimal()`` is the
+        smallest member (used as example 0)."""
+
+        def __init__(self, draw, minimal):
+            self._draw = draw
+            self._minimal = minimal
+
+        def example(self, rng, index):
+            if index == 0:
+                return self._minimal()
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)),
+                lambda: int(min_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.randint(len(seq)))],
+                             lambda: seq[0])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(2)), lambda: False)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                lambda: float(min_value))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value, lambda: value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.randint(min_size, max_size + 1))
+                return [elements._draw(rng) for _ in range(n)]
+
+            def minimal():
+                return [elements._minimal() for _ in range(min_size)]
+
+            return _Strategy(draw, minimal)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s._draw(rng) for s in strats),
+                lambda: tuple(s._minimal() for s in strats))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=None, **_ignored):
+        """Record ``max_examples``; works above or below ``@given``."""
+        def deco(fn):
+            fn._hc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats, **kwstrats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = (getattr(wrapper, "_hc_max_examples", None)
+                     or getattr(fn, "_hc_max_examples", None)
+                     or _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode()) & 0x7FFFFFFF
+                rng = np.random.RandomState(seed)
+                for i in range(n):
+                    vals = [s.example(rng, i) for s in strats]
+                    kwvals = {k: s.example(rng, i)
+                              for k, s in kwstrats.items()}
+                    try:
+                        fn(*args, *vals, **kwargs, **kwvals)
+                    except Exception:
+                        print(f"[hypothesis-compat] falsifying example "
+                              f"#{i} for {fn.__qualname__}: "
+                              f"args={vals!r} kwargs={kwvals!r}")
+                        raise
+            # hide the strategy-fed params from pytest's fixture
+            # resolution (it would otherwise look for fixtures "n" etc.)
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

@@ -1,0 +1,420 @@
+"""The repro.cost accounting subsystem: exact byte bills per op.
+
+Two layers of tests:
+
+  * synthetic HLO text with hand-computable byte counts -- pins the
+    accounting RULES (DUS billed at slice size, gather at gathered rows,
+    fusion aliasing, trip-count sources, collectives);
+  * compiled-HLO integration -- pins the paper-level CLAIM that a paged
+    KV layout's byte bill stays close to the contiguous baseline instead
+    of inflating to pool size (the overcounting trap that would make
+    software paging look ~4x more expensive than it is).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import cost
+from repro.cost.accounting import Cost
+
+
+def _c(hlo: str) -> Cost:
+    return cost.analyze_text(hlo)
+
+
+# ---------------------------------------------------------------------------
+# synthetic HLO: exact rule pins
+# ---------------------------------------------------------------------------
+def test_dus_billed_at_update_size():
+    hlo = """
+HloModule m
+
+ENTRY %main (big: f32[1024], upd: f32[16], idx: s32[]) -> f32[1024] {
+  %big = f32[1024]{0} parameter(0)
+  %upd = f32[16]{0} parameter(1)
+  %idx = s32[] parameter(2)
+  ROOT %dus = f32[1024]{0} dynamic-update-slice(f32[1024]{0} %big, f32[16]{0} %upd, s32[] %idx)
+}
+"""
+    c = _c(hlo)
+    assert c.bytes == 2 * 16 * 4                      # read upd + write slice
+    assert c.by_op == {"dynamic-update-slice": 128.0}
+
+
+def test_gather_billed_at_gathered_rows():
+    # 8 rows of 32 f32 from a 1024-row table + 8 s32 indices
+    hlo = """
+HloModule m
+
+ENTRY %main (t: f32[1024,32], ids: s32[8,1]) -> f32[8,32] {
+  %t = f32[1024,32]{1,0} parameter(0)
+  %ids = s32[8,1]{1,0} parameter(1)
+  ROOT %g = f32[8,32]{1,0} gather(f32[1024,32]{1,0} %t, s32[8,1]{1,0} %ids), offset_dims={1}
+}
+"""
+    c = _c(hlo)
+    assert c.bytes == 2 * 8 * 32 * 4 + 8 * 4          # 2x gathered + indices
+    assert c.by_op == {"gather": 2080.0}
+
+
+def test_scan_matmul_trips_from_backend_config():
+    # 128x128x128 dot inside a while with known_trip_count n=12
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[128,128], f32[128,128])) -> (s32[], f32[128,128], f32[128,128]) {
+  %p = (s32[], f32[128,128], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[128,128], f32[128,128]) %p), index=0
+  %a = f32[128,128]{1,0} get-tuple-element((s32[], f32[128,128], f32[128,128]) %p), index=1
+  %b = f32[128,128]{1,0} get-tuple-element((s32[], f32[128,128], f32[128,128]) %p), index=2
+  %d = f32[128,128]{1,0} dot(f32[128,128]{1,0} %a, f32[128,128]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i, s32[] %one)
+  ROOT %r = (s32[], f32[128,128], f32[128,128]) tuple(s32[] %ip, f32[128,128]{1,0} %d, f32[128,128]{1,0} %b)
+}
+
+%cond (q: (s32[], f32[128,128], f32[128,128])) -> pred[] {
+  %q = (s32[], f32[128,128], f32[128,128]) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[128,128], f32[128,128]) %q), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(s32[] %j, s32[] %n), direction=LT
+}
+
+ENTRY %main (x: (s32[], f32[128,128], f32[128,128])) -> (s32[], f32[128,128], f32[128,128]) {
+  %x = (s32[], f32[128,128], f32[128,128]) parameter(0)
+  ROOT %w = (s32[], f32[128,128], f32[128,128]) while((s32[], f32[128,128], f32[128,128]) %x), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+}
+"""
+    c = _c(hlo)
+    assert c.flops == 12 * 2 * 128 * 128 * 128
+    # dot traffic also multiplied: 12 * (result + 2 operands)
+    assert c.by_op["matmul"] == 12 * 3 * 128 * 128 * 4
+
+
+def test_trip_count_falls_back_to_cond_constant():
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[64]) %p), index=0
+  %v = f32[64]{0} get-tuple-element((s32[], f32[64]) %p), index=1
+  %d = f32[64]{0} add(f32[64]{0} %v, f32[64]{0} %v)
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i, s32[] %one)
+  ROOT %r = (s32[], f32[64]) tuple(s32[] %ip, f32[64]{0} %d)
+}
+
+%cond (q: (s32[], f32[64])) -> pred[] {
+  %q = (s32[], f32[64]) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[64]) %q), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %j, s32[] %n), direction=LT
+}
+
+ENTRY %main (x: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %x = (s32[], f32[64]) parameter(0)
+  ROOT %w = (s32[], f32[64]) while((s32[], f32[64]) %x), condition=%cond, body=%body
+}
+"""
+    c = _c(hlo)
+    # 7 trips x (f32 add 768 + s32 add 12 + cond compare 9)
+    assert c.by_op["other"] == 7 * (768 + 12 + 9)
+
+
+def test_fusion_dus_root_aliases_target():
+    # fusion computing big[idx:idx+16] = upd: bill the slice, NOT the
+    # 1024-element operand (the paper-critical in-place block write)
+    hlo = """
+HloModule m
+
+%fused (p0: f32[1024], p1: f32[16], p2: s32[]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %p1 = f32[16]{0} parameter(1)
+  %p2 = s32[] parameter(2)
+  ROOT %dus = f32[1024]{0} dynamic-update-slice(f32[1024]{0} %p0, f32[16]{0} %p1, s32[] %p2)
+}
+
+ENTRY %main (big: f32[1024], upd: f32[16], idx: s32[]) -> f32[1024] {
+  %big = f32[1024]{0} parameter(0)
+  %upd = f32[16]{0} parameter(1)
+  %idx = s32[] parameter(2)
+  ROOT %f = f32[1024]{0} fusion(f32[1024]{0} %big, f32[16]{0} %upd, s32[] %idx), kind=kLoop, calls=%fused
+}
+"""
+    c = _c(hlo)
+    # write slice (64) + read upd param (64) + read idx (4); big NOT billed
+    assert c.bytes == 64 + 64 + 4
+    assert c.by_op["dynamic-update-slice"] == 64.0
+
+
+def test_fusion_dus_root_sees_through_bitcast_target():
+    # the DUS target arrives via bitcast(param): the alias must still be
+    # recognized so the 4 KB pool is not billed
+    hlo = """
+HloModule m
+
+%fused (p0: f32[1024], p1: f32[16], p2: s32[]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %p1 = f32[16]{0} parameter(1)
+  %p2 = s32[] parameter(2)
+  %bc = f32[1024]{0} bitcast(f32[1024]{0} %p0)
+  ROOT %dus = f32[1024]{0} dynamic-update-slice(f32[1024]{0} %bc, f32[16]{0} %p1, s32[] %p2)
+}
+
+ENTRY %main (big: f32[1024], upd: f32[16], idx: s32[]) -> f32[1024] {
+  %big = f32[1024]{0} parameter(0)
+  %upd = f32[16]{0} parameter(1)
+  %idx = s32[] parameter(2)
+  ROOT %f = f32[1024]{0} fusion(f32[1024]{0} %big, f32[16]{0} %upd, s32[] %idx), kind=kLoop, calls=%fused
+}
+"""
+    c = _c(hlo)
+    assert c.bytes == 64 + 64 + 4, c.by_op
+    assert c.by_op["dynamic-update-slice"] == 64.0
+
+
+def test_multi_output_fusion_dus_billed_per_element():
+    # fused K+V cache token write: root tuple(dus_k, dus_v) must bill
+    # two slice-sized updates, not two full pools
+    hlo = """
+HloModule m
+
+%fused (p0: f32[1024], p1: f32[1024], p2: f32[16], p3: s32[]) -> (f32[1024], f32[1024]) {
+  %p0 = f32[1024]{0} parameter(0)
+  %p1 = f32[1024]{0} parameter(1)
+  %p2 = f32[16]{0} parameter(2)
+  %p3 = s32[] parameter(3)
+  %dk = f32[1024]{0} dynamic-update-slice(f32[1024]{0} %p0, f32[16]{0} %p2, s32[] %p3)
+  %dv = f32[1024]{0} dynamic-update-slice(f32[1024]{0} %p1, f32[16]{0} %p2, s32[] %p3)
+  ROOT %t = (f32[1024], f32[1024]) tuple(f32[1024]{0} %dk, f32[1024]{0} %dv)
+}
+
+ENTRY %main (kp: f32[1024], vp: f32[1024], upd: f32[16], idx: s32[]) -> (f32[1024], f32[1024]) {
+  %kp = f32[1024]{0} parameter(0)
+  %vp = f32[1024]{0} parameter(1)
+  %upd = f32[16]{0} parameter(2)
+  %idx = s32[] parameter(3)
+  ROOT %f = (f32[1024], f32[1024]) fusion(f32[1024]{0} %kp, f32[1024]{0} %vp, f32[16]{0} %upd, s32[] %idx), kind=kLoop, calls=%fused
+}
+"""
+    c = _c(hlo)
+    # 2 slice writes (64 each) + upd read (64) + idx read (4); neither
+    # pool billed
+    assert c.by_op["dynamic-update-slice"] == 128.0
+    assert c.bytes == 128 + 64 + 4, c.by_op
+
+
+def test_attribute_walks_conditional_branches():
+    hlo = """
+HloModule m
+
+%true_b (tp: f32[1024]) -> f32[1024] {
+  %tp = f32[1024]{0} parameter(0)
+  ROOT %tn = f32[1024]{0} negate(f32[1024]{0} %tp)
+}
+
+%false_b (fp: f32[1024]) -> f32[1024] {
+  %fp = f32[1024]{0} parameter(0)
+  ROOT %fa = f32[1024]{0} add(f32[1024]{0} %fp, f32[1024]{0} %fp)
+}
+
+ENTRY %main (pr: pred[], x: f32[1024]) -> f32[1024] {
+  %pr = pred[] parameter(0)
+  %x = f32[1024]{0} parameter(1)
+  ROOT %c = f32[1024]{0} conditional(pred[] %pr, f32[1024]{0} %x, f32[1024]{0} %x), branch_computations={%true_b, %false_b}
+}
+"""
+    c = _c(hlo)
+    tally = cost.HloCostModel(hlo).attribute(top=10, min_bytes=0)
+    total = sum(v for _, v in tally)
+    assert c.bytes > 0
+    assert total == c.bytes, (total, c.bytes, tally)
+
+
+def test_fusion_param_read_via_gather_is_sliced():
+    # pool read only through (bitcast ->) gather: billed at gathered size
+    hlo = """
+HloModule m
+
+%fused (p0: f32[1024,32], p1: s32[8,1]) -> f32[8,32] {
+  %p0 = f32[1024,32]{1,0} parameter(0)
+  %p1 = s32[8,1]{1,0} parameter(1)
+  %bc = f32[1024,32]{1,0} bitcast(f32[1024,32]{1,0} %p0)
+  %g = f32[8,32]{1,0} gather(f32[1024,32]{1,0} %bc, s32[8,1]{1,0} %p1), offset_dims={1}
+  ROOT %n = f32[8,32]{1,0} negate(f32[8,32]{1,0} %g)
+}
+
+ENTRY %main (t: f32[1024,32], ids: s32[8,1]) -> f32[8,32] {
+  %t = f32[1024,32]{1,0} parameter(0)
+  %ids = s32[8,1]{1,0} parameter(1)
+  ROOT %f = f32[8,32]{1,0} fusion(f32[1024,32]{1,0} %t, s32[8,1]{1,0} %ids), kind=kLoop, calls=%fused
+}
+"""
+    c = _c(hlo)
+    # result write (1024) + gathered read (1024) + index read (32);
+    # the 128KB pool operand must NOT be billed
+    assert c.bytes == 1024 + 1024 + 32
+    assert c.by_op["gather"] == 1024.0
+
+
+def test_collective_bytes_by_kind():
+    hlo = """
+HloModule m
+
+ENTRY %main (x: f32[4096]) -> f32[4096] {
+  %x = f32[4096]{0} parameter(0)
+  %ar = f32[4096]{0} all-reduce(f32[4096]{0} %x), replica_groups={}
+  ROOT %ag = f32[4096]{0} all-gather(f32[4096]{0} %ar), dimensions={0}
+}
+"""
+    c = _c(hlo)
+    assert c.coll["all-reduce"] == 4096 * 4
+    assert c.coll["all-gather"] == 4096 * 4
+    assert c.coll_total == 2 * 4096 * 4
+    assert c.by_op["collective"] == 2 * 4096 * 4
+
+
+def test_async_collective_billed_once_at_output():
+    # '-start' returns a (input, output) tuple: billing its shape would
+    # double-charge; the pair must be billed once, at the output size
+    hlo = """
+HloModule m
+
+ENTRY %main (x: f32[1024]) -> f32[4096] {
+  %x = f32[1024]{0} parameter(0)
+  %ags = (f32[1024], f32[4096]) all-gather-start(f32[1024]{0} %x), dimensions={0}
+  ROOT %agd = f32[4096]{0} all-gather-done((f32[1024], f32[4096]) %ags)
+}
+"""
+    c = _c(hlo)
+    assert c.coll["all-gather"] == 4096 * 4
+    assert c.coll_total == 4096 * 4
+    assert c.by_op["collective"] == 4096 * 4
+
+
+def test_cost_add_merges_by_op():
+    a = Cost()
+    a.add_bytes("gather", 100.0)
+    b = Cost()
+    b.add_bytes("gather", 50.0)
+    b.add_bytes("matmul", 10.0)
+    a.add(b, times=2.0)
+    assert a.by_op == {"gather": 200.0, "matmul": 20.0}
+    assert a.bytes == 220.0
+    assert a.dominant_op() == "gather"
+
+
+def test_xla_cost_analysis_normalizes_shapes():
+    class ListShaped:
+        def cost_analysis(self):
+            return [{"flops": 5.0}]
+
+    class DictShaped:
+        def cost_analysis(self):
+            return {"flops": 7.0}
+
+    class Broken:
+        def cost_analysis(self):
+            raise RuntimeError("no backend")
+
+    class Empty:
+        def cost_analysis(self):
+            return []
+
+    assert cost.xla_cost_analysis(ListShaped()) == {"flops": 5.0}
+    assert cost.xla_cost_analysis(DictShaped()) == {"flops": 7.0}
+    assert cost.xla_cost_analysis(Broken()) == {}
+    assert cost.xla_cost_analysis(Empty()) == {}
+    assert cost.xla_flops(ListShaped()) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# compiled HLO: integration + the paper's Table-level claim
+# ---------------------------------------------------------------------------
+def test_compiled_embedding_gather_not_billed_at_table_size():
+    T, W, n = 4096, 256, 32
+
+    def g(table, ids):
+        return table[ids]
+
+    comp = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((T, W), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32)).compile()
+    c = cost.analyze_compiled(comp)
+    table_bytes = T * W * 4
+    rows_bytes = n * W * 4
+    assert c.bytes < 0.2 * table_bytes, c.by_op
+    assert c.bytes >= 2 * rows_bytes
+
+
+def test_paged_kv_block_write_vs_contiguous_baseline():
+    """The paper's Table-level claim: a paged decode step (token DUS
+    write + block-table gather read) is billed for the bytes it TOUCHES
+    -- the bill must be pool-size independent and must match the
+    contiguous layout's slice-sized write, not inflate to pool size
+    (the overcounting trap that made paging look ~4x too expensive)."""
+    B, H, D, BT, S = 4, 2, 64, 16, 128
+    MB = S // BT
+    token_bytes = B * H * D * 4
+    gathered_bytes = B * MB * BT * H * D * 4
+
+    def make_paged(NB):
+        def paged(pool, tbl, seqlens, kv):
+            blk = jnp.take_along_axis(
+                tbl, (seqlens[:, None]) // BT, axis=1)[:, 0]
+            off = seqlens % BT
+            flat = pool.reshape(NB * BT, H, D)
+            flat = flat.at[blk * BT + off].set(kv)   # paged token write
+            pages = flat.reshape(NB, BT, H, D)[jnp.maximum(tbl, 0)]
+            return flat.reshape(NB, BT, H, D), pages.sum(axis=(1, 2))
+
+        return cost.analyze_compiled(
+            jax.jit(paged, donate_argnums=0).lower(
+                jax.ShapeDtypeStruct((NB, BT, H, D), jnp.float32),
+                jax.ShapeDtypeStruct((B, MB), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32),
+                jax.ShapeDtypeStruct((B, H, D), jnp.float32)).compile())
+
+    def contig(cache, seqlens, kv):
+        flat = cache.reshape(B * S, H, D)
+        flat = flat.at[jnp.arange(B) * S + seqlens].set(kv)
+        cache = flat.reshape(B, S, H, D)
+        return cache, cache.sum(axis=(1, 2))
+
+    cc = cost.analyze_compiled(jax.jit(contig, donate_argnums=0).lower(
+        jax.ShapeDtypeStruct((B, S, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B, H, D), jnp.float32)).compile())
+
+    cp1 = make_paged(B * MB)          # pool == working set
+    cp4 = make_paged(4 * B * MB)      # pool 4x working set
+    # pool-size independence: same bill no matter how big the pool is
+    assert cp1.bytes == cp4.bytes, (cp1.by_op, cp4.by_op)
+    # the token write itself: slice-sized, layout-independent
+    assert cp1.by_op["dynamic-update-slice"] == token_bytes
+    assert cp1.by_op["dynamic-update-slice"] == \
+        cc.by_op["dynamic-update-slice"]
+    # total bill bounded by the touched working set (gather read +
+    # materialized copy + reduce re-read), not the pool
+    assert cp1.bytes < 3.5 * gathered_bytes, cp1.by_op
+
+
+def test_attribute_reports_trip_multiplied_tally():
+    L, B, D = 5, 16, 32
+
+    def f(ws, x):
+        def body(x, w):
+            return x @ w, None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32)).compile()
+    tally = cost.attribute(comp.as_text(), top=10, min_bytes=0)
+    assert tally, "attribute() returned nothing"
+    total = sum(v for _, v in tally)
+    c = cost.analyze_compiled(comp)
+    assert abs(total - c.bytes) / c.bytes < 0.35

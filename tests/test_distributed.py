@@ -117,6 +117,7 @@ def test_serve_step_parity_sharded():
 
 _COMPRESSION = """
 from repro.optim import compression as C
+from repro.compat import shard_map
 import functools
 from jax.sharding import PartitionSpec as P
 mesh = jax.make_mesh((4,), ("data",))
@@ -125,7 +126,7 @@ rng = np.random.RandomState(0)
 g = rng.randn(4, C.BLOCK * 2).astype(np.float32)
 res = np.zeros_like(g)
 
-@functools.partial(jax.shard_map, mesh=mesh,
+@functools.partial(shard_map, mesh=mesh,
                    in_specs=(P("data"), P("data")),
                    out_specs=(P("data"), P("data")), check_vma=False)
 def sync(gv, rv):

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.blockpool import BlockAllocator
 from repro.core.stack import BlockStack, DeviceBlockStack

@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.blockpool import BlockAllocator
 from repro.core.treearray import TreeArray, tree_depth_for
