@@ -1,0 +1,153 @@
+"""Serving-stack benchmark: throughput, swap traffic, prefix-share rate.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --smoke
+
+Drives the layered engine through a scripted workload (mixed prompts, a
+shared-prefix cohort, and a pool small enough to force preemption) and
+writes ``BENCH_serve.json``:
+
+  * tokens_per_s        -- decoded tokens / wall time
+  * swap_bytes_per_step -- (swap_out + swap_in bytes) / engine steps
+  * swap_bytes_per_block / blocks_swapped -- proportionality evidence:
+    per-block swap cost must equal config.swap_nbytes_per_block()
+  * prefix_share_hit_rate -- forked admissions / total requests
+  * cow_copies, preemptions, pool_utilization_final
+
+Emits the usual CSV rows too (see benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+OUT_JSON = "BENCH_serve.json"
+
+
+def build(args):
+    from repro.configs.base import get_config
+    from repro.models.api import build_model
+    from repro.serve.engine import Engine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, max_positions=args.max_seq)
+    params, _ = model.init(jax.random.PRNGKey(args.seed))
+    eng = Engine(model, params, slots=args.slots, max_seq=args.max_seq,
+                 num_blocks=args.num_blocks, eos_id=-1,
+                 watermark=args.watermark,
+                 prefill_budget=args.prefill_budget)
+    return cfg, eng
+
+
+def workload(cfg, eng, args):
+    """Mixed traffic: unique prompts + a shared-prefix cohort; the pool
+    is sized by the caller to force queueing (and usually swapping)."""
+    from repro.serve.engine import Request
+
+    rng = np.random.RandomState(args.seed)
+    cap = min(24, args.max_seq // 2)
+    base = rng.randint(2, cfg.vocab_size, size=cap - 2)
+    # consecutive cohort so its members are resident TOGETHER (fork
+    # needs a live parent), like parallel sampling off one prompt
+    cohort = range(1, 1 + max(2, args.requests // 3))
+    rid = 0
+    for i in range(args.requests):
+        if i in cohort:                      # shared-prefix cohort
+            extra = int(rng.randint(0, 4))
+            pr = (np.concatenate([base, rng.randint(2, cfg.vocab_size,
+                                                    size=extra)])
+                  if extra else base.copy())
+        else:
+            pr = rng.randint(2, cfg.vocab_size,
+                             size=int(rng.randint(4, cap)))
+        eng.submit(Request(rid=rid, prompt=pr, max_new=args.max_new))
+        rid += 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma_2b")
+    ap.add_argument("--reduced", action="store_true", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (reduced model, few requests)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--num-blocks", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--watermark", type=int, default=1)
+    ap.add_argument("--prefill-budget", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.reduced = True
+        args.requests = min(args.requests, 9)
+        args.slots = min(args.slots, 3)
+    if args.reduced is None:
+        args.reduced = True
+
+    cfg, eng = build(args)
+    workload(cfg, eng, args)
+    # force at least one preemption round-trip mid-run so swap traffic
+    # is always measured, even when the pool happens to fit everything
+    forced = {"done": False}
+    t0 = time.perf_counter()
+    while (eng.sched.has_work or eng.running) and eng.steps < 10_000:
+        eng.step()
+        if eng.steps == 4 and eng.running and not forced["done"]:
+            eng.preempt_latest()
+            forced["done"] = True
+    dt = time.perf_counter() - t0
+
+    st = eng.stats
+    swp = eng.store.stats
+    blocks_swapped = sum(n for _, n, _ in swp.out_log)
+    per_block = eng.cache.config.swap_nbytes_per_block()
+    report = {
+        "arch": args.arch,
+        "requests": args.requests,
+        "completed": len(eng.done),
+        "steps": eng.steps,
+        "wall_s": round(dt, 3),
+        "decode_tokens": st["decode_tokens"],
+        "prefill_tokens": st["prefill_tokens"],
+        "tokens_per_s": round(st["decode_tokens"] / max(dt, 1e-9), 2),
+        "swap_out_bytes": st["swap_out_bytes"],
+        "swap_in_bytes": st["swap_in_bytes"],
+        "swap_bytes_per_step": round(
+            (st["swap_out_bytes"] + st["swap_in_bytes"])
+            / max(eng.steps, 1), 1),
+        "blocks_swapped_out": blocks_swapped,
+        "swap_nbytes_per_block": per_block,
+        "swap_bytes_proportional": (
+            st["swap_out_bytes"] == blocks_swapped * per_block),
+        "preemptions": st["preemptions"],
+        "prefix_hits": st["prefix_hits"],
+        "prefix_share_hit_rate": round(
+            st["prefix_hits"] / max(args.requests, 1), 3),
+        "cow_copies": st["cow_copies"],
+        "pool_utilization_final": round(st["pool_utilization"], 3),
+        "all_ok": (len(eng.done) == args.requests
+                   and st["prefix_hits"] > 0
+                   and st["swap_out_bytes"]
+                   == blocks_swapped * per_block),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"bench_serve,{dt * 1e6:.0f},tok_s={report['tokens_per_s']},"
+          f"hit_rate={report['prefix_share_hit_rate']},"
+          f"swapB_step={report['swap_bytes_per_step']},"
+          f"all_ok={report['all_ok']},json={OUT_JSON}")
+    if not report["all_ok"]:
+        raise SystemExit(1)
+    return report
+
+
+if __name__ == "__main__":
+    main()

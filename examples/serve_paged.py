@@ -1,5 +1,5 @@
-"""Serving example: continuous batching over the paged KV pool,
-including admission pressure and preemption-by-swap.
+"""Serving example: the layered stack (scheduler / swap store / engine)
+under admission pressure, preemption-by-swap and COW prefix sharing.
 
     PYTHONPATH=src python examples/serve_paged.py
 """
@@ -17,20 +17,24 @@ def main():
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
 
-    # a pool deliberately too small for all requests at once: the engine
-    # queues, admits by free-block count, and swaps under pressure
+    # a pool deliberately too small for all requests at once: the
+    # scheduler queues, admits FCFS by free-block count (1 block kept as
+    # growth headroom), and the engine swaps blocks under pressure
     eng = Engine(model, params, slots=2, max_seq=64, num_blocks=20,
-                 eos_id=-1)
+                 eos_id=-1, watermark=1)
     rng = np.random.RandomState(0)
+    base = rng.randint(2, cfg.vocab_size, size=12)
     for i in range(6):
-        plen = int(rng.randint(4, 12))
-        eng.submit(Request(rid=i, prompt=rng.randint(2, cfg.vocab_size,
-                                                     size=plen),
-                           max_new=8))
+        if i in (2, 3):            # admitted together -> COW prefix fork
+            pr = base.copy()
+        else:
+            plen = int(rng.randint(4, 12))
+            pr = rng.randint(2, cfg.vocab_size, size=plen)
+        eng.submit(Request(rid=i, prompt=pr, max_new=8))
     print(f"submitted 6 requests into a {eng.mgr.allocator.num_blocks}"
-          f"-block pool, 2 slots")
+          f"-block pool, 2 slots (requests 2 and 3 share one prompt)")
 
-    while eng.queue or eng.running or len(eng.preempted):
+    while eng.sched.has_work or eng.running:
         eng.step()
         if eng.steps % 4 == 0:
             print(f"  step {eng.steps:3d}: running={len(eng.running)} "
@@ -42,6 +46,10 @@ def main():
     for req in sorted(eng.done, key=lambda r: r.rid):
         print(f"request {req.rid}: prompt[{len(req.prompt)}] -> "
               f"{req.generated}")
+    st = eng.stats
+    print(f"prefix-share hits: {st['prefix_hits']}, COW copies: "
+          f"{st['cow_copies']}, swap bytes out/in: "
+          f"{st['swap_out_bytes']}/{st['swap_in_bytes']}")
     assert len(eng.done) == 6
     print("all requests completed; peak pool utilization bounded by the "
           "block allocator (no overcommit).")

@@ -158,11 +158,8 @@ class BlockPool:
         return jnp.take(self.data, block, axis=0, mode="clip")
 
     def write(self, block, payload) -> "BlockPool":
-        """Scatter one or many whole blocks."""
-        block = jnp.asarray(block)
-        if block.ndim == 0:
-            return BlockPool(self.data.at[block].set(payload))
-        return BlockPool(self.data.at[block].set(payload))
+        """Scatter one or many whole blocks (scalar or int-array ids)."""
+        return BlockPool(self.data.at[jnp.asarray(block)].set(payload))
 
     def copy_block(self, src, dst) -> "BlockPool":
         """Physical block copy (COW fulfilment / defrag / swap-in)."""

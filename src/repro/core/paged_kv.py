@@ -69,6 +69,20 @@ class PagedKVConfig:
         per = int(np.prod(self.token_shape()))
         return streams * per * jnp.dtype(self.dtype).itemsize
 
+    def swap_nbytes_per_block(self) -> int:
+        """Device<->host bytes to move ONE block (all layers, all streams).
+
+        This is the unit the serving swap path is held to: a preempted
+        sequence holding n blocks moves exactly n * this many bytes --
+        never a function of num_blocks (pool size).
+        """
+        per = int(np.prod(self.token_shape()))   # k (or latent) stream
+        width = per if self.latent else 2 * per
+        if self.latent and self.latent_rope:
+            width += self.latent_rope            # shared rope-key stream
+        return (self.num_layers * self.block_tokens * width
+                * jnp.dtype(self.dtype).itemsize)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -137,9 +151,8 @@ class PagedKVCache:
         with seq_lens advanced by 1.
         """
         phys, off = self._addr(self.seq_lens)
-        b = jnp.arange(self.batch)
         k_pool = self.k_pool.at[:, phys, off].set(
-            jnp.moveaxis(k_new, 1, 1).astype(self.config.dtype))
+            k_new.astype(self.config.dtype))
         v_pool = self.v_pool
         if v_new is not None:
             v_pool = self.v_pool.at[:, phys, off].set(v_new.astype(self.config.dtype))
@@ -217,9 +230,11 @@ class PagedKVManager:
     """Host-side allocator policy for the cache (the 'OS').
 
     Owns a BlockAllocator over the pool; grows/frees per-sequence tables
-    as the engine admits, extends, preempts, and finishes requests.
-    Swap-out/in moves whole blocks to/from a host-side store at block
-    granularity -- the paper's application-controlled swapping.
+    as the engine admits, extends, preempts, and finishes requests.  The
+    manager deals ONLY in block ids -- payload transfers (swap-out/in at
+    block granularity, COW block copies) are the caller's job, so that
+    bytes moved always scale with blocks held, never with pool size
+    (see ``serve/swap.py`` and ``kernels/block_copy.py``).
     """
 
     def __init__(self, config: PagedKVConfig):
@@ -227,7 +242,9 @@ class PagedKVManager:
         self.allocator = BlockAllocator(config.num_blocks)
         # block ids per live sequence (host view of the device tables)
         self.tables: dict[int, List[int]] = {}
-        self.swapped: dict[int, Tuple[List[int], np.ndarray, Optional[np.ndarray]]] = {}
+        # seq_id -> number of blocks held at swap-out time (payload lives
+        # in the caller's host block store)
+        self.swapped: dict[int, int] = {}
 
     # -- admission/extension ------------------------------------------
     def blocks_needed(self, tokens: int) -> int:
@@ -253,36 +270,78 @@ class PagedKVManager:
     def release(self, seq_id: int) -> None:
         self.allocator.free_many(self.tables.pop(seq_id))
 
-    def fork(self, parent_id: int, child_id: int, shared_tokens: int) -> None:
-        """COW prefix sharing: child aliases parent's full prefix blocks."""
+    def reserve_block(self) -> int:
+        """Permanently claim one block (never handed to a sequence).
+
+        The engine points masked prefill-table entries at this 'sink'
+        block so padded rows and COW-aliased prefixes have a harmless
+        scatter target.
+        """
+        return self.allocator.alloc()
+
+    # -- COW prefix sharing ---------------------------------------------
+    def fork(self, parent_id: int, child_id: int,
+             shared_tokens: int) -> List[int]:
+        """COW: child aliases EVERY parent block covering shared_tokens.
+
+        A trailing partially-filled block is aliased too; the first
+        divergent write into it goes through ``ensure_writable`` which
+        fulfils the copy-on-write (paper Table 1 row 'Copy-on-Write').
+        Callers that only want fully-shared blocks pass shared_tokens
+        rounded down to a block multiple.
+        """
         bt = self.config.block_tokens
-        shared = shared_tokens // bt  # only fully-shared blocks alias
+        nshared = -(-shared_tokens // bt)
         parent = self.tables[parent_id]
-        child = [self.allocator.share(b) for b in parent[:shared]]
+        if nshared > len(parent):
+            raise ValueError(
+                f"fork of {shared_tokens} tokens needs {nshared} blocks, "
+                f"parent holds {len(parent)}")
+        child = [self.allocator.share(b) for b in parent[:nshared]]
         self.tables[child_id] = child
+        return child
+
+    def ensure_writable(self, seq_id: int,
+                        token_pos: int) -> Optional[Tuple[int, int]]:
+        """COW write barrier for the block covering ``token_pos``.
+
+        If that block is shared (refcount > 1) the sequence gets a fresh
+        private block in its table and ``(src, dst)`` is returned -- the
+        caller MUST copy the payload src -> dst on device (one
+        ``block_copy`` DMA) before writing.  Returns None when the block
+        is already exclusively owned.
+        """
+        tb = token_pos // self.config.block_tokens
+        blk = self.tables[seq_id][tb]
+        if self.allocator.refcount(blk) == 1:
+            return None
+        fresh, _ = self.allocator.fork_for_write(blk)
+        self.tables[seq_id][tb] = fresh
+        return blk, fresh
 
     # -- swapping ---------------------------------------------------------
-    def swap_out(self, seq_id: int, k_pool: np.ndarray,
-                 v_pool: Optional[np.ndarray]) -> None:
-        """Copy a preempted sequence's blocks to host store; free them."""
-        blocks = self.tables.pop(seq_id)
-        idx = np.asarray(blocks, dtype=np.int32)
-        k_save = np.asarray(k_pool[:, idx])
-        v_save = None if v_pool is None else np.asarray(v_pool[:, idx])
-        self.allocator.free_many(blocks)
-        self.swapped[seq_id] = (blocks, k_save, v_save)
+    def swap_out(self, seq_id: int) -> List[int]:
+        """Release a preempted sequence's device blocks; return their ids.
 
-    def swap_in(self, seq_id: int):
-        """Reallocate (anywhere!) and return (new_ids, payloads) to write.
+        Payload transfer is the caller's job (gather the returned ids
+        BEFORE reusing the pool -- ``serve/swap.py`` does both in one
+        motion).  Only the block COUNT is remembered here.
+        """
+        blocks = self.tables.pop(seq_id)
+        self.allocator.free_many(blocks)
+        self.swapped[seq_id] = len(blocks)
+        return blocks
+
+    def swap_in(self, seq_id: int) -> List[int]:
+        """Reallocate (anywhere!) and return the new block ids to fill.
 
         The new physical blocks need not match the old ones -- block
         tables absorb the relocation, which is the paper's 'Relocation /
         Migration' row implemented in software.
         """
-        old_ids, k_save, v_save = self.swapped.pop(seq_id)
-        new_ids = self.allocator.alloc_many(len(old_ids))
+        new_ids = self.allocator.alloc_many(self.swapped.pop(seq_id))
         self.tables[seq_id] = new_ids
-        return new_ids, k_save, v_save
+        return new_ids
 
     def device_table(self, seq_id: int) -> np.ndarray:
         t = np.full(self.config.max_blocks_per_seq, NULL_BLOCK, np.int32)

@@ -27,6 +27,10 @@ def _copy_kernel(src_ref, dst_ref, pool_ref, out_ref):
     out_ref[...] = pool_ref[...]
 
 
+def _gather_kernel(idx_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
 def block_copy(pool: jax.Array, src: jax.Array, dst: jax.Array,
                *, interpret: bool = False) -> jax.Array:
     """pool: (NB, *block); src/dst: (n,) int32 -> pool with plan applied.
@@ -54,3 +58,62 @@ def block_copy(pool: jax.Array, src: jax.Array, dst: jax.Array,
         input_output_aliases={2: 0},
     )(src, dst, pool)
     return moved
+
+
+def gather_blocks(pool: jax.Array, idx: jax.Array,
+                  *, interpret: bool = False) -> jax.Array:
+    """pool: (L, NB, *block); idx: (n,) int32 -> (L, n, *block).
+
+    Grid step (l, i) DMAs layer l of block ``idx[i]`` into out[l, i]:
+    the device half of swap-out.  The result is COMPACT -- one
+    device->host copy of it moves ``n * swap-block`` bytes, so transfer
+    cost scales with blocks held, never pool size (paper Table 1 row
+    'Swapping' done in software).
+    """
+    L, n = pool.shape[0], idx.shape[0]
+    blk = pool.shape[2:]
+    ones = (1, 1) + blk
+    zeros = tuple(0 for _ in blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L, n),
+        in_specs=[pl.BlockSpec(ones, lambda l, i, s: (l, s[i]) + zeros)],
+        out_specs=pl.BlockSpec(ones, lambda l, i, s: (l, i) + zeros),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, n) + blk, pool.dtype),
+        interpret=interpret,
+    )(idx, pool)
+
+
+def copy_pool_blocks(pool: jax.Array, src: jax.Array, dst: jax.Array,
+                     *, interpret: bool = False) -> jax.Array:
+    """pool: (L, NB, *block); copy block src[i] -> dst[i] on ALL layers.
+
+    The layer-stacked twin of ``block_copy``: one (src, dst) plan entry
+    moves a whole KV block across the L axis.  Used to fulfil COW when a
+    sequence first writes into a shared block (``fork_for_write``).
+    src/dst must be disjoint as sets (the allocator guarantees it: dst
+    ids come fresh off the free list).
+    """
+    L, n = pool.shape[0], src.shape[0]
+    blk = pool.shape[2:]
+    ones = (1, 1) + blk
+    zeros = tuple(0 for _ in blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L, n),
+        in_specs=[pl.BlockSpec(ones, lambda l, i, s, d: (l, s[i]) + zeros)],
+        out_specs=pl.BlockSpec(ones, lambda l, i, s, d: (l, d[i]) + zeros),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+        input_output_aliases={2: 0},
+    )(src, dst, pool)

@@ -66,6 +66,20 @@ def block_copy(pool, src, dst, interpret: Optional[bool] = None):
                           interpret=_use_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks(pool, idx, interpret: Optional[bool] = None):
+    """Compact (L, n, *block) gather of blocks ``idx`` (swap-out path)."""
+    return _bc.gather_blocks(pool, idx,
+                             interpret=_use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def copy_pool_blocks(pool, src, dst, interpret: Optional[bool] = None):
+    """Layer-stacked block copy plan (COW fulfilment / relocation)."""
+    return _bc.copy_pool_blocks(pool, src, dst,
+                                interpret=_use_interpret(interpret))
+
+
 # re-export oracles for convenience
 tree_gather_ref = kref.tree_gather_ref
 tree_block_sum_ref = kref.tree_block_sum_ref

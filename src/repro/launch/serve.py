@@ -1,7 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
 
-Runs the continuous-batching engine over the paged pool on host devices
-with synthetic request traffic; reports throughput and pool utilization.
+Runs the layered serving stack (scheduler policy / swap store / engine
+mechanism) over the paged pool with synthetic request traffic; reports
+throughput, pool utilization, swap traffic and prefix-share hits.
+
+``--shared-frac`` controls what fraction of requests reuse one of a few
+base prompts (possibly extended), exercising COW prefix sharing the way
+parallel sampling / few-shot serving does.
 """
 
 from __future__ import annotations
@@ -17,6 +22,24 @@ from repro.models.api import build_model
 from repro.serve.engine import Engine, Request
 
 
+def make_traffic(rng, n, vocab, max_seq, shared_frac=0.0, n_bases=2):
+    """Synthetic prompts; ``shared_frac`` of them share block prefixes."""
+    cap = min(32, max_seq // 2)
+    bases = [rng.randint(2, vocab, size=int(rng.randint(cap // 2, cap)))
+             for _ in range(n_bases)]
+    prompts = []
+    for _ in range(n):
+        if rng.rand() < shared_frac:
+            b = bases[int(rng.randint(len(bases)))]
+            extra = int(rng.randint(0, 6))
+            prompts.append(np.concatenate(
+                [b, rng.randint(2, vocab, size=extra)]) if extra else b.copy())
+        else:
+            prompts.append(rng.randint(2, vocab,
+                                       size=int(rng.randint(4, cap))))
+    return prompts
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -26,6 +49,12 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--num-blocks", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--watermark", type=int, default=0,
+                    help="free blocks kept as growth headroom")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefilled per step")
+    ap.add_argument("--shared-frac", type=float, default=0.25,
+                    help="fraction of requests sharing a base prompt")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -36,21 +65,26 @@ def main(argv=None):
     params, _ = model.init(jax.random.PRNGKey(args.seed))
 
     eng = Engine(model, params, slots=args.slots, max_seq=args.max_seq,
-                 num_blocks=args.num_blocks, eos_id=-1)
+                 num_blocks=args.num_blocks, eos_id=-1,
+                 watermark=args.watermark,
+                 prefill_budget=args.prefill_budget)
     rng = np.random.RandomState(args.seed)
-    for i in range(args.requests):
-        plen = int(rng.randint(4, min(32, args.max_seq // 2)))
-        eng.submit(Request(rid=i,
-                           prompt=rng.randint(2, cfg.vocab_size, size=plen),
-                           max_new=args.max_new))
+    prompts = make_traffic(rng, args.requests, cfg.vocab_size, args.max_seq,
+                           shared_frac=args.shared_frac)
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=pr, max_new=args.max_new))
     t0 = time.time()
     done = eng.run(max_steps=10_000)
     dt = time.time() - t0
+    st = eng.stats
     toks = sum(len(r.generated) for r in done)
     print(f"served {len(done)}/{args.requests} requests, {toks} tokens in "
           f"{dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s), "
           f"{eng.steps} engine steps, final pool util "
           f"{eng.mgr.utilization:.0%}")
+    print(f"prefix-share hits {st['prefix_hits']}, COW copies "
+          f"{st['cow_copies']}, preemptions {st['preemptions']}, "
+          f"swap out/in {st['swap_out_bytes']}/{st['swap_in_bytes']} bytes")
     return done
 
 

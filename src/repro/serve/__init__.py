@@ -1,0 +1,9 @@
+"""Layered serving stack: policy (scheduler) / host store (swap) /
+mechanism (engine).  See serve/README.md for the layering contract."""
+
+from repro.serve.engine import Engine
+from repro.serve.scheduler import Request, Scheduler, StepPlan
+from repro.serve.swap import HostBlockStore, SwapStats
+
+__all__ = ["Engine", "Request", "Scheduler", "StepPlan",
+           "HostBlockStore", "SwapStats"]

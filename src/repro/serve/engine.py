@@ -1,57 +1,57 @@
-"""Continuous-batching serving engine over the paged KV pool.
+"""Serving mechanism layer: executes scheduler decisions on the device.
 
-The paper's memory manager as an inference server:
-  * admission control by FREE BLOCK COUNT (never by sequence count) --
-    a request is admitted iff its prompt's blocks fit the pool;
-  * per-step table growth: one fresh block per sequence each
-    ``block_tokens`` decode steps (the split-stack 'check on push');
-  * preemption by block swap-out to a host-side store and later
-    swap-in to *different* physical blocks (relocation through the
-    table, paper Table 1 rows 'Relocation' and 'Swapping');
-  * COW prefix sharing for requests that fork a common prompt.
+The serving stack is three layers (see ``serve/README.md``):
 
-The engine runs decode for a fixed slot count B (padding empty slots),
-which is how a TPU serving binary keeps one compiled shape.
+  * ``scheduler.py`` -- POLICY: FCFS admission under a free-block
+    watermark, LIFO preemption, per-step prefill budgeting.  No jax.
+  * ``swap.py`` -- HOST STORE: block-granular device<->host transfers
+    whose cost scales with blocks held, never pool size.
+  * this module -- MECHANISM: one decode step for a fixed slot count B
+    (padding empty slots, how a TPU serving binary keeps one compiled
+    shape), ONE padded batched prefill for all of a step's admissions,
+    COW prefix sharing, and the bookkeeping that keeps host tables and
+    device state in lockstep.
+
+COW prefix sharing end-to-end: every admitted prompt registers its
+block-aligned prefixes in a hash map; a later prompt that matches forks
+(`PagedKVManager.fork``) instead of re-allocating, aliasing whole blocks
+-- including a partially-filled tail block when the new prompt is an
+exact prefix of (or equal to) the parent's.  The first divergent write
+into a shared block hits the ``ensure_writable`` barrier, which fulfils
+the copy (``fork_for_write`` + one device block copy).  Relocation,
+swapping and COW are exactly the paper's Table 1 rows, re-created in
+software over a paged pool.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockpool import OutOfBlocksError
+from repro.core.blockpool import NULL_BLOCK, OutOfBlocksError
 from repro.core.paged_kv import PagedKVCache, PagedKVManager
-from repro.core.stack import BlockStack
+from repro.kernels import ops
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.swap import HostBlockStore
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (prompt_len,)
-    max_new: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-    state: str = "queued"              # queued|running|preempted|done
-    slot: int = -1
-
-    @property
-    def tokens_held(self) -> int:
-        return len(self.prompt) + len(self.generated)
+__all__ = ["Engine", "Request"]
 
 
 class Engine:
-    """Slot-based continuous batching.
+    """Slot-based continuous batching over the paged KV pool.
 
     model must expose prefill(params, batch, cache, lengths) and
     decode_step(params, tokens, cache); cache is a PagedKVCache (plain
-    decoder LMs).  greedy sampling.
+    decoder LMs).  Greedy sampling.
     """
 
     def __init__(self, model, params, *, slots: int, max_seq: int,
-                 num_blocks: int, eos_id: int = 1):
+                 num_blocks: int, eos_id: int = 1, watermark: int = 0,
+                 prefill_budget: Optional[int] = None,
+                 share_prefixes: bool = True):
         self.model = model
         self.params = params
         self.slots = slots
@@ -61,125 +61,283 @@ class Engine:
                                 batch=slots)
         self.cache = PagedKVCache.create(kvcfg, slots)
         self.mgr = PagedKVManager(kvcfg)
-        self.queue: List[Request] = []
+        # write sink: masked prefill-table entries (padded rows, COW-
+        # aliased prefixes) scatter here instead of into live blocks
+        self.sink = self.mgr.reserve_block()
+        self.sched = Scheduler(watermark=watermark,
+                               prefill_budget=prefill_budget)
+        self.store = HostBlockStore()
         self.running: Dict[int, Request] = {}   # slot -> req
-        self.preempted = BlockStack(block_size=256)  # LIFO resume order
         self.done: List[Request] = []
+        self.share_prefixes = share_prefixes
+        self._prefix_map: Dict[Tuple[int, bytes], List[int]] = {}
+        self._live_prompts: Dict[int, np.ndarray] = {}
         self._next_tok = np.zeros(slots, np.int64)
         self.steps = 0
+        self.prefix_hits = 0
+        self.cow_copies = 0
+        self.preemptions = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
 
-    # ---------------- host-side bookkeeping ----------------
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # ---------------- intake / compat views ----------------
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
 
-    def _free_slot(self) -> Optional[int]:
-        for s in range(self.slots):
-            if s not in self.running:
-                return s
-        return None
+    @property
+    def queue(self) -> List[Request]:
+        return self.sched.queue
 
-    def _sync_tables(self):
-        tables = np.stack([
-            self.mgr.device_table(self.running[s].rid) if s in self.running
-            else np.full(self.cache.config.max_blocks_per_seq, -1, np.int32)
-            for s in range(self.slots)])
-        self.cache = dataclasses.replace(
-            self.cache, block_tables=jnp.asarray(tables))
+    @property
+    def preempted(self):
+        return self.sched.preempted
 
-    def _admit_one(self) -> bool:
-        cand = None
-        if len(self.preempted):
-            cand = self.preempted.pop()       # resume preempted first
-        elif self.queue:
-            cand = self.queue.pop(0)
-        if cand is None:
-            return False
-        slot = self._free_slot()
-        need = cand.tokens_held + cand.max_new - len(cand.generated)
-        if slot is None or not self.mgr.can_admit(need):
-            # put back where it came from
-            if cand.state == "preempted":
-                self.preempted.push(cand)
-            else:
-                self.queue.insert(0, cand)
-            return False
-        if cand.state == "preempted":
-            new_ids, k_save, v_save = self.mgr.swap_in(cand.rid)
-            idx = jnp.asarray(np.asarray(new_ids, np.int32))
-            k_pool = self.cache.k_pool.at[:, idx].set(jnp.asarray(k_save))
-            v_pool = self.cache.v_pool
-            if v_save is not None:
-                v_pool = self.cache.v_pool.at[:, idx].set(jnp.asarray(v_save))
-            self.cache = dataclasses.replace(self.cache, k_pool=k_pool,
-                                             v_pool=v_pool)
-            self._resume_prefill(cand, slot, reuse=True)
-        else:
-            self.mgr.admit(cand.rid, need)
-            self._resume_prefill(cand, slot, reuse=False)
-        cand.state = "running"
-        cand.slot = slot
-        self.running[slot] = cand
-        return True
-
-    def _resume_prefill(self, req: Request, slot: int, *, reuse: bool):
-        """Prefill req's full history into its blocks (single-sequence)."""
-        toks = np.concatenate([req.prompt, np.asarray(req.generated,
-                                                      np.int64)])
+    # ---------------- prefix sharing (COW) ----------------
+    def _register_prefix(self, req: Request) -> None:
+        if not self.share_prefixes:
+            return
+        pr = np.ascontiguousarray(np.asarray(req.prompt, np.int64))
         bt = self.cache.config.block_tokens
-        pad = (-len(toks)) % bt
-        padded = np.pad(toks, (0, pad))
-        tbl = self.mgr.device_table(req.rid)
-        seq = jnp.asarray(padded)[None]
-        # single-sequence prefill via a temp 1-slot cache view
-        one = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
-                           jnp.asarray(tbl)[None],
-                           jnp.zeros((1,), jnp.int32), self.cache.config)
-        last, one = self.model.prefill(
-            self.params, {"tokens": seq}, one,
-            jnp.asarray([len(toks)], jnp.int32))
-        self.cache = dataclasses.replace(
-            self.cache, k_pool=one.k_pool, v_pool=one.v_pool)
-        self._next_tok[slot] = int(jnp.argmax(last[0]))
-        lens = np.array(self.cache.seq_lens)
-        lens[slot] = len(toks)
-        self.cache = dataclasses.replace(self.cache,
-                                         seq_lens=jnp.asarray(lens))
+        for k in range(1, len(pr) // bt + 1):
+            rids = self._prefix_map.setdefault((k, pr[: k * bt].tobytes()),
+                                               [])
+            if req.rid not in rids:
+                rids.append(req.rid)
+        self._live_prompts[req.rid] = pr
 
-    def preempt_lowest(self):
-        """Swap out the most recently admitted request (LIFO)."""
+    def _deregister_prefix(self, req: Request) -> None:
+        pr = self._live_prompts.pop(req.rid, None)
+        if pr is None:
+            return
+        bt = self.cache.config.block_tokens
+        for k in range(1, len(pr) // bt + 1):      # only this rid's keys
+            key = (k, pr[: k * bt].tobytes())
+            rids = self._prefix_map.get(key)
+            if rids is None:
+                continue
+            if req.rid in rids:
+                rids.remove(req.rid)
+            if not rids:
+                del self._prefix_map[key]
+
+    def _find_parent(self, req: Request) -> Tuple[Optional[int], int]:
+        """Longest live shared prefix: (parent rid, shareable tokens).
+
+        Shares whole blocks of the common prefix; additionally shares
+        the parent's partially-filled tail block when the new prompt is
+        entirely contained in the parent's (divergent writes into it are
+        COW-resolved later).
+        """
+        if not self.share_prefixes:
+            return None, 0
+        pr = np.ascontiguousarray(np.asarray(req.prompt, np.int64))
+        bt = self.cache.config.block_tokens
+        for k in range(len(pr) // bt, 0, -1):
+            for rid in self._prefix_map.get((k, pr[: k * bt].tobytes()), []):
+                if rid == req.rid or rid not in self.mgr.tables \
+                        or rid not in self._live_prompts:
+                    continue
+                parent = self._live_prompts[rid]
+                n = min(len(pr), len(parent))
+                neq = np.nonzero(pr[:n] != parent[:n])[0]
+                common = int(neq[0]) if len(neq) else n
+                shared = (common if common == len(pr)
+                          else (common // bt) * bt)
+                if shared > 0:
+                    return rid, shared
+        return None, 0
+
+    # ---------------- admission ----------------
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self.running]
+
+    def _admit(self) -> None:
+        free = self._free_slots()
+        plan = self.sched.plan_admissions(len(free), self.mgr,
+                                          num_running=len(self.running))
+        for req in plan.resume:
+            slot = free.pop(0)
+            new_ids = self.mgr.swap_in(req.rid)
+            self.cache = self.store.swap_in(req.rid, self.cache, new_ids)
+            self._next_tok[slot] = req.pending_tok
+            self._place(req, slot)
+        batch: List[Tuple[int, Request, int]] = []
+        for req in plan.admit:
+            slot = free.pop(0)
+            parent, shared = self._find_parent(req)
+            if parent is not None:
+                self.mgr.fork(parent, req.rid, shared)
+                self.mgr.extend(req.rid, len(req.prompt))
+                self.prefix_hits += 1
+            else:
+                self.mgr.admit(req.rid, len(req.prompt))
+                shared = 0
+            self._place(req, slot)
+            batch.append((slot, req, shared))
+        if batch:
+            self._batched_prefill(batch)
+
+    def _place(self, req: Request, slot: int) -> None:
+        req.state = "running"
+        req.slot = slot
+        self.running[slot] = req
+        self._register_prefix(req)
+
+    def _batched_prefill(self, batch: List[Tuple[int, Request, int]]) -> None:
+        """ONE padded prefill call for all of this step's admissions.
+
+        Rows are padded to the longest (block-aligned) prompt.  Each
+        row's prefill table redirects to the sink block both (a) entries
+        beyond the row's own blocks (padding) and (b) COW-aliased prefix
+        blocks, whose KV already exists in the parent's blocks -- so the
+        compute runs full-width but writes land only in blocks the row
+        privately owns.
+        """
+        cfg = self.cache.config
+        bt = cfg.block_tokens
+        lens = [req.tokens_held for _, req, _ in batch]
+        S = -(-max(lens) // bt) * bt
+        toks = np.zeros((len(batch), S), np.int64)
+        tables = np.full((len(batch), cfg.max_blocks_per_seq), self.sink,
+                         np.int32)
+        for row, (slot, req, shared) in enumerate(batch):
+            toks[row, : lens[row]] = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(req.generated, np.int64)])
+            tbl = self.mgr.device_table(req.rid)
+            keep = tbl != NULL_BLOCK
+            keep[: -(-shared // bt) if shared else 0] = False
+            tables[row, keep] = tbl[keep]
+        view = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
+                            jnp.asarray(tables),
+                            jnp.zeros((len(batch),), jnp.int32), cfg)
+        last, view = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, view,
+            jnp.asarray(lens, jnp.int32))
+        self.cache = dataclasses.replace(self.cache, k_pool=view.k_pool,
+                                         v_pool=view.v_pool)
+        nxt = np.asarray(jnp.argmax(last, axis=-1))
+        for row, (slot, req, _) in enumerate(batch):
+            self._next_tok[slot] = nxt[row]
+        self.prefill_tokens += sum(lens)
+
+    # ---------------- preemption / swap-out ----------------
+    def _preempt_slot(self, slot: int) -> None:
+        req = self.running.pop(slot)
+        req.pending_tok = int(self._next_tok[slot])
+        # freeing ids before the gather is safe: the gather reads the
+        # current immutable pool snapshot, not future reuse of the ids
+        self.store.swap_out(req.rid, self.cache, self.mgr.swap_out(req.rid))
+        self._deregister_prefix(req)
+        req.slot = -1
+        self.sched.on_preempt(req)
+        self.preemptions += 1
+
+    def preempt_latest(self) -> None:
+        """Swap out the most recently ADMITTED running request (LIFO).
+
+        The victim is keyed on ``admit_order`` -- the scheduler's
+        monotonic admission stamp -- not on ``rid`` (submission order):
+        a request submitted first but resumed last is still the first
+        evicted.
+        """
         if not self.running:
             return
-        slot = max(self.running, key=lambda s: self.running[s].rid)
-        req = self.running.pop(slot)
-        self.mgr.swap_out(req.rid, np.asarray(self.cache.k_pool),
-                          None if self.cache.v_pool is None
-                          else np.asarray(self.cache.v_pool))
-        req.state = "preempted"
-        self.preempted.push(req)
-        lens = np.array(self.cache.seq_lens)
-        lens[slot] = 0
-        self.cache = dataclasses.replace(self.cache,
-                                         seq_lens=jnp.asarray(lens))
+        self._preempt_slot(self.sched.pick_victim(self.running))
+
+    # ---------------- device-state sync ----------------
+    def _sync_device_state(self) -> None:
+        """Derive device tables AND seq_lens from host truth each step.
+
+        Empty slots map to the SINK block, not NULL: jax scatter WRAPS
+        negative indices, so a NULL (-1) entry would silently clobber
+        the pool's last block on every padded decode write.
+        """
+        cfg = self.cache.config
+        tables = np.full((self.slots, cfg.max_blocks_per_seq), self.sink,
+                         np.int32)
+        lens = np.zeros(self.slots, np.int32)
+        for slot, req in self.running.items():
+            tables[slot] = self.mgr.device_table(req.rid)
+            lens[slot] = req.tokens_held
+        self.cache = dataclasses.replace(
+            self.cache, block_tables=jnp.asarray(tables),
+            seq_lens=jnp.asarray(lens))
 
     # ---------------- main loop ----------------
-    def step(self):
+    def _grow_for_next_token(self) -> None:
+        """Ensure every running seq can write this step's token; under
+        pressure, preempt LIFO victims until it can (possibly itself)."""
+        for slot in sorted(self.running):
+            if slot not in self.running:
+                continue
+            req = self.running[slot]
+            while True:
+                try:
+                    self.mgr.extend(req.rid, req.tokens_held + 1)
+                    break
+                except OutOfBlocksError:
+                    victim = self.sched.pick_victim(self.running)
+                    self._preempt_slot(victim)
+                    if victim == slot:
+                        break
+
+    def _apply_block_copy(self, src: int, dst: int) -> None:
+        """One COW fulfilment DMA per pool stream (kernels.block_copy)."""
+        s = jnp.asarray([src], jnp.int32)
+        d = jnp.asarray([dst], jnp.int32)
+        k_pool = ops.copy_pool_blocks(self.cache.k_pool, s, d)
+        v_pool = self.cache.v_pool
+        if v_pool is not None:
+            v_pool = ops.copy_pool_blocks(v_pool, s, d)
+        self.cache = dataclasses.replace(self.cache, k_pool=k_pool,
+                                         v_pool=v_pool)
+        self.cow_copies += 1
+
+    def _cow_barrier(self) -> None:
+        """Private-block guarantee for every position written this step.
+
+        The copy-target block is a DEFERRED claim the admission check
+        could not reserve (a forked child is charged its worst case but
+        allocates nothing while sharing), so like table growth this can
+        hit an exhausted pool: resolve by LIFO preemption, possibly of
+        the writer itself.  Each fulfilment copy is applied IMMEDIATELY
+        so a later preemption in the same pass gathers settled blocks.
+        """
+        for slot in sorted(self.running):
+            if slot not in self.running:
+                continue
+            req = self.running[slot]
+            while True:
+                try:
+                    plan = self.mgr.ensure_writable(req.rid,
+                                                    req.tokens_held)
+                    break
+                except OutOfBlocksError:
+                    victim = self.sched.pick_victim(self.running)
+                    self._preempt_slot(victim)
+                    if victim == slot:
+                        plan = None
+                        break
+            if slot in self.running and plan is not None:
+                self._apply_block_copy(*plan)
+
+    def step(self) -> None:
         """Admit what fits, grow tables, run one decode step."""
-        while self._admit_one():
-            pass
+        self._admit()
+        self.steps += 1
         if not self.running:
             return
-        # ensure capacity for the token each running seq is about to write
-        for slot, req in list(self.running.items()):
-            try:
-                self.mgr.extend(req.rid, req.tokens_held + 1)
-            except OutOfBlocksError:
-                self.preempt_lowest()
-        self._sync_tables()
+        self._grow_for_next_token()
+        if not self.running:
+            return
+        self._cow_barrier()
+        self._sync_device_state()
         tokens = jnp.asarray(self._next_tok)
         logits, self.cache = self.model.decode_step(self.params, tokens,
                                                     self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        lens = np.array(self.cache.seq_lens)
+        self.decode_tokens += len(self.running)
         for slot, req in list(self.running.items()):
             req.generated.append(int(tokens[slot]))
             self._next_tok[slot] = nxt[slot]
@@ -187,18 +345,47 @@ class Engine:
                 req.state = "done"
                 self.done.append(req)
                 self.mgr.release(req.rid)
+                self._deregister_prefix(req)
                 del self.running[slot]
-                lens[slot] = 0
-        # idle slots must not advance
-        for s in range(self.slots):
-            if s not in self.running:
-                lens[s] = 0
-        self.cache = dataclasses.replace(self.cache,
-                                         seq_lens=jnp.asarray(lens))
-        self.steps += 1
 
-    def run(self, max_steps: int = 10_000):
-        while (self.queue or self.running or len(self.preempted)) and \
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.sched.has_work or self.running) and \
                 self.steps < max_steps:
             self.step()
         return self.done
+
+    # ---------------- introspection ----------------
+    @property
+    def stats(self) -> Dict[str, float]:
+        st = self.store.stats
+        return {
+            "steps": self.steps,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "prefix_hits": self.prefix_hits,
+            "cow_copies": self.cow_copies,
+            "preemptions": self.preemptions,
+            "swap_outs": st.swap_outs,
+            "swap_ins": st.swap_ins,
+            "swap_out_bytes": st.swap_out_bytes,
+            "swap_in_bytes": st.swap_in_bytes,
+            "pool_utilization": self.mgr.utilization,
+        }
+
+    def check_consistency(self) -> None:
+        """Invariant audit (used by tests after every step)."""
+        alloc = self.mgr.allocator
+        assert alloc.num_used + alloc.num_free == alloc.num_blocks
+        assert alloc.refcount(self.sink) == 1
+        bt = self.cache.config.block_tokens
+        lens = np.asarray(self.cache.seq_lens)
+        for slot, req in self.running.items():
+            assert req.state == "running" and req.slot == slot
+            tbl = self.mgr.tables[req.rid]
+            assert len(tbl) * bt >= req.tokens_held
+            assert all(alloc.is_allocated(b) for b in tbl)
+            assert lens[slot] == req.tokens_held, (slot, lens[slot],
+                                                   req.tokens_held)
+        assert len(self.store) == len(self.mgr.swapped)
+        for rid in self.mgr.swapped:
+            assert rid in self.store

@@ -1,0 +1,161 @@
+"""Serving policy layer: WHAT runs next, never HOW it runs.
+
+This module is deliberately device-free (no jax imports): it decides
+admissions, resumes and preemption victims from block-count arithmetic
+only, and the engine executes those decisions against the pool.  The
+split mirrors the paper's architecture -- a tiny software memory manager
+making policy over fixed-size blocks, with mechanism (DMA, scatter,
+prefill) kept elsewhere.
+
+Policies implemented:
+
+* **FCFS admission with a free-block watermark** -- queued requests are
+  admitted in submission order, and only while admission leaves at least
+  ``watermark`` blocks free (headroom for the per-``block_tokens``-steps
+  growth of already-running sequences).  A request is only ever admitted
+  when its WORST-CASE footprint (prompt + max_new tokens) currently
+  fits: blocks are handed out lazily as the sequence grows, but the
+  up-front check plus LIFO preemption guarantees the oldest running
+  sequence can always reclaim enough blocks to finish.
+* **LIFO preemption** -- the victim is the most recently *admitted*
+  request (``admit_order``, a monotonic counter stamped on every
+  admission including resumes -- NOT the request id, which is submission
+  order).  Newest-first eviction is what makes the progress argument
+  above work.
+* **Chunked/batched prefill budgeting** -- each step admits at most
+  ``prefill_budget`` prompt tokens (the engine prefills all of a step's
+  admissions in ONE padded batched call), bounding per-step latency
+  spikes.  The budget never blocks the first admission of an otherwise
+  idle engine.
+
+Resumed requests are preferred over new ones and pop LIFO off a
+``BlockStack`` (the paper's split stack backing a runtime structure).
+They carry their saved KV payload, so they cost no prefill budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.stack import BlockStack
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,)
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"              # queued|running|preempted|done
+    slot: int = -1
+    admit_order: int = -1              # monotonic admission stamp (LIFO key)
+    pending_tok: int = -1              # next input token saved at preemption
+
+    @property
+    def tokens_held(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def max_tokens(self) -> int:
+        """Worst-case footprint in tokens (prompt + full generation)."""
+        return len(self.prompt) + self.max_new
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One step's admission decisions, in execution order."""
+    resume: List[Request] = dataclasses.field(default_factory=list)
+    admit: List[Request] = dataclasses.field(default_factory=list)
+
+    def __bool__(self) -> bool:
+        return bool(self.resume or self.admit)
+
+
+class Scheduler:
+    """Policy-only continuous-batching scheduler (see module docstring)."""
+
+    def __init__(self, *, watermark: int = 0,
+                 prefill_budget: Optional[int] = None):
+        if watermark < 0:
+            raise ValueError("watermark must be >= 0")
+        if prefill_budget is not None and prefill_budget <= 0:
+            raise ValueError("prefill_budget must be positive")
+        self.watermark = watermark
+        self.prefill_budget = prefill_budget
+        self.queue: List[Request] = []           # FCFS arrivals
+        self.preempted = BlockStack(block_size=256)   # LIFO resume order
+        self._admit_counter = 0
+
+    # ---------------- intake ----------------
+    def submit(self, req: Request) -> None:
+        req.state = "queued"
+        self.queue.append(req)
+
+    def on_preempt(self, req: Request) -> None:
+        req.state = "preempted"
+        self.preempted.push(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or len(self.preempted) > 0
+
+    # ---------------- admission ----------------
+    def _stamp(self, req: Request) -> Request:
+        req.admit_order = self._admit_counter
+        self._admit_counter += 1
+        return req
+
+    def plan_admissions(self, free_slots: int, mem,
+                        num_running: int) -> StepPlan:
+        """Pop as many candidates as policy allows this step.
+
+        ``mem`` is the block-accounting view (PagedKVManager or
+        anything with ``blocks_needed(tokens)`` and an
+        ``allocator.num_free``).  Candidates are considered strictly in
+        order (resumes LIFO first, then the FCFS queue head); the first
+        one that does not fit ends admission -- no queue jumping, so
+        admission order equals completion-pressure order.
+        """
+        plan = StepPlan()
+        free = mem.allocator.num_free
+        budget = self.prefill_budget
+        while free_slots > 0:
+            from_preempted = len(self.preempted) > 0
+            cand: Request = (self.preempted.peek() if from_preempted
+                             else self.queue[0] if self.queue else None)
+            if cand is None:
+                break
+            need = mem.blocks_needed(cand.max_tokens)
+            busy = num_running > 0 or bool(plan)
+            if need > free:
+                break                    # worst-case footprint must fit
+            if busy and free - need < self.watermark:
+                break                    # keep growth headroom
+            cost = 0 if from_preempted else cand.tokens_held
+            if busy and budget is not None and cost > budget:
+                break                    # prefill chunking
+            if from_preempted:
+                self.preempted.pop()
+                plan.resume.append(self._stamp(cand))
+            else:
+                self.queue.pop(0)
+                plan.admit.append(self._stamp(cand))
+            free -= need
+            if budget is not None:
+                budget = max(0, budget - cost)
+            free_slots -= 1
+        return plan
+
+    # ---------------- preemption ----------------
+    def pick_victim(self, running: Dict[int, Request]) -> int:
+        """Slot of the most recently ADMITTED request (LIFO).
+
+        Keyed on ``admit_order`` -- a resumed request that was submitted
+        early but re-admitted late is evicted before older tenants.
+        """
+        if not running:
+            raise ValueError("no running requests to preempt")
+        return max(running, key=lambda s: running[s].admit_order)

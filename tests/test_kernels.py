@@ -137,3 +137,30 @@ def test_block_copy_plan(nb, blk, rng):
     apply_compaction(tables, plan)
     for old, new in zip(live, tables[0]):
         np.testing.assert_array_equal(ref[new], np.asarray(pool)[old])
+
+
+@pytest.mark.parametrize("layers,nb,blk", [(1, 8, (4, 2, 5)), (3, 10, (8,)),
+                                           (2, 6, (4, 3))])
+def test_gather_blocks_compact(layers, nb, blk, rng):
+    """Swap-out gather: output is COMPACT (L, n, *blk) -- bytes scale
+    with the id list, never the pool."""
+    from repro.kernels.block_copy import gather_blocks
+    pool = jnp.asarray(rng.randn(layers, nb, *blk).astype(np.float32))
+    ids = rng.permutation(nb)[: nb // 2].astype(np.int32)
+    out = gather_blocks(pool, jnp.asarray(ids), interpret=True)
+    assert out.shape == (layers, len(ids), *blk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pool)[:, ids])
+
+
+@pytest.mark.parametrize("layers,nb,blk", [(2, 8, (4, 2, 5)), (1, 6, (8,))])
+def test_copy_pool_blocks_plan(layers, nb, blk, rng):
+    """COW fulfilment: a (src, dst) plan applied across the layer axis."""
+    from repro.kernels.block_copy import copy_pool_blocks
+    pool = jnp.asarray(rng.randn(layers, nb, *blk).astype(np.float32))
+    src = np.array([1, 4, 2], np.int32)
+    dst = np.array([5, 0, 3], np.int32)
+    out = copy_pool_blocks(pool, jnp.asarray(src), jnp.asarray(dst),
+                           interpret=True)
+    ref = np.asarray(pool).copy()
+    ref[:, dst] = np.asarray(pool)[:, src]
+    np.testing.assert_array_equal(np.asarray(out), ref)

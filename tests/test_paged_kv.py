@@ -71,19 +71,29 @@ def test_manager_admission_by_blocks():
 
 
 def test_swap_out_in_relocates(rng):
-    """Swap-in may land on different physical blocks; tables absorb it."""
+    """Swap-in may land on different physical blocks; tables absorb it.
+
+    Payload moves through the serve-layer host store, which gathers ONLY
+    the sequence's blocks on device (never the whole pool)."""
+    from repro.serve.swap import HostBlockStore
     cfg, cache, mgr = make(B=2, S=16)
     k_np = rng.randn(*cache.k_pool.shape).astype(np.float32)
     cache = dataclasses.replace(cache, k_pool=jnp.asarray(k_np))
     blocks_before = list(mgr.tables[0])
-    mgr.swap_out(0, np.asarray(cache.k_pool), np.asarray(cache.v_pool))
-    assert 0 not in mgr.tables
+    store = HostBlockStore()
+    store.swap_out(0, cache, mgr.swap_out(0))
+    assert 0 not in mgr.tables and mgr.swapped[0] == len(blocks_before)
     # occupy some freed blocks so swap-in must relocate
     mgr.admit(99, 8)
-    new_ids, k_save, v_save = mgr.swap_in(0)
+    new_ids = mgr.swap_in(0)
     assert new_ids != blocks_before
+    cache = store.swap_in(0, cache, new_ids)
     np.testing.assert_array_equal(
-        k_save, k_np[:, np.asarray(blocks_before)])
+        np.asarray(cache.k_pool)[:, np.asarray(new_ids)],
+        k_np[:, np.asarray(blocks_before)])
+    # transfer cost: blocks held, never pool size
+    assert store.stats.swap_out_bytes == \
+        len(blocks_before) * cfg.swap_nbytes_per_block()
 
 
 def test_cow_fork_shares_blocks():
@@ -94,6 +104,26 @@ def test_cow_fork_shares_blocks():
     assert mgr.tables[7] == mgr.tables[0][:2]
     mgr.release(7)                      # refcount drop, parent intact
     assert all(mgr.allocator.is_allocated(b) for b in mgr.tables[0])
+
+
+def test_cow_fork_shared_tail_write_barrier():
+    """fork() aliases a partially-filled tail block; the first write into
+    it (either party) triggers fork_for_write via ensure_writable."""
+    cfg, cache, mgr = make(B=2, S=32)          # bt=8
+    parent = list(mgr.tables[0])
+    mgr.fork(0, 7, shared_tokens=12)           # block 1 only partially full
+    assert mgr.tables[7] == parent[:2]
+    assert mgr.allocator.refcount(parent[1]) == 2
+    # write at pos 12 (inside shared tail) -> private copy for the child
+    plan = mgr.ensure_writable(7, token_pos=12)
+    assert plan is not None
+    src, dst = plan
+    assert src == parent[1] and dst != src
+    assert mgr.tables[7][1] == dst and mgr.tables[0][1] == src
+    assert mgr.allocator.refcount(src) == 1
+    assert mgr.allocator.refcount(dst) == 1
+    # parent now owns its tail exclusively: no further copy
+    assert mgr.ensure_writable(0, token_pos=12) is None
 
 
 def test_dp_grouped_semantics(rng):

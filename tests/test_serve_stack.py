@@ -1,0 +1,246 @@
+"""Layered serving stack: swap transfer-size pins, COW divergence, and
+the scripted mixed workload (queueing + forced preemption + forked
+prompts) against the single-request greedy reference.
+
+The swap-size tests mirror ``test_cost_model.py``'s pool-size-
+independence pin: the paper's claim only holds if management traffic
+scales with what a sequence HOLDS, never with how big the pool is.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.paged_kv import PagedKVCache, PagedKVConfig, PagedKVManager
+from repro.models.api import build_model
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import Scheduler
+from repro.serve.swap import HostBlockStore
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gemma_2b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def greedy_reference(model, params, prompt, max_new, max_seq=64):
+    kvcfg = model.kv_config(max_seq=max_seq, batch=1)
+    cache = PagedKVCache.create(kvcfg, 1)
+    mgr = PagedKVManager(kvcfg)
+    mgr.admit(0, max_seq)
+    cache = dataclasses.replace(
+        cache, block_tables=jnp.asarray(mgr.device_table(0))[None])
+    bt = kvcfg.block_tokens
+    toks = jnp.asarray(np.pad(prompt, (0, (-len(prompt)) % bt)))[None]
+    last, cache = model.prefill(params, {"tokens": toks}, cache,
+                                jnp.asarray([len(prompt)], jnp.int32))
+    out = [int(jnp.argmax(last[0]))]
+    for _ in range(max_new - 1):
+        lg, cache = model.decode_step(params, jnp.asarray([out[-1]]), cache)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# swap transfer size: proportional to blocks held, independent of pool size
+# ---------------------------------------------------------------------------
+def _swap_bytes_for(model, params, num_blocks, rng):
+    eng = Engine(model, params, slots=2, max_seq=64,
+                 num_blocks=num_blocks, eos_id=-1)
+    pr = rng.randint(2, 100, size=13)          # 2 blocks of prompt (bt=8)
+    eng.submit(Request(rid=0, prompt=pr, max_new=8))
+    for _ in range(4):
+        eng.step()
+    blocks_held = len(eng.mgr.tables[0])
+    eng.preempt_latest()
+    return blocks_held, eng.store.stats.last_swap_out_bytes, eng.cache.config
+
+
+@pytest.mark.parametrize("num_blocks", [16, 64, 256])
+def test_swap_out_bytes_scale_with_blocks_held(setup, num_blocks):
+    cfg, model, params = setup
+    held, nbytes, kvcfg = _swap_bytes_for(model, params, num_blocks,
+                                          np.random.RandomState(7))
+    # exact proportionality: blocks * (layers * streams * block bytes)
+    assert nbytes == held * kvcfg.swap_nbytes_per_block()
+    # and the pool-sized alternative would have been this much bigger:
+    assert nbytes * (num_blocks / held) == pytest.approx(
+        num_blocks * kvcfg.swap_nbytes_per_block())
+
+
+def test_swap_out_bytes_independent_of_pool_size(setup):
+    """Same sequence, 16x bigger pool -> byte-identical swap traffic."""
+    cfg, model, params = setup
+    held_a, bytes_a, _ = _swap_bytes_for(model, params, 16,
+                                         np.random.RandomState(7))
+    held_b, bytes_b, _ = _swap_bytes_for(model, params, 256,
+                                         np.random.RandomState(7))
+    assert held_a == held_b
+    assert bytes_a == bytes_b
+
+
+# ---------------------------------------------------------------------------
+# COW divergence at the pool level
+# ---------------------------------------------------------------------------
+def test_cow_fork_diverges_after_write_barrier(rng):
+    """Forked child shares prefix blocks; after fork_for_write + device
+    copy the two sequences hold independent tails with the common
+    prefix preserved in both."""
+    from repro.kernels import ops
+    cfg = PagedKVConfig(num_layers=2, kv_heads=2, head_dim=4,
+                        block_tokens=8, num_blocks=12,
+                        max_blocks_per_seq=4, dtype=jnp.float32)
+    mgr = PagedKVManager(cfg)
+    mgr.admit(0, 12)                       # parent: 12 tokens, 2 blocks
+    k_pool = jnp.asarray(
+        rng.randn(*cfg.pool_shape()).astype(np.float32))
+    parent = list(mgr.tables[0])
+    mgr.fork(0, 1, shared_tokens=12)       # tail block shared mid-fill
+    assert [mgr.allocator.refcount(b) for b in parent] == [2, 2]
+
+    # child writes at pos 12 -> COW barrier -> one device block copy
+    src, dst = mgr.ensure_writable(1, token_pos=12)
+    k_pool = ops.copy_pool_blocks(
+        k_pool, jnp.asarray([src], jnp.int32), jnp.asarray([dst], jnp.int32))
+    before = np.asarray(k_pool).copy()
+    # divergent write: child's new token at pos 12 (block 1, offset 4)
+    child_val = jnp.full((cfg.num_layers, cfg.kv_heads, cfg.head_dim), 9.0)
+    k_pool = k_pool.at[:, dst, 4].set(child_val)
+
+    after = np.asarray(k_pool)
+    # parent's physical block untouched by the child's write
+    np.testing.assert_array_equal(after[:, src], before[:, src])
+    # common prefix (offsets 0..3 of the shared tail) preserved in copy
+    np.testing.assert_array_equal(after[:, dst, :4], before[:, src, :4])
+    # and the divergent token landed only in the child's block
+    np.testing.assert_array_equal(after[:, dst, 4],
+                                  np.asarray(child_val, np.float32))
+    assert mgr.tables[0][1] == src and mgr.tables[1][1] == dst
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy unit pins (no device)
+# ---------------------------------------------------------------------------
+class _Mem:
+    """Minimal block-accounting stub for policy tests."""
+    class _A:
+        def __init__(self, free):
+            self.num_free = free
+    def __init__(self, free, bt=8):
+        self.allocator = self._A(free)
+        self.bt = bt
+    def blocks_needed(self, tokens):
+        return -(-tokens // self.bt)
+
+
+def test_scheduler_watermark_holds_back_admissions():
+    sched = Scheduler(watermark=2)
+    a = Request(rid=0, prompt=np.arange(8), max_new=8)    # 2 blocks
+    b = Request(rid=1, prompt=np.arange(8), max_new=8)
+    sched.submit(a)
+    sched.submit(b)
+    plan = sched.plan_admissions(2, _Mem(free=5), num_running=0)
+    # first admission ignores the watermark (progress guarantee), the
+    # second would leave 5-2-2=1 < 2 free and is held back
+    assert [r.rid for r in plan.admit] == [0]
+    plan = sched.plan_admissions(2, _Mem(free=6), num_running=0)
+    assert [r.rid for r in plan.admit] == [1]
+
+
+def test_scheduler_prefill_budget_chunks_admissions():
+    sched = Scheduler(prefill_budget=10)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=np.arange(8), max_new=4))
+    plan = sched.plan_admissions(3, _Mem(free=64), num_running=0)
+    # 8 tokens fit the budget; the next 8 would exceed the remaining 2
+    assert [r.rid for r in plan.admit] == [0]
+    plan = sched.plan_admissions(3, _Mem(free=64), num_running=1)
+    assert [r.rid for r in plan.admit] == [1]
+
+
+def test_scheduler_full_footprint_gate():
+    """A request whose worst case cannot fit right now is not admitted,
+    even though its prompt alone would fit (anti-livelock)."""
+    sched = Scheduler()
+    sched.submit(Request(rid=0, prompt=np.arange(8), max_new=56))  # 8 blocks
+    plan = sched.plan_admissions(1, _Mem(free=4), num_running=0)
+    assert not plan
+    plan = sched.plan_admissions(1, _Mem(free=8), num_running=0)
+    assert [r.rid for r in plan.admit] == [0]
+
+
+def test_cow_barrier_under_pool_exhaustion(setup, rng):
+    """Regression: the COW copy target is a deferred claim admission
+    cannot reserve; when concurrent growth drains the pool first, the
+    barrier must preempt (LIFO) instead of crashing Engine.step()."""
+    cfg, model, params = setup
+    eng = Engine(model, params, slots=4, max_seq=32, num_blocks=10,
+                 eos_id=-1)
+    parent = rng.randint(2, 100, size=20)     # partial tail block (bt=8)
+    eng.submit(Request(rid=0, prompt=parent, max_new=4))
+    eng.submit(Request(rid=1, prompt=rng.randint(2, 100, size=14),
+                       max_new=4))
+    eng.submit(Request(rid=2, prompt=rng.randint(2, 100, size=14),
+                       max_new=4))
+    for _ in range(2):
+        eng.step()
+        eng.check_consistency()
+    # child is the parent's 12-token prefix -> forks, allocates nothing
+    eng.submit(Request(rid=3, prompt=parent[:12].copy(), max_new=4))
+    done = eng.run(max_steps=300)             # must not raise
+    assert len(done) == 4
+    assert eng.prefix_hits >= 1
+    for req in sorted(done, key=lambda r: r.rid):
+        ref = greedy_reference(model, params, req.prompt, 4, max_seq=32)
+        assert req.generated == ref, (req.rid, req.generated, ref)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance workload: mixed prompts, forced preemption, forked prompts
+# ---------------------------------------------------------------------------
+def test_scripted_workload_token_identical(setup, rng):
+    cfg, model, params = setup
+    eng = Engine(model, params, slots=3, max_seq=64, num_blocks=20,
+                 eos_id=-1, watermark=1)
+    base = rng.randint(2, cfg.vocab_size, size=16)
+    reqs = [
+        # rid=0 generates longest so it is still resident (a live fork
+        # parent) when rid=3 is admitted into a freed slot
+        Request(rid=0, prompt=base.copy(), max_new=10),
+        Request(rid=1, prompt=rng.randint(2, cfg.vocab_size, size=9),
+                max_new=6),
+        Request(rid=2, prompt=base.copy(), max_new=6),          # forked
+        Request(rid=3, prompt=np.concatenate(
+            [base, rng.randint(2, cfg.vocab_size, size=5)]),    # shared prefix
+                max_new=6),
+        Request(rid=4, prompt=rng.randint(2, cfg.vocab_size, size=5),
+                max_new=6),
+    ]
+    for r in reqs:
+        eng.submit(r)
+    forced = False
+    while (eng.sched.has_work or eng.running) and eng.steps < 400:
+        eng.step()
+        eng.check_consistency()
+        if eng.steps == 3 and eng.running and not forced:
+            eng.preempt_latest()               # forced mid-flight preemption
+            forced = True
+    assert len(eng.done) == 5
+    assert forced and eng.store.stats.swap_outs >= 1
+    assert eng.prefix_hits >= 2                # rid=2 and rid=3 forked
+    # every swap-out moved exactly blocks_held * block bytes -- never more
+    per_block = eng.cache.config.swap_nbytes_per_block()
+    for seq_id, nblocks, nbytes in eng.store.stats.out_log:
+        assert nbytes <= nblocks * per_block
+        assert nbytes == nblocks * per_block
+    # token-identical to the pre-refactor engine's verified reference
+    for req in sorted(eng.done, key=lambda r: r.rid):
+        ref = greedy_reference(model, params, req.prompt, req.max_new)
+        assert req.generated == ref, (req.rid, req.generated, ref)
