@@ -11,8 +11,13 @@ writes ``BENCH_serve.json``:
   * swap_bytes_per_block / blocks_swapped -- proportionality evidence:
     per-block swap cost must equal config.swap_nbytes_per_block()
   * prefix_share_hit_rate -- forked admissions / total requests
-  * cow_copies, preemptions, pool_utilization_final
+  * cow_copies, preemptions, compactions, pool_utilization_final
+  * arena                -- the unified address space's ``ArenaStats``
+    snapshot (blocks by owner/placement per pool class, refcount
+    histogram, fragmentation, table locality)
 
+``--baseline PATH`` compares tokens/s against a committed report and
+exits non-zero on a regression beyond ``--regress-frac`` (CI gate).
 Emits the usual CSV rows too (see benchmarks/common.py).
 """
 
@@ -84,6 +89,10 @@ def main(argv=None):
     ap.add_argument("--watermark", type=int, default=1)
     ap.add_argument("--prefill-budget", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_serve.json to gate against: "
+                         "exit 1 if tokens/s drops > --regress-frac")
+    ap.add_argument("--regress-frac", type=float, default=0.2)
     args = ap.parse_args(argv)
     if args.smoke:
         args.reduced = True
@@ -132,7 +141,10 @@ def main(argv=None):
         "prefix_share_hit_rate": round(
             st["prefix_hits"] / max(args.requests, 1), 3),
         "cow_copies": st["cow_copies"],
+        "compactions": st["compactions"],
+        "blocks_compacted": st["blocks_compacted"],
         "pool_utilization_final": round(st["pool_utilization"], 3),
+        "arena": eng.arena_stats().to_dict(),
         "all_ok": (len(eng.done) == args.requests
                    and st["prefix_hits"] > 0
                    and st["swap_out_bytes"]
@@ -146,6 +158,23 @@ def main(argv=None):
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                base = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError) as e:
+            print(f"bench_serve: no usable baseline at {args.baseline} "
+                  f"({e}); skipping regression gate")
+        else:
+            old = float(base.get("tokens_per_s") or 0.0)
+            floor = (1.0 - args.regress_frac) * old
+            if old and report["tokens_per_s"] < floor:
+                raise SystemExit(
+                    f"tokens/s regression: {report['tokens_per_s']} < "
+                    f"{floor:.2f} ({(1 - args.regress_frac) * 100:.0f}% of "
+                    f"baseline {old})")
+            print(f"bench_serve: tokens/s {report['tokens_per_s']} vs "
+                  f"baseline {old} (floor {floor:.2f}) -- ok")
     return report
 
 

@@ -7,8 +7,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import BlockAllocator, BlockStack, TreeArray
+from repro.core import BlockStack, TreeArray
 from repro.kernels import ops
+from repro.mem import Arena
 
 # -- 1. arrays-as-trees: a "large" array in fixed 32 KB blocks ------------
 x = np.arange(100_000, dtype=np.float32)
@@ -29,23 +30,28 @@ out = ops.tree_gather(tree.leaves, table, interpret=True)
 assert np.allclose(np.asarray(out).reshape(-1)[: len(x)], x)
 print("Pallas tree_gather kernel matches (interpret mode)")
 
-# -- 3. many tenants, one arena ---------------------------------------
-arena = BlockAllocator(num_blocks=64)
+# -- 3. many tenants, one arena (the unified software address space) -----
+arena = Arena()
+arena.register_class("main", num_blocks=64, block_shape=(8192,),
+                     dtype=np.float32)
 t1 = TreeArray.from_dense(np.ones(20_000, np.float32), leaf_size=8192,
-                          allocator=arena)
+                          arena=arena, pool_class="main", owner="t1")
 t2 = TreeArray.from_dense(np.full(5_000, 2.0, np.float32), leaf_size=8192,
-                          allocator=arena)
-print(f"arena: {arena.num_used}/{arena.num_blocks} blocks used by 2 tenants")
+                          arena=arena, pool_class="main", owner="t2")
+print(f"arena: {arena.num_used('main')}/{arena.num_blocks('main')} "
+      f"blocks used by 2 tenants")
 
 # -- 4. split stack ------------------------------------------------------
-stack = BlockStack(block_size=4096, allocator=arena)
+stack = BlockStack(block_size=4096, arena=arena, pool_class="main",
+                   owner="stack")
 for i in range(10_000):
     stack.push(i)
 print(f"BlockStack: {len(stack)} items in {stack.num_blocks} linked blocks "
-      f"(arena now {arena.num_used}/{arena.num_blocks})")
+      f"(arena now {arena.num_used('main')}/{arena.num_blocks('main')}; "
+      f"by owner: {arena.stats()['main'].blocks_by_owner})")
 while len(stack):
     stack.pop()
-print(f"drained; arena back to {arena.num_used} data blocks")
+print(f"drained; arena back to {arena.num_used('main')} data blocks")
 
 # -- 5. paged attention over a block-table-addressed KV cache ------------
 rng = np.random.RandomState(0)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockpool import BlockAllocator, NULL_BLOCK
+from repro.mem import Arena, Mapping, NULL_BLOCK, OutOfBlocksError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,57 +227,107 @@ class PagedKVCache:
 
 
 class PagedKVManager:
-    """Host-side allocator policy for the cache (the 'OS').
+    """Host-side allocator policy for the cache -- a thin Arena client.
 
-    Owns a BlockAllocator over the pool; grows/frees per-sequence tables
-    as the engine admits, extends, preempts, and finishes requests.  The
-    manager deals ONLY in block ids -- payload transfers (swap-out/in at
-    block granularity, COW block copies) are the caller's job, so that
-    bytes moved always scale with blocks held, never with pool size
-    (see ``serve/swap.py`` and ``kernels/block_copy.py``).
+    The manager used to own its own ``BlockAllocator`` and dict-of-lists
+    tables; it is now a facade over ``repro.mem``: one ``Mapping`` per
+    live sequence drawn from a shared ``Arena`` pool class, so the KV
+    cache, TreeArrays, BlockStacks and the host swap tier all account
+    against ONE address space.  The manager still deals ONLY in block
+    ids at its boundary -- payload transfers (swap-out/in at block
+    granularity, COW block copies) are the caller's job, so that bytes
+    moved always scale with blocks held, never with pool size (see
+    ``serve/swap.py`` and ``kernels/block_copy.py``).
     """
 
-    def __init__(self, config: PagedKVConfig):
+    def __init__(self, config: PagedKVConfig, arena: Optional[Arena] = None,
+                 pool_class: str = "kv"):
         self.config = config
-        self.allocator = BlockAllocator(config.num_blocks)
-        # block ids per live sequence (host view of the device tables)
-        self.tables: dict[int, List[int]] = {}
-        # seq_id -> number of blocks held at swap-out time (payload lives
-        # in the caller's host block store)
-        self.swapped: dict[int, int] = {}
+        self.arena = arena if arena is not None else Arena()
+        self.pool_class = self.arena.register_class(
+            pool_class, num_blocks=config.num_blocks,
+            block_nbytes=config.swap_nbytes_per_block())
+        self._maps: dict[int, Mapping] = {}
+
+    # -- compat views over the Arena -----------------------------------
+    @property
+    def allocator(self):
+        """The pool class's raw allocator (legacy/test escape hatch)."""
+        return self.arena.allocator(self.pool_class)
+
+    @property
+    def tables(self) -> dict:
+        """seq_id -> block-id list of every DEVICE-resident sequence."""
+        return {sid: m.block_ids() for sid, m in self._maps.items()
+                if m.placement == "device"}
+
+    @property
+    def swapped(self) -> dict:
+        """seq_id -> blocks held at swap-out (host-tier residency)."""
+        return self.arena.host_counts(self.pool_class)
+
+    def mapping(self, seq_id: int) -> Mapping:
+        return self._maps[seq_id]
+
+    def has_seq(self, seq_id: int) -> bool:
+        """Device-resident? (O(1) -- prefer over the ``tables`` view,
+        which materializes every live table on each access)."""
+        m = self._maps.get(seq_id)
+        return m is not None and m.placement == "device"
+
+    def block_ids(self, seq_id: int) -> List[int]:
+        return self._maps[seq_id].block_ids()
 
     # -- admission/extension ------------------------------------------
     def blocks_needed(self, tokens: int) -> int:
         bt = self.config.block_tokens
         return (tokens + bt - 1) // bt
 
+    @property
+    def free_blocks(self) -> int:
+        """Leases currently grantable -- the scheduler's admission view."""
+        return self.arena.num_free(self.pool_class)
+
     def can_admit(self, tokens: int) -> bool:
-        return self.allocator.num_free >= self.blocks_needed(tokens)
+        return self.free_blocks >= self.blocks_needed(tokens)
 
     def admit(self, seq_id: int, tokens: int) -> List[int]:
-        blocks = self.allocator.alloc_many(self.blocks_needed(tokens))
-        self.tables[seq_id] = blocks
-        return blocks
+        need = self.blocks_needed(tokens)
+        if need > self.free_blocks:
+            # atomic: don't leave an empty mapping behind on failure
+            raise OutOfBlocksError(
+                f"requested {need} blocks, only {self.free_blocks} free")
+        m = self.arena.mapping(self.pool_class, seq_id)
+        self._maps[seq_id] = m
+        return m.ensure_capacity(need)
 
     def extend(self, seq_id: int, new_total_tokens: int) -> List[int]:
-        """Ensure capacity for new_total_tokens; returns newly added ids."""
-        have = self.tables[seq_id]
-        need = self.blocks_needed(new_total_tokens)
-        fresh = self.allocator.alloc_many(max(0, need - len(have)))
-        have.extend(fresh)
-        return fresh
+        """Ensure capacity for new_total_tokens; returns newly added ids.
+
+        Allocates under pressure: on exhaustion the Arena's reclaimer
+        (LIFO preemption when serving) evicts victims; if the victim is
+        this sequence itself, ``LeaseRevokedError`` propagates.
+        """
+        return self._maps[seq_id].ensure_capacity(
+            self.blocks_needed(new_total_tokens))
 
     def release(self, seq_id: int) -> None:
-        self.allocator.free_many(self.tables.pop(seq_id))
+        self._maps.pop(seq_id).free()
 
-    def reserve_block(self) -> int:
-        """Permanently claim one block (never handed to a sequence).
+    def reserve_sink(self):
+        """Pin one block (never handed to a sequence).
 
         The engine points masked prefill-table entries at this 'sink'
         block so padded rows and COW-aliased prefixes have a harmless
-        scatter target.
+        scatter target.  Returns the pinned ``Lease`` -- read
+        ``lease.block`` for the current physical id (compaction may
+        relocate it).
         """
-        return self.allocator.alloc()
+        return self.arena.pin(self.pool_class, owner="sink")
+
+    def reserve_block(self) -> int:
+        """Legacy form of ``reserve_sink``: the pinned id as an int."""
+        return self.reserve_sink().block
 
     # -- COW prefix sharing ---------------------------------------------
     def fork(self, parent_id: int, child_id: int,
@@ -292,14 +342,14 @@ class PagedKVManager:
         """
         bt = self.config.block_tokens
         nshared = -(-shared_tokens // bt)
-        parent = self.tables[parent_id]
+        parent = self._maps[parent_id]
         if nshared > len(parent):
             raise ValueError(
                 f"fork of {shared_tokens} tokens needs {nshared} blocks, "
                 f"parent holds {len(parent)}")
-        child = [self.allocator.share(b) for b in parent[:nshared]]
-        self.tables[child_id] = child
-        return child
+        child = parent.fork(child_id, nshared)
+        self._maps[child_id] = child
+        return child.block_ids()
 
     def ensure_writable(self, seq_id: int,
                         token_pos: int) -> Optional[Tuple[int, int]]:
@@ -309,46 +359,38 @@ class PagedKVManager:
         private block in its table and ``(src, dst)`` is returned -- the
         caller MUST copy the payload src -> dst on device (one
         ``block_copy`` DMA) before writing.  Returns None when the block
-        is already exclusively owned.
+        is already exclusively owned.  The fresh block is a deferred
+        claim allocated under pressure (see ``Mapping.ensure_writable``).
         """
-        tb = token_pos // self.config.block_tokens
-        blk = self.tables[seq_id][tb]
-        if self.allocator.refcount(blk) == 1:
-            return None
-        fresh, _ = self.allocator.fork_for_write(blk)
-        self.tables[seq_id][tb] = fresh
-        return blk, fresh
+        return self._maps[seq_id].ensure_writable(
+            token_pos // self.config.block_tokens)
 
     # -- swapping ---------------------------------------------------------
     def swap_out(self, seq_id: int) -> List[int]:
-        """Release a preempted sequence's device blocks; return their ids.
+        """Migrate a preempted sequence to the host tier; return the
+        vacated device ids.
 
         Payload transfer is the caller's job (gather the returned ids
         BEFORE reusing the pool -- ``serve/swap.py`` does both in one
-        motion).  Only the block COUNT is remembered here.
+        motion and deposits the payload back into the Arena's host
+        tier).
         """
-        blocks = self.tables.pop(seq_id)
-        self.allocator.free_many(blocks)
-        self.swapped[seq_id] = len(blocks)
-        return blocks
+        return self._maps[seq_id].migrate("host")
 
     def swap_in(self, seq_id: int) -> List[int]:
-        """Reallocate (anywhere!) and return the new block ids to fill.
+        """Migrate back: reallocate (anywhere!) and return the new block
+        ids to fill.
 
         The new physical blocks need not match the old ones -- block
         tables absorb the relocation, which is the paper's 'Relocation /
         Migration' row implemented in software.
         """
-        new_ids = self.allocator.alloc_many(self.swapped.pop(seq_id))
-        self.tables[seq_id] = new_ids
-        return new_ids
+        return self._maps[seq_id].migrate("device")
 
     def device_table(self, seq_id: int) -> np.ndarray:
-        t = np.full(self.config.max_blocks_per_seq, NULL_BLOCK, np.int32)
-        blocks = self.tables[seq_id]
-        t[: len(blocks)] = blocks
-        return t
+        return self._maps[seq_id].packed_table(self.config.max_blocks_per_seq)
 
     @property
     def utilization(self) -> float:
-        return self.allocator.num_used / self.allocator.num_blocks
+        return (self.arena.num_used(self.pool_class)
+                / self.arena.num_blocks(self.pool_class))

@@ -24,24 +24,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockpool import BlockAllocator, OutOfBlocksError
+from repro.mem import Arena, BlockAllocator, Mapping, OutOfBlocksError
 
 
 class BlockStack:
     """Host-side stack of Python scalars/objects in fixed-size blocks.
 
-    Blocks are plain numpy object arrays drawn from a shared
-    ``BlockAllocator`` (ids only -- storage is per-stack), so many stacks
-    share one arena without any contiguity assumption.
+    Blocks are plain Python lists addressed by ids drawn from a shared
+    allocator (ids only -- storage is per-stack), so many stacks share
+    one arena without any contiguity assumption.  Pass ``arena`` (plus a
+    registered ``pool_class``) to account the linked blocks against the
+    unified ``repro.mem.Arena`` through a flat ``Mapping``; the legacy
+    ``allocator`` argument draws raw ids instead.
     """
 
-    __slots__ = ("block_size", "_alloc", "_blocks", "_block_ids", "_top",
-                 "_cur", "_off")
+    __slots__ = ("block_size", "_alloc", "_mapping", "_blocks",
+                 "_block_ids", "_top", "_cur", "_off")
 
     def __init__(self, block_size: int = 4096,
-                 allocator: Optional[BlockAllocator] = None):
+                 allocator: Optional[BlockAllocator] = None,
+                 arena: Optional[Arena] = None,
+                 pool_class: str = "stack", owner="stack"):
         self.block_size = int(block_size)
         self._alloc = allocator
+        self._mapping: Optional[Mapping] = (
+            arena.mapping(pool_class, owner) if arena is not None else None)
         self._blocks: List[list] = []
         self._block_ids: List[int] = []
         self._top = 0          # total element count
@@ -53,12 +60,22 @@ class BlockStack:
 
     def _grow(self) -> None:
         # the "rare path": link a new fixed-size block
-        if self._alloc is not None:
+        if self._mapping is not None:
+            self._block_ids.append(self._mapping.append_blocks(1)[0])
+        elif self._alloc is not None:
             self._block_ids.append(self._alloc.alloc())
         blk = [None] * self.block_size
         self._blocks.append(blk)
         self._cur = blk
         self._off = 0
+
+    def _unlink_last(self) -> None:
+        self._blocks.pop()
+        if self._mapping is not None:
+            self._mapping.pop_block()
+            self._block_ids.pop()
+        elif self._alloc is not None:
+            self._alloc.free(self._block_ids.pop())
 
     def push(self, item: Any) -> None:
         # fast path: one compare (the split-stack space check) + store
@@ -83,15 +100,20 @@ class BlockStack:
             blk_no = (self._top - 1) // self.block_size
             # unlink emptied trailing blocks (one block hysteresis)
             while len(self._blocks) > blk_no + 1:
-                self._blocks.pop()
-                if self._alloc is not None:
-                    self._alloc.free(self._block_ids.pop())
+                self._unlink_last()
             self._cur = self._blocks[blk_no]
             off = self._top - blk_no * self.block_size
         item = self._cur[off - 1]
         self._cur[off - 1] = None
         self._off = off - 1
         self._top -= 1
+        if self._top == 0:
+            # fully drained: drop the hysteresis block too, so shared
+            # arenas see a quiescent stack (leak invariant in tests)
+            while self._blocks:
+                self._unlink_last()
+            self._cur = None
+            self._off = 0
         return item
 
     def peek(self) -> Any:

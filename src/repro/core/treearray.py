@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockpool import BlockAllocator, BlockPool, NULL_BLOCK
+from repro.mem import Arena, BlockAllocator, NULL_BLOCK
 
 
 def tree_depth_for(length: int, leaf_size: int, fanout: int) -> int:
@@ -90,22 +90,42 @@ class TreeArray:
     def from_dense(cls, x: jax.Array, leaf_size: int = 8192,
                    fanout: int = 8192,
                    allocator: Optional[BlockAllocator] = None,
+                   arena: Optional[Arena] = None,
+                   pool_class: str = "tree",
+                   owner=None,
                    shuffle_seed: Optional[int] = None) -> "TreeArray":
         """Build a tree holding ``x`` (1-D).
 
         ``leaf_size`` is in *elements*; the paper's 32 KB block with f32
         data is leaf_size=8192 (and fanout 8192 for 4-byte ids).  If
-        ``allocator`` is given, leaf ids are drawn from it (so the tree
-        coexists with other tenants of a shared pool); ``shuffle_seed``
-        permutes leaf placement to emulate a fragmented physical memory
-        (the paper's whole point is that this must not matter).
+        ``arena`` is given, leaf blocks are drawn from that pool class
+        of the shared ``repro.mem.Arena`` through a radix ``Mapping``
+        (so the tree coexists with every other block-backed tenant; the
+        mapping is attached as ``tree.arena_mapping`` -- a host-side
+        handle, NOT carried through jit -- and can be ``free()``d).  The
+        legacy ``allocator`` argument draws raw ids instead.
+        ``shuffle_seed`` permutes leaf placement to emulate a fragmented
+        physical memory (the paper's whole point is that this must not
+        matter).
         """
         x = jnp.asarray(x).reshape(-1)
         n = x.shape[0]
         depth = tree_depth_for(max(n, 1), leaf_size, fanout)
         num_leaves = max(1, math.ceil(n / leaf_size))
 
-        if allocator is not None:
+        mapping = None
+        if arena is not None:
+            if pool_class not in arena.pool_classes:
+                raise KeyError(
+                    f"register pool class {pool_class!r} on the arena "
+                    f"before building trees from it")
+            mapping = arena.mapping(pool_class,
+                                    owner if owner is not None else "tree",
+                                    kind="radix")
+            leaf_ids = np.array(mapping.append_blocks(num_leaves),
+                                dtype=np.int32)
+            pool_blocks = arena.num_blocks(pool_class)
+        elif allocator is not None:
             leaf_ids = np.array(allocator.alloc_many(num_leaves), dtype=np.int32)
             pool_blocks = allocator.num_blocks
         else:
@@ -141,7 +161,10 @@ class TreeArray:
             assert levels[0].shape[0] == 1
             nodes = [jnp.asarray(l) for l in levels]
 
-        return cls(leaves, nodes, root_leaf, n, leaf_size, fanout, depth)
+        tree = cls(leaves, nodes, root_leaf, n, leaf_size, fanout, depth)
+        if mapping is not None:
+            tree.arena_mapping = mapping
+        return tree
 
     # -- address resolution ----------------------------------------------
     def _leaf_of(self, elem_idx: jax.Array) -> jax.Array:

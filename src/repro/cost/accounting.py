@@ -157,7 +157,38 @@ class HloCostModel:
                         contract *= dims[i]
         return 2.0 * res * contract
 
-    # ---- byte attribution ---------------------------------------------
+    def _conv_flops(self, ins: Instr, sym: Dict[str, str]) -> float:
+        """Exact convolution FLOPs: every output element is a dot of
+        length (kernel spatial product x per-group input channels), so
+
+            flops = 2 * result_elements * prod(kernel_spatial) * C_in_grp
+
+        The kernel operand's 'i' dimension in HLO is ALREADY divided by
+        ``feature_group_count``, so grouped/depthwise convs need no
+        extra correction.  Falls back to the old 2x-result-elements
+        approximation only when the kernel shape or dim_labels cannot be
+        resolved.
+        """
+        res = 1
+        for d in shape_dims(ins.shape)[0][1] if shape_dims(ins.shape) else []:
+            res *= d
+        rhs = (sym.get(ins.operands[1])
+               if len(ins.operands) > 1 else None)
+        m = re.search(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)", ins.attrs)
+        if rhs and m:
+            kdims = shape_dims(rhs)
+            if kdims:
+                klabels, kshape = m.group(2), kdims[0][1]
+                if len(klabels) == len(kshape):
+                    spatial = 1
+                    in_ch = 1
+                    for lbl, dim in zip(klabels, kshape):
+                        if lbl.isdigit():
+                            spatial *= dim
+                        elif lbl == "i":
+                            in_ch *= dim
+                    return 2.0 * res * spatial * in_ch
+        return 2.0 * res
 
     def _called(self, ins: Instr) -> List[str]:
         out = []
@@ -311,8 +342,7 @@ class HloCostModel:
             if op == "dot":
                 total.flops += self._dot_flops(ins, sym)
             elif op == "convolution":
-                # flops ~ 2 * result elements (rare in this codebase)
-                total.flops += 2.0 * (shape_bytes(ins.shape) / 2)
+                total.flops += self._conv_flops(ins, sym)
             elif op == "while":
                 trips = self.module.trip_count(ins)
                 body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)

@@ -1,0 +1,23 @@
+"""repro.mem -- the unified software address space (see README.md).
+
+One ``Arena`` behind every block-backed subsystem: typed ``Lease``
+handles instead of raw ints, ``Mapping`` page tables with
+``fork``/``ensure_writable``/``migrate`` as the only mutation verbs, a
+host swap tier as a first-class placement level, pressure-time reclaim
+(LIFO preemption) as arena policy, and ``compact()`` as the defrag pass.
+"""
+
+from repro.mem.arena import Arena, LeaseRevokedError
+from repro.mem.blockpool import (NULL_BLOCK, BlockAllocator, BlockPool,
+                                 OutOfBlocksError)
+from repro.mem.lease import COW_SHARED, EXCLUSIVE, PINNED, Lease
+from repro.mem.mapping import DEVICE, FLAT, HOST, RADIX, Mapping
+from repro.mem.stats import ArenaStats, PoolClassStats
+
+__all__ = [
+    "Arena", "LeaseRevokedError",
+    "BlockAllocator", "BlockPool", "NULL_BLOCK", "OutOfBlocksError",
+    "Lease", "EXCLUSIVE", "COW_SHARED", "PINNED",
+    "Mapping", "FLAT", "RADIX", "DEVICE", "HOST",
+    "ArenaStats", "PoolClassStats",
+]

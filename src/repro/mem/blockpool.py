@@ -1,0 +1,198 @@
+"""Fixed-size block pool: the paper's physical-memory allocator.
+
+The paper's OS hands out fixed-size blocks (32 KB) as the minimum
+allocation unit and *never* promises large contiguous regions.  On TPU,
+HBM is physically addressed already; we model the paper's allocator as
+
+  * a device-resident ``pool`` array of shape ``(num_blocks, *block_shape)``
+    (one contiguous physical arena, carved into fixed blocks), and
+  * a host-side ``BlockAllocator`` (free list + refcounts) that plays the
+    role of the paper's simple OS memory manager.
+
+Device code never sees pointers -- only ``int32`` block ids, which is
+exactly the paper's "software page table" discipline.  Copy-on-write is
+supported via refcounts so that block tables can alias blocks (used by
+the serving engine for shared prefixes, mirroring vLLM-style sharing --
+an instance of the paper's claim that software can re-create VM features
+it actually needs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_BLOCK = -1  # sentinel "unmapped" entry in block tables
+
+
+class OutOfBlocksError(RuntimeError):
+    """Raised when the pool has no free blocks (the paper's OOM analogue)."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator with refcounts (COW support).
+
+    This is deliberately simple -- the paper argues a fixed-block OS
+    allocator *can* be this simple because external fragmentation is
+    impossible: every request is exactly one block.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        self.num_blocks = int(num_blocks)
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._refcount = np.zeros(num_blocks, dtype=np.int32)
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def refcount(self, block: int) -> int:
+        return int(self._refcount[block])
+
+    def used_ids(self) -> np.ndarray:
+        """Ascending ids of all currently allocated blocks."""
+        return np.nonzero(self._refcount > 0)[0]
+
+    def is_allocated(self, block: int) -> bool:
+        return self._refcount[block] > 0
+
+    # -- allocation ------------------------------------------------------
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfBlocksError("block pool exhausted")
+        b = self._free.pop()
+        self._refcount[b] = 1
+        return b
+
+    def alloc_many(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfBlocksError(
+                f"requested {n} blocks, only {len(self._free)} free"
+            )
+        return [self.alloc() for _ in range(n)]
+
+    def share(self, block: int) -> int:
+        """Increment refcount (a block-table aliases this block)."""
+        if self._refcount[block] <= 0:
+            raise ValueError(f"share of unallocated block {block}")
+        self._refcount[block] += 1
+        return block
+
+    def free(self, block: int) -> None:
+        if block == NULL_BLOCK:
+            return
+        if self._refcount[block] <= 0:
+            raise ValueError(f"double free of block {block}")
+        self._refcount[block] -= 1
+        if self._refcount[block] == 0:
+            self._free.append(block)
+
+    def free_many(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            self.free(int(b))
+
+    def fork_for_write(self, block: int) -> Tuple[int, bool]:
+        """COW: return a private block id for writing.
+
+        If refcount == 1 the caller already owns it exclusively; otherwise
+        allocate a fresh block (caller must copy payload) and drop one ref
+        on the shared one.  Returns (block_id, needs_copy).
+        """
+        if self._refcount[block] <= 0:
+            raise ValueError(f"fork of unallocated block {block}")
+        if self._refcount[block] == 1:
+            return block, False
+        fresh = self.alloc()
+        self.free(block)
+        return fresh, True
+
+    # -- relocation (defrag / compaction) -------------------------------
+    def relocate(self, plan: Sequence[Tuple[int, int]]) -> None:
+        """Apply a (src, dst) move plan to the id space.
+
+        Refcounts travel with blocks; the free list is rebuilt so the
+        vacated sources become allocatable again.  The caller is
+        responsible for (a) copying payloads src -> dst on device and
+        (b) rewriting every table/lease that names a moved id -- the
+        Arena's ``compact()`` does all three in one motion.
+        """
+        for s, d in plan:
+            if self._refcount[s] <= 0:
+                raise ValueError(f"relocate of unallocated block {s}")
+            if self._refcount[d] != 0:
+                raise ValueError(f"relocate into live block {d}")
+            self._refcount[d] = self._refcount[s]
+            self._refcount[s] = 0
+        self._free = [b for b in range(self.num_blocks - 1, -1, -1)
+                      if self._refcount[b] == 0]
+
+    def refcount_histogram(self) -> "np.ndarray":
+        """histogram[r] = number of blocks currently at refcount r."""
+        return np.bincount(self._refcount,
+                           minlength=2).astype(np.int64)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockPool:
+    """Device-side arena of fixed-size blocks.
+
+    ``data`` has shape ``(num_blocks, *block_shape)``.  All updates are
+    functional (return a new BlockPool sharing the updated buffer).
+    """
+
+    data: jax.Array  # (num_blocks, *block_shape)
+
+    # pytree plumbing ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    # constructors ---------------------------------------------------------
+    @classmethod
+    def create(cls, num_blocks: int, block_shape: Tuple[int, ...],
+               dtype=jnp.float32) -> "BlockPool":
+        return cls(jnp.zeros((num_blocks, *block_shape), dtype=dtype))
+
+    # properties -----------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def block_shape(self) -> Tuple[int, ...]:
+        return self.data.shape[1:]
+
+    @property
+    def block_nbytes(self) -> int:
+        return int(np.prod(self.block_shape)) * self.data.dtype.itemsize
+
+    # block ops --------------------------------------------------------
+    def read(self, block: jax.Array) -> jax.Array:
+        """Gather one or many blocks.  ``block`` may be scalar or int array."""
+        return jnp.take(self.data, block, axis=0, mode="clip")
+
+    def write(self, block, payload) -> "BlockPool":
+        """Scatter one or many whole blocks (scalar or int-array ids)."""
+        return BlockPool(self.data.at[jnp.asarray(block)].set(payload))
+
+    def copy_block(self, src, dst) -> "BlockPool":
+        """Physical block copy (COW fulfilment / defrag / swap-in)."""
+        return BlockPool(self.data.at[dst].set(self.data[src]))
+
+    def copy_blocks(self, src: jax.Array, dst: jax.Array) -> "BlockPool":
+        return BlockPool(self.data.at[dst].set(self.data[src]))

@@ -1,0 +1,204 @@
+"""Mapping: one logical object's software page table over Arena leases.
+
+A ``Mapping`` subsumes the repo's ad-hoc block tables: the flat
+per-sequence tables of the paged KV cache (``kind="flat"``) and the
+radix leaf tables of ``TreeArray`` (``kind="radix"``).  It holds an
+ordered list of ``Lease`` handles -- logical block ``i`` of the object
+lives in physical block ``leases[i].block`` -- and exposes exactly three
+mutation verbs beyond growth:
+
+  * ``fork(owner, nblocks)``    -- COW-share a prefix into a new Mapping
+    (paper Table 1 row 'Copy-on-Write': aliasing, not copying);
+  * ``ensure_writable(idx)``    -- the COW write barrier: trade a shared
+    lease for an exclusive one, returning the (src, dst) physical copy
+    the caller must DMA (``kernels/block_copy``);
+  * ``migrate(to)``             -- move the whole object between the
+    device pool and the host swap tier (Table 1 rows 'Swapping' and
+    'Relocation': the new device blocks after a round trip need not
+    match the old ones -- the Mapping absorbs relocation).
+
+Growth (``ensure_capacity``) and the write barrier allocate *under
+pressure*: when the pool is exhausted the Arena consults its registered
+reclaimer (the serving engine's LIFO preemption) instead of failing, and
+raises ``LeaseRevokedError`` only when the requester itself had to be
+reclaimed.  That policy used to live inline in ``serve/engine.py``; it
+is Arena-level now so every client shares it.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, List, Optional, Tuple
+
+import numpy as np
+
+from repro.mem.blockpool import NULL_BLOCK
+from repro.mem.lease import Lease
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.mem.arena import Arena
+
+FLAT = "flat"
+RADIX = "radix"
+
+DEVICE = "device"
+HOST = "host"
+
+
+class Mapping:
+    """Ordered leases for one logical object (see module docstring)."""
+
+    __slots__ = ("arena", "pool_class", "owner", "kind", "leases",
+                 "placement", "_host_blocks", "freed")
+
+    def __init__(self, arena: "Arena", pool_class: str, owner,
+                 kind: str = FLAT):
+        if kind not in (FLAT, RADIX):
+            raise ValueError(f"unknown mapping kind {kind!r}")
+        self.arena = arena
+        self.pool_class = pool_class
+        self.owner = owner
+        self.kind = kind
+        self.leases: List[Lease] = []
+        self.placement = DEVICE
+        self._host_blocks = 0
+        self.freed = False
+
+    # -- views -----------------------------------------------------------
+    def __len__(self) -> int:
+        return (len(self.leases) if self.placement == DEVICE
+                else self._host_blocks)
+
+    def block_ids(self) -> List[int]:
+        return [l.block for l in self.leases]
+
+    def packed_table(self, capacity: int) -> np.ndarray:
+        """NULL-padded flat device table (the per-sequence 'page table')."""
+        t = np.full(capacity, NULL_BLOCK, np.int32)
+        ids = self.block_ids()
+        t[: len(ids)] = ids
+        return t
+
+    def locality(self) -> float:
+        """Fraction of logically-adjacent block pairs that are physically
+        adjacent -- the gather-locality half of the fragmentation story
+        (``ArenaStats.table_locality`` aggregates this over mappings)."""
+        ids = self.block_ids()
+        if len(ids) < 2:
+            return 1.0
+        adj = sum(1 for a, b in zip(ids, ids[1:]) if b == a + 1)
+        return adj / (len(ids) - 1)
+
+    # -- growth ----------------------------------------------------------
+    def append_blocks(self, n: int, *, pressure: bool = False) -> List[int]:
+        """Append ``n`` fresh exclusive leases; returns their block ids."""
+        if self.placement != DEVICE:
+            raise ValueError(f"append to {self.placement}-resident mapping")
+        fresh = self.arena.lease_blocks(self.pool_class, self.owner, n,
+                                        pressure=pressure)
+        self.leases.extend(fresh)
+        return [l.block for l in fresh]
+
+    def ensure_capacity(self, nblocks: int) -> List[int]:
+        """Grow to at least ``nblocks`` blocks (under pressure); returns
+        the newly added ids.  Atomic: on allocation failure the mapping
+        is unchanged."""
+        return self.append_blocks(max(0, nblocks - len(self.leases)),
+                                  pressure=True)
+
+    def pop_block(self) -> None:
+        """Release the trailing lease (BlockStack unlink path)."""
+        self.leases.pop().release()
+
+    # -- the three mutation verbs ---------------------------------------
+    def fork(self, owner, nblocks: int) -> "Mapping":
+        """COW: a new mapping aliasing this one's first ``nblocks`` blocks.
+
+        Pure refcount traffic -- no allocation, so it cannot hit pool
+        pressure; the deferred cost surfaces later at the write barrier.
+        """
+        if self.placement != DEVICE:
+            raise ValueError("fork of a host-resident mapping")
+        if nblocks > len(self.leases):
+            raise ValueError(
+                f"fork of {nblocks} blocks, parent holds {len(self.leases)}")
+        child = self.arena.mapping(self.pool_class, owner, kind=self.kind)
+        for l in self.leases[:nblocks]:
+            child.leases.append(l.share(owner))
+        return child
+
+    def ensure_writable(self, idx: int) -> Optional[Tuple[int, int]]:
+        """COW write barrier for logical block ``idx``.
+
+        Returns ``(src, dst)`` physical ids the caller MUST copy on
+        device before writing, or None when the block is already
+        exclusive.  Allocates the copy target under pressure (this is
+        the deferred claim admission cannot reserve -- see
+        ``serve/engine.py``); on ``LeaseRevokedError`` the mapping has
+        already been migrated out by the reclaimer.
+        """
+        lease = self.leases[idx]
+        if not lease.shared:
+            return None
+        [fresh] = self.arena.lease_blocks(self.pool_class, self.owner, 1,
+                                          pressure=True)
+        if not lease.shared:
+            # pressure reclaim evicted the last co-sharer mid-alloc:
+            # the block is exclusive now, no copy needed
+            fresh.release()
+            return None
+        self.leases[idx] = fresh
+        lease.release()
+        return lease.block, fresh.block
+
+    def migrate(self, to: str) -> List[int]:
+        """Move the object device<->host.
+
+        ``to="host"``: release every device lease and register host
+        residency; returns the vacated ids (the caller gathers their
+        payload BEFORE the pool positions are reused -- the gather reads
+        the current functional snapshot, so freeing first is safe).
+
+        ``to="device"``: reallocate (anywhere!) and return the fresh ids
+        to scatter the saved payload into -- block tables absorb the
+        relocation.
+        """
+        if to == HOST:
+            if self.placement != DEVICE:
+                raise ValueError("already host-resident")
+            ids = self.block_ids()
+            for l in self.leases:
+                l.release()
+            self.leases = []
+            self._host_blocks = len(ids)
+            self.placement = HOST
+            self.arena._host_register(self.pool_class, self.owner, len(ids))
+            return ids
+        if to == DEVICE:
+            if self.placement != HOST:
+                raise ValueError("already device-resident")
+            n = self.arena._host_unregister(self.pool_class, self.owner)
+            self.leases = self.arena.lease_blocks(self.pool_class,
+                                                  self.owner, n)
+            self._host_blocks = 0
+            self.placement = DEVICE
+            return self.block_ids()
+        raise ValueError(f"unknown placement {to!r}")
+
+    # -- teardown --------------------------------------------------------
+    def free(self) -> None:
+        """Release everything this mapping holds (either placement)."""
+        if self.freed:
+            raise ValueError(f"double free of mapping {self.owner!r}")
+        if self.placement == HOST:
+            self.arena._host_unregister(self.pool_class, self.owner)
+            self.arena.host_discard(self.pool_class, self.owner)
+        else:
+            for l in self.leases:
+                l.release()
+        self.leases = []
+        self.freed = True
+        self.arena._forget_mapping(self)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"Mapping({self.pool_class}/{self.owner!r} {self.kind} "
+                f"{self.placement} x{len(self)})")

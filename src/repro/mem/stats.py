@@ -1,0 +1,66 @@
+"""ArenaStats: the observability surface of the software address space.
+
+One struct, three consumers: ``benchmarks/bench_serve.py`` embeds it in
+``BENCH_serve.json``, ``repro.report`` renders it as a table, and tests
+use it for leak invariants (every engine test must end with zero
+non-pinned blocks used and an all-zero refcount histogram).
+
+Per pool class:
+
+  * blocks by owner and by placement (device leases vs host swap tier),
+  * the refcount histogram (``histogram[r]`` = blocks at refcount ``r``;
+    entries at r >= 2 are live COW sharing),
+  * ``fragmentation``: ``1 - used / span`` where span is the highest
+    used id + 1 -- 0.0 means the live blocks form a dense prefix (the
+    state ``Arena.compact()`` restores),
+  * ``table_locality``: mean over mappings of the fraction of logically
+    adjacent block pairs that are physically adjacent -- the quantity
+    that degrades as preemption/swap-in scatters tables, and the trigger
+    (together with plentiful free blocks) for the defrag pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class PoolClassStats:
+    name: str
+    num_blocks: int
+    num_free: int
+    num_used: int
+    pinned: int
+    blocks_by_owner: Dict[str, int]
+    host_blocks_by_owner: Dict[str, int]
+    refcount_histogram: List[int]
+    fragmentation: float
+    table_locality: float
+    mappings_by_kind: Dict[str, int]
+
+    @property
+    def host_blocks(self) -> int:
+        return sum(self.host_blocks_by_owner.values())
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["host_blocks"] = self.host_blocks
+        return d
+
+
+@dataclasses.dataclass
+class ArenaStats:
+    classes: Dict[str, PoolClassStats]
+    compactions: int = 0
+    blocks_compacted: int = 0
+
+    def __getitem__(self, name: str) -> PoolClassStats:
+        return self.classes[name]
+
+    def to_dict(self) -> dict:
+        return {
+            "compactions": self.compactions,
+            "blocks_compacted": self.blocks_compacted,
+            "classes": {k: v.to_dict() for k, v in self.classes.items()},
+        }

@@ -1,4 +1,9 @@
-"""Render dryrun_report.jsonl into the EXPERIMENTS.md roofline tables."""
+"""Render dryrun_report.jsonl into the EXPERIMENTS.md roofline tables,
+and ArenaStats snapshots (BENCH_serve.json) into the address-space table.
+
+    PYTHONPATH=src python -m repro.report dryrun_report.jsonl
+    PYTHONPATH=src python -m repro.report BENCH_serve.json   # ArenaStats
+"""
 
 from __future__ import annotations
 
@@ -60,9 +65,44 @@ def fmt_dryrun_table(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
-if __name__ == "__main__":
-    rows = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_report.jsonl")
+def fmt_arena_table(arena: Dict) -> str:
+    """Render an ``ArenaStats.to_dict()`` snapshot (the ``arena`` key of
+    BENCH_serve.json) as the unified-address-space table: one row per
+    pool class with placement split, sharing, and locality metrics."""
+    out = ["| pool class | blocks | used | free | pinned | host tier | "
+           "COW-shared | frag | table locality | owners |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for name in sorted(arena.get("classes", {})):
+        c = arena["classes"][name]
+        hist = c.get("refcount_histogram", [])
+        shared = sum(hist[2:]) if len(hist) > 2 else 0
+        out.append(
+            f"| {name} | {c['num_blocks']} | {c['num_used']} | "
+            f"{c['num_free']} | {c['pinned']} | {c['host_blocks']} | "
+            f"{shared} | {c['fragmentation']:.3f} | "
+            f"{c['table_locality']:.3f} | {len(c['blocks_by_owner'])} |")
+    out.append("")
+    out.append(f"compactions: {arena.get('compactions', 0)} "
+               f"(blocks moved: {arena.get('blocks_compacted', 0)})")
+    return "\n".join(out)
+
+
+def main(path: str) -> None:
+    if path.endswith(".json"):
+        with open(path) as f:
+            doc = json.load(f)
+        arena = doc.get("arena", doc if "classes" in doc else None)
+        if arena is None:
+            raise SystemExit(f"{path}: no ArenaStats ('arena' key) found")
+        print("### Unified address space (ArenaStats)\n")
+        print(fmt_arena_table(arena))
+        return
+    rows = load(path)
     print("### Single-pod (16x16 = 256 chips)\n")
     print(fmt_table(rows, "16x16"))
     print("\n### Multi-pod (2x16x16 = 512 chips)\n")
     print(fmt_table(rows, "pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_report.jsonl")

@@ -1,16 +1,23 @@
 """Serving mechanism layer: executes scheduler decisions on the device.
 
-The serving stack is three layers (see ``serve/README.md``):
+The serving stack is three layers over one address space
+(see ``serve/README.md`` and ``src/repro/mem/README.md``):
 
-  * ``scheduler.py`` -- POLICY: FCFS admission under a free-block
-    watermark, LIFO preemption, per-step prefill budgeting.  No jax.
-  * ``swap.py`` -- HOST STORE: block-granular device<->host transfers
-    whose cost scales with blocks held, never pool size.
+  * ``scheduler.py`` -- POLICY: FCFS admission negotiated against the
+    Arena's grantable leases (``free_blocks``), LIFO victim choice,
+    per-step prefill budgeting, dp-pool-group fork gating.  No jax.
+  * ``swap.py`` -- TRANSFERS: block-granular device<->host payload
+    moves whose cost scales with blocks held, never pool size;
+    residency lives in the Arena's host tier.
+  * ``repro.mem`` -- ADDRESS SPACE: allocation, refcounts, the COW
+    write barrier, pressure-time reclaim (this engine registers its
+    LIFO preemption as the Arena's reclaimer) and ``compact()``.
   * this module -- MECHANISM: one decode step for a fixed slot count B
     (padding empty slots, how a TPU serving binary keeps one compiled
     shape), ONE padded batched prefill for all of a step's admissions,
-    COW prefix sharing, and the bookkeeping that keeps host tables and
-    device state in lockstep.
+    COW prefix sharing, execution of COW-copy and compaction plans, and
+    the bookkeeping that keeps host tables and device state in
+    lockstep.
 
 COW prefix sharing end-to-end: every admitted prompt registers its
 block-aligned prefixes in a hash map; a later prompt that matches forks
@@ -31,9 +38,9 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blockpool import NULL_BLOCK, OutOfBlocksError
 from repro.core.paged_kv import PagedKVCache, PagedKVManager
 from repro.kernels import ops
+from repro.mem import NULL_BLOCK, Arena, LeaseRevokedError
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.swap import HostBlockStore
 
@@ -46,27 +53,58 @@ class Engine:
     model must expose prefill(params, batch, cache, lengths) and
     decode_step(params, tokens, cache); cache is a PagedKVCache (plain
     decoder LMs).  Greedy sampling.
+
+    All block bookkeeping lives in ONE ``repro.mem.Arena`` shared by the
+    KV manager, the scheduler's runtime structures and the host swap
+    tier.  The engine registers itself as the arena's *reclaimer*: when
+    any allocation (table growth, COW copy target) exhausts the pool,
+    the Arena calls back into LIFO preemption instead of failing -- the
+    fallback loop that used to live inline here is Arena policy now, and
+    ``LeaseRevokedError`` surfaces only when the requester itself was
+    the victim.
     """
 
     def __init__(self, model, params, *, slots: int, max_seq: int,
                  num_blocks: int, eos_id: int = 1, watermark: int = 0,
                  prefill_budget: Optional[int] = None,
-                 share_prefixes: bool = True):
+                 share_prefixes: bool = True,
+                 arena: Optional[Arena] = None, dp_groups: int = 1,
+                 auto_compact: bool = True,
+                 compact_free_frac: float = 0.5,
+                 compact_frag_threshold: float = 0.5):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.eos = eos_id
+        self.dp_groups = dp_groups
+        if dp_groups > 1:
+            # group-batched caches read table entries as group-LOCAL ids
+            # but the Arena still hands out GLOBAL ids -- running would
+            # silently corrupt the pool.  Fail loudly until allocation
+            # is group-partitioned (ROADMAP 'multi-pool dp_groups');
+            # Scheduler.validate_fork already gates cross-group fork
+            # admission for that future path.
+            raise NotImplementedError(
+                "dp_groups > 1 serving needs group-partitioned block "
+                "allocation; refusing to run with group-oblivious ids")
         kvcfg = model.kv_config(max_seq=max_seq, num_blocks=num_blocks,
-                                batch=slots)
+                                batch=slots, dp_groups=dp_groups)
+        self.arena = arena if arena is not None else Arena()
         self.cache = PagedKVCache.create(kvcfg, slots)
-        self.mgr = PagedKVManager(kvcfg)
+        self.mgr = PagedKVManager(kvcfg, arena=self.arena)
         # write sink: masked prefill-table entries (padded rows, COW-
-        # aliased prefixes) scatter here instead of into live blocks
-        self.sink = self.mgr.reserve_block()
+        # aliased prefixes) scatter here instead of into live blocks.
+        # Held as a pinned Lease -- compaction may relocate it.
+        self._sink = self.mgr.reserve_sink()
         self.sched = Scheduler(watermark=watermark,
-                               prefill_budget=prefill_budget)
-        self.store = HostBlockStore()
+                               prefill_budget=prefill_budget,
+                               arena=self.arena)
+        self.store = HostBlockStore(self.arena, self.mgr.pool_class)
+        self.arena.set_reclaimer(self._reclaim_for_pressure)
+        self.auto_compact = auto_compact
+        self.compact_free_frac = compact_free_frac
+        self.compact_frag_threshold = compact_frag_threshold
         self.running: Dict[int, Request] = {}   # slot -> req
         self.done: List[Request] = []
         self.share_prefixes = share_prefixes
@@ -79,6 +117,11 @@ class Engine:
         self.preemptions = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+
+    @property
+    def sink(self) -> int:
+        """Current physical id of the pinned write-sink block."""
+        return self._sink.block
 
     # ---------------- intake / compat views ----------------
     def submit(self, req: Request) -> None:
@@ -134,7 +177,7 @@ class Engine:
         bt = self.cache.config.block_tokens
         for k in range(len(pr) // bt, 0, -1):
             for rid in self._prefix_map.get((k, pr[: k * bt].tobytes()), []):
-                if rid == req.rid or rid not in self.mgr.tables \
+                if rid == req.rid or not self.mgr.has_seq(rid) \
                         or rid not in self._live_prompts:
                     continue
                 parent = self._live_prompts[rid]
@@ -166,6 +209,10 @@ class Engine:
             slot = free.pop(0)
             parent, shared = self._find_parent(req)
             if parent is not None:
+                # dp pool groups: a fork may only alias a parent in its
+                # own group -- fail loudly, never corrupt tables
+                self.sched.validate_fork(self._slot_of(parent), slot,
+                                         self.slots, self.dp_groups)
                 self.mgr.fork(parent, req.rid, shared)
                 self.mgr.extend(req.rid, len(req.prompt))
                 self.prefix_hits += 1
@@ -176,6 +223,12 @@ class Engine:
             batch.append((slot, req, shared))
         if batch:
             self._batched_prefill(batch)
+
+    def _slot_of(self, rid: int) -> int:
+        for slot, req in self.running.items():
+            if req.rid == rid:
+                return slot
+        raise KeyError(f"rid {rid} not running")
 
     def _place(self, req: Request, slot: int) -> None:
         req.state = "running"
@@ -245,6 +298,21 @@ class Engine:
             return
         self._preempt_slot(self.sched.pick_victim(self.running))
 
+    def _reclaim_for_pressure(self, requester) -> Optional[int]:
+        """Arena reclaimer: evict the LIFO victim, return its owner id.
+
+        Called by ``Arena._alloc_ids`` when a lease request cannot be
+        granted; the Arena keeps asking until the request fits or the
+        victim IS the requester (surfaced to the caller as
+        ``LeaseRevokedError``).
+        """
+        if not self.running:
+            return None
+        slot = self.sched.pick_victim(self.running)
+        rid = self.running[slot].rid
+        self._preempt_slot(slot)
+        return rid
+
     # ---------------- device-state sync ----------------
     def _sync_device_state(self) -> None:
         """Derive device tables AND seq_lens from host truth each step.
@@ -266,32 +334,39 @@ class Engine:
 
     # ---------------- main loop ----------------
     def _grow_for_next_token(self) -> None:
-        """Ensure every running seq can write this step's token; under
-        pressure, preempt LIFO victims until it can (possibly itself)."""
+        """Ensure every running seq can write this step's token.
+
+        Growth allocates under Arena pressure: exhaustion triggers the
+        registered reclaimer (LIFO preemption) inside the Arena; only
+        when the writer ITSELF was the victim does ``LeaseRevokedError``
+        surface here, and then the write is moot -- its blocks are
+        already on the host tier.
+        """
         for slot in sorted(self.running):
             if slot not in self.running:
                 continue
             req = self.running[slot]
-            while True:
-                try:
-                    self.mgr.extend(req.rid, req.tokens_held + 1)
-                    break
-                except OutOfBlocksError:
-                    victim = self.sched.pick_victim(self.running)
-                    self._preempt_slot(victim)
-                    if victim == slot:
-                        break
+            try:
+                self.mgr.extend(req.rid, req.tokens_held + 1)
+            except LeaseRevokedError:
+                continue
 
-    def _apply_block_copy(self, src: int, dst: int) -> None:
-        """One COW fulfilment DMA per pool stream (kernels.block_copy)."""
-        s = jnp.asarray([src], jnp.int32)
-        d = jnp.asarray([dst], jnp.int32)
+    def _execute_copy_plan(self, src, dst) -> None:
+        """Apply a (src, dst) block-copy plan to every pool stream
+        (kernels.block_copy): COW fulfilments and compaction both land
+        here."""
+        s = jnp.asarray(src, jnp.int32).reshape(-1)
+        d = jnp.asarray(dst, jnp.int32).reshape(-1)
         k_pool = ops.copy_pool_blocks(self.cache.k_pool, s, d)
         v_pool = self.cache.v_pool
         if v_pool is not None:
             v_pool = ops.copy_pool_blocks(v_pool, s, d)
         self.cache = dataclasses.replace(self.cache, k_pool=k_pool,
                                          v_pool=v_pool)
+
+    def _apply_block_copy(self, src: int, dst: int) -> None:
+        """One COW fulfilment DMA per pool stream."""
+        self._execute_copy_plan([src], [dst])
         self.cow_copies += 1
 
     def _cow_barrier(self) -> None:
@@ -299,31 +374,56 @@ class Engine:
 
         The copy-target block is a DEFERRED claim the admission check
         could not reserve (a forked child is charged its worst case but
-        allocates nothing while sharing), so like table growth this can
-        hit an exhausted pool: resolve by LIFO preemption, possibly of
-        the writer itself.  Each fulfilment copy is applied IMMEDIATELY
-        so a later preemption in the same pass gathers settled blocks.
+        allocates nothing while sharing).  The barrier itself is Arena
+        policy now (``Mapping.ensure_writable`` allocates the target
+        under pressure, falling back to LIFO preemption inside the
+        Arena); this loop only executes the returned copy plans.  Each
+        fulfilment copy is applied IMMEDIATELY so a later preemption in
+        the same pass gathers settled blocks.
         """
         for slot in sorted(self.running):
             if slot not in self.running:
                 continue
             req = self.running[slot]
-            while True:
-                try:
-                    plan = self.mgr.ensure_writable(req.rid,
-                                                    req.tokens_held)
-                    break
-                except OutOfBlocksError:
-                    victim = self.sched.pick_victim(self.running)
-                    self._preempt_slot(victim)
-                    if victim == slot:
-                        plan = None
-                        break
-            if slot in self.running and plan is not None:
+            try:
+                plan = self.mgr.ensure_writable(req.rid, req.tokens_held)
+            except LeaseRevokedError:
+                continue            # the writer itself was reclaimed
+            if plan is not None:
                 self._apply_block_copy(*plan)
+
+    # ---------------- compaction (Arena defrag) ----------------
+    def compact_now(self) -> int:
+        """One Arena ``compact()`` cycle: move live blocks to the dense
+        prefix, execute the copy plan on device, tables absorb the move.
+
+        Safe between steps (no writes in flight); every table built
+        afterwards (``_sync_device_state``, prefill tables) reads the
+        rewritten leases, so decoding is token-identical across the
+        relocation -- the paper's 'Relocation / Migration' row.  Returns
+        the number of blocks moved.
+        """
+        src, dst = self.arena.compact(self.mgr.pool_class)
+        if len(src):
+            self._execute_copy_plan(src, dst)
+        return len(src)
+
+    def _maybe_compact(self) -> None:
+        """ROADMAP defrag pass: run when free blocks are plentiful but
+        table locality has degraded (Arena policy).  Group-local id
+        spaces (dp_groups > 1) are skipped -- a dense prefix would cross
+        group ranges."""
+        if not self.auto_compact or self.dp_groups > 1:
+            return
+        if self.arena.should_compact(
+                self.mgr.pool_class,
+                min_free_frac=self.compact_free_frac,
+                frag_threshold=self.compact_frag_threshold):
+            self.compact_now()
 
     def step(self) -> None:
         """Admit what fits, grow tables, run one decode step."""
+        self._maybe_compact()
         self._admit()
         self.steps += 1
         if not self.running:
@@ -370,7 +470,13 @@ class Engine:
             "swap_out_bytes": st.swap_out_bytes,
             "swap_in_bytes": st.swap_in_bytes,
             "pool_utilization": self.mgr.utilization,
+            "compactions": self.arena.compactions,
+            "blocks_compacted": self.arena.blocks_compacted,
         }
+
+    def arena_stats(self):
+        """The unified address space's ``ArenaStats`` snapshot."""
+        return self.arena.stats()
 
     def check_consistency(self) -> None:
         """Invariant audit (used by tests after every step)."""
@@ -381,7 +487,7 @@ class Engine:
         lens = np.asarray(self.cache.seq_lens)
         for slot, req in self.running.items():
             assert req.state == "running" and req.slot == slot
-            tbl = self.mgr.tables[req.rid]
+            tbl = self.mgr.block_ids(req.rid)
             assert len(tbl) * bt >= req.tokens_held
             assert all(alloc.is_allocated(b) for b in tbl)
             assert lens[slot] == req.tokens_held, (slot, lens[slot],
@@ -389,3 +495,5 @@ class Engine:
         assert len(self.store) == len(self.mgr.swapped)
         for rid in self.mgr.swapped:
             assert rid in self.store
+        # lease registry mirrors allocator refcounts exactly
+        self.arena.check_registry(self.mgr.pool_class)

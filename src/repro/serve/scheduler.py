@@ -41,6 +41,24 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.stack import BlockStack
+from repro.mem import Arena
+
+
+class PoolGroupMismatchError(RuntimeError):
+    """A fork's parent lives in a different dp pool group than the child.
+
+    With ``dp_groups > 1`` block tables hold GROUP-LOCAL ids: aliasing a
+    parent block from another group would silently address a different
+    physical block in the child's pool range, corrupting both tables.
+    Admission rejects the fork loudly instead (ROADMAP 'dp_groups > 1
+    serving' seam).
+    """
+
+
+def slot_group(slot: int, slots: int, dp_groups: int) -> int:
+    """Pool group of a batch slot: slots split into dp_groups contiguous
+    ranges, co-sharded with the pool's block dim (see PagedKVConfig)."""
+    return slot * dp_groups // slots
 
 
 @dataclasses.dataclass
@@ -77,8 +95,13 @@ class StepPlan:
 class Scheduler:
     """Policy-only continuous-batching scheduler (see module docstring)."""
 
+    #: pool class for the scheduler's own runtime structures (the
+    #: preempted-LIFO BlockStack) when it shares the engine's Arena
+    META_CLASS = "sched-meta"
+
     def __init__(self, *, watermark: int = 0,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 arena: Optional[Arena] = None):
         if watermark < 0:
             raise ValueError("watermark must be >= 0")
         if prefill_budget is not None and prefill_budget <= 0:
@@ -86,7 +109,16 @@ class Scheduler:
         self.watermark = watermark
         self.prefill_budget = prefill_budget
         self.queue: List[Request] = []           # FCFS arrivals
-        self.preempted = BlockStack(block_size=256)   # LIFO resume order
+        if arena is not None:
+            # scheduler scratch rides the same address space as the KV
+            # pool -- NOTHING in the runtime asks for contiguous memory
+            arena.register_class(self.META_CLASS, num_blocks=4096,
+                                 block_nbytes=256 * 8)
+            self.preempted = BlockStack(block_size=256, arena=arena,
+                                        pool_class=self.META_CLASS,
+                                        owner="scheduler.preempted")
+        else:
+            self.preempted = BlockStack(block_size=256)  # LIFO resume order
         self._admit_counter = 0
 
     # ---------------- intake ----------------
@@ -112,15 +144,19 @@ class Scheduler:
                         num_running: int) -> StepPlan:
         """Pop as many candidates as policy allows this step.
 
-        ``mem`` is the block-accounting view (PagedKVManager or
-        anything with ``blocks_needed(tokens)`` and an
-        ``allocator.num_free``).  Candidates are considered strictly in
-        order (resumes LIFO first, then the FCFS queue head); the first
-        one that does not fit ends admission -- no queue jumping, so
-        admission order equals completion-pressure order.
+        ``mem`` is the lease-negotiation view (PagedKVManager or
+        anything with ``blocks_needed(tokens)`` and ``free_blocks`` --
+        the number of leases the shared Arena can grant right now;
+        legacy stubs exposing ``allocator.num_free`` still work).
+        Candidates are considered strictly in order (resumes LIFO first,
+        then the FCFS queue head); the first one that does not fit ends
+        admission -- no queue jumping, so admission order equals
+        completion-pressure order.
         """
         plan = StepPlan()
-        free = mem.allocator.num_free
+        free = getattr(mem, "free_blocks", None)
+        if free is None:                     # legacy accounting stubs
+            free = mem.allocator.num_free
         budget = self.prefill_budget
         while free_slots > 0:
             from_preempted = len(self.preempted) > 0
@@ -159,3 +195,25 @@ class Scheduler:
         if not running:
             raise ValueError("no running requests to preempt")
         return max(running, key=lambda s: running[s].admit_order)
+
+    # ---------------- fork admission (dp pool groups) ----------------
+    @staticmethod
+    def validate_fork(parent_slot: int, child_slot: int, slots: int,
+                      dp_groups: int) -> None:
+        """Admission gate for COW forks under data-parallel pool groups.
+
+        Block tables hold group-local ids when ``dp_groups > 1``, so a
+        child may only alias a parent resident in ITS OWN pool group;
+        anything else must fail loudly (silent aliasing across groups
+        corrupts both tables).  No-op for the common dp_groups == 1.
+        """
+        if dp_groups <= 1:
+            return
+        pg = slot_group(parent_slot, slots, dp_groups)
+        cg = slot_group(child_slot, slots, dp_groups)
+        if pg != cg:
+            raise PoolGroupMismatchError(
+                f"fork parent in pool group {pg} (slot {parent_slot}) "
+                f"but child in group {cg} (slot {child_slot}); "
+                f"cross-group aliasing of group-local block ids would "
+                f"corrupt both tables")

@@ -1,10 +1,15 @@
-"""Host block store: block-granular device<->host swap (paper 'Swapping').
+"""Host swap transfers: block-granular device<->host (paper 'Swapping').
 
-The mechanism half of preemption.  Swap-out first runs a COMPACT gather
-on device (``kernels.block_copy.gather_blocks`` -- only the preempted
-sequence's blocks, ``k_pool[:, idx]``), then moves that one small array
-host-side; swap-in scatters the saved payload into freshly allocated
-blocks.  Bytes moved are therefore exactly
+The mechanism half of preemption, now a thin TRANSFER layer over the
+``repro.mem.Arena`` host tier: residency (who lives host-side, how many
+blocks) is Arena state written by ``Mapping.migrate``; this module only
+moves payloads and keeps the byte ledger.  Swap-out first runs a COMPACT
+gather on device (``kernels.block_copy.gather_blocks`` -- only the
+preempted sequence's blocks, ``k_pool[:, idx]``), then moves that one
+small array host-side and deposits it in the arena
+(``Arena.host_deposit``); swap-in takes the payload back
+(``Arena.host_take``) and scatters it into freshly allocated blocks.
+Bytes moved are therefore exactly
 
     blocks_held * config.swap_nbytes_per_block()
 
@@ -21,13 +26,14 @@ report swap traffic per step and tests can assert the proportionality.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paged_kv import PagedKVCache
 from repro.kernels import ops
+from repro.mem import Arena
 
 
 @dataclasses.dataclass
@@ -43,17 +49,25 @@ class SwapStats:
 
 
 class HostBlockStore:
-    """Host-side home for preempted sequences' KV blocks."""
+    """Transfer layer for preempted sequences' KV payloads.
 
-    def __init__(self):
-        self._store: Dict[int, Tuple[np.ndarray, Optional[np.ndarray]]] = {}
+    Standalone construction (no arena) creates a private Arena so the
+    class keeps working as a self-contained store; serving passes the
+    engine's shared arena + pool class so host-tier residency, payloads
+    and ``ArenaStats`` placement counts all live in ONE address space.
+    """
+
+    def __init__(self, arena: Optional[Arena] = None,
+                 pool_class: str = "kv"):
+        self.arena = arena if arena is not None else Arena()
+        self.pool_class = pool_class
         self.stats = SwapStats()
 
     def __contains__(self, seq_id: int) -> bool:
-        return seq_id in self._store
+        return self.arena.host_contains(self.pool_class, seq_id)
 
     def __len__(self) -> int:
-        return len(self._store)
+        return self.arena.host_len(self.pool_class)
 
     # ---------------- device -> host ----------------
     def swap_out(self, seq_id: int, cache: PagedKVCache,
@@ -70,8 +84,9 @@ class HostBlockStore:
         v_host = None
         if cache.v_pool is not None:
             v_host = np.asarray(ops.gather_blocks(cache.v_pool, idx))
-        self._store[seq_id] = (k_host, v_host)
         moved = k_host.nbytes + (0 if v_host is None else v_host.nbytes)
+        self.arena.host_deposit(self.pool_class, seq_id, (k_host, v_host),
+                                moved)
         st = self.stats
         st.swap_outs += 1
         st.swap_out_bytes += moved
@@ -84,7 +99,7 @@ class HostBlockStore:
         """Scatter the saved payload into ``new_ids`` (any physical
         blocks -- the table absorbs relocation) and return the updated
         cache."""
-        k_host, v_host = self._store.pop(seq_id)
+        k_host, v_host = self.arena.host_take(self.pool_class, seq_id)
         if len(new_ids) != k_host.shape[1]:
             raise ValueError(
                 f"swap-in of {k_host.shape[1]} saved blocks into "
@@ -100,6 +115,7 @@ class HostBlockStore:
             0 if v_host is None else v_host.nbytes)
         return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool)
 
-    def drop(self, seq_id: int) -> None:
-        """Discard a stored sequence (cancelled while preempted)."""
-        self._store.pop(seq_id, None)
+    # NOTE: cancelling a sequence while preempted goes through
+    # ``PagedKVManager.release`` (``Mapping.free``), which tears down
+    # host residency AND payload together -- a store-level drop would
+    # desync the two views the engine's check_consistency pins.

@@ -11,3 +11,18 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
+
+
+def assert_engine_quiescent(eng):
+    """Suite-wide leak invariant for serving-engine tests.
+
+    After a workload fully drains, the unified Arena must be back to
+    zero non-pinned blocks used, an all-zeros refcount histogram (no
+    stranded COW shares) and an empty host swap tier -- in every pool
+    class (KV, scheduler metadata, ...).  Engine tests call this as
+    their last line so allocator leaks fail loudly at the test that
+    introduced them.
+    """
+    assert not eng.running, f"sequences still running: {eng.running}"
+    assert not eng.sched.has_work, "scheduler still has queued work"
+    eng.arena.assert_quiescent()

@@ -58,6 +58,40 @@ ENTRY %main (t: f32[1024,32], ids: s32[8,1]) -> f32[8,32] {
     assert c.by_op == {"gather": 2080.0}
 
 
+def test_convolution_flops_exact():
+    """Conv FLOPs are kernel_spatial x in_channels per output element
+    (not the old 2x-result-elements approximation): a 3x3 conv over 4
+    input channels does a 36-long dot per output element."""
+    hlo = """
+HloModule m
+
+ENTRY %main (x: f32[1,8,8,4], w: f32[3,3,4,16]) -> f32[1,8,8,16] {
+  %x = f32[1,8,8,4]{3,2,1,0} parameter(0)
+  %w = f32[3,3,4,16]{3,2,1,0} parameter(1)
+  ROOT %conv = f32[1,8,8,16]{3,2,1,0} convolution(f32[1,8,8,4]{3,2,1,0} %x, f32[3,3,4,16]{3,2,1,0} %w), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+"""
+    c = _c(hlo)
+    assert c.flops == 2 * (1 * 8 * 8 * 16) * (3 * 3 * 4)
+
+
+def test_convolution_flops_depthwise_grouped():
+    """Grouped conv: the kernel's 'i' dim is already per-group in HLO,
+    so no feature_group_count correction applies -- depthwise (i=1)
+    bills only kernel-spatial FLOPs per output element."""
+    hlo = """
+HloModule m
+
+ENTRY %main (x: f32[1,8,8,4], w: f32[3,3,1,4]) -> f32[1,8,8,4] {
+  %x = f32[1,8,8,4]{3,2,1,0} parameter(0)
+  %w = f32[3,3,1,4]{3,2,1,0} parameter(1)
+  ROOT %conv = f32[1,8,8,4]{3,2,1,0} convolution(f32[1,8,8,4]{3,2,1,0} %x, f32[3,3,1,4]{3,2,1,0} %w), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f, feature_group_count=4
+}
+"""
+    c = _c(hlo)
+    assert c.flops == 2 * (1 * 8 * 8 * 4) * (3 * 3 * 1)
+
+
 def test_scan_matmul_trips_from_backend_config():
     # 128x128x128 dot inside a while with known_trip_count n=12
     hlo = """

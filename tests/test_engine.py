@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 from repro.models.api import build_model
 from repro.serve.engine import Engine, Request
+from conftest import assert_engine_quiescent
 
 
 @pytest.fixture(scope="module")
@@ -54,6 +55,7 @@ def test_engine_matches_reference(setup, rng):
     for req in sorted(done, key=lambda r: r.rid):
         ref = greedy_reference(model, params, req.prompt, 6)
         assert req.generated == ref, (req.rid, req.generated, ref)
+    assert_engine_quiescent(eng)
 
 
 def test_engine_admission_pressure(setup, rng):
@@ -72,6 +74,7 @@ def test_engine_admission_pressure(setup, rng):
         peak = max(peak, eng.mgr.allocator.num_used)
     assert len(eng.done) == 5
     assert peak <= 10
+    assert_engine_quiescent(eng)
 
 
 def test_engine_swap_out_in(setup, rng):
@@ -91,6 +94,7 @@ def test_engine_swap_out_in(setup, rng):
     assert done[0].generated == ref
     assert done[0].generated[: len(partial)] == partial
     assert eng.store.stats.swap_outs == 1 and eng.store.stats.swap_ins == 1
+    assert_engine_quiescent(eng)
 
 
 def test_engine_preempt_keys_on_admission_order(setup, rng):
@@ -118,6 +122,7 @@ def test_engine_preempt_keys_on_admission_order(setup, rng):
     for req in done:
         ref = greedy_reference(model, params, req.prompt, 8)
         assert req.generated == ref
+    assert_engine_quiescent(eng)
 
 
 def test_engine_preempt_during_extend_consistent(setup, rng):
@@ -140,6 +145,7 @@ def test_engine_preempt_during_extend_consistent(setup, rng):
     for req in sorted(eng.done, key=lambda r: r.rid):
         ref = greedy_reference(model, params, req.prompt, 12, max_seq=32)
         assert req.generated == ref, (req.rid, req.generated, ref)
+    assert_engine_quiescent(eng)
 
 
 def test_engine_cow_fork(setup, rng):
@@ -163,3 +169,4 @@ def test_engine_cow_fork(setup, rng):
     ref = greedy_reference(model, params, pr, 4)
     for req in done:
         assert req.generated == ref
+    assert_engine_quiescent(eng)

@@ -18,8 +18,10 @@ from repro.configs.base import get_config
 from repro.core.paged_kv import PagedKVCache, PagedKVConfig, PagedKVManager
 from repro.models.api import build_model
 from repro.serve.engine import Engine, Request
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import (PoolGroupMismatchError, Scheduler,
+                                   slot_group)
 from repro.serve.swap import HostBlockStore
+from conftest import assert_engine_quiescent
 
 
 @pytest.fixture(scope="module")
@@ -176,6 +178,30 @@ def test_scheduler_full_footprint_gate():
     assert [r.rid for r in plan.admit] == [0]
 
 
+def test_scheduler_rejects_cross_group_fork():
+    """dp_groups > 1: block tables hold group-local ids, so a fork may
+    only alias a parent in its own pool group -- anything else fails
+    loudly at admission instead of silently corrupting tables."""
+    # 4 slots over 2 groups: slots 0,1 -> group 0; slots 2,3 -> group 1
+    assert [slot_group(s, 4, 2) for s in range(4)] == [0, 0, 1, 1]
+    Scheduler.validate_fork(0, 1, 4, 2)        # same group: fine
+    Scheduler.validate_fork(0, 3, 4, 1)        # dp_groups == 1: no-op
+    with pytest.raises(PoolGroupMismatchError):
+        Scheduler.validate_fork(0, 2, 4, 2)
+    with pytest.raises(PoolGroupMismatchError):
+        Scheduler.validate_fork(3, 0, 4, 2)
+
+
+def test_engine_rejects_group_oblivious_dp_serving(setup):
+    """dp_groups > 1 serving fails LOUDLY at construction: the Arena
+    still hands out global ids while group-batched caches read tables
+    as group-local -- running would corrupt the pool silently."""
+    cfg, model, params = setup
+    with pytest.raises(NotImplementedError):
+        Engine(model, params, slots=2, max_seq=32, num_blocks=8,
+               eos_id=-1, dp_groups=2)
+
+
 def test_cow_barrier_under_pool_exhaustion(setup, rng):
     """Regression: the COW copy target is a deferred claim admission
     cannot reserve; when concurrent growth drains the pool first, the
@@ -200,10 +226,12 @@ def test_cow_barrier_under_pool_exhaustion(setup, rng):
     for req in sorted(done, key=lambda r: r.rid):
         ref = greedy_reference(model, params, req.prompt, 4, max_seq=32)
         assert req.generated == ref, (req.rid, req.generated, ref)
+    assert_engine_quiescent(eng)
 
 
 # ---------------------------------------------------------------------------
-# the acceptance workload: mixed prompts, forced preemption, forked prompts
+# the acceptance workload: mixed prompts, forced preemption, forked
+# prompts, and at least one Arena compact() cycle mid-flight
 # ---------------------------------------------------------------------------
 def test_scripted_workload_token_identical(setup, rng):
     cfg, model, params = setup
@@ -232,9 +260,18 @@ def test_scripted_workload_token_identical(setup, rng):
         if eng.steps == 3 and eng.running and not forced:
             eng.preempt_latest()               # forced mid-flight preemption
             forced = True
+        if forced and eng.arena.compactions == 0 \
+                and eng.arena.fragmentation(eng.mgr.pool_class) > 0:
+            # force one defrag cycle mid-flight: live blocks move to the
+            # dense prefix, tables absorb the relocation
+            moved = eng.compact_now()
+            assert moved > 0
+            assert eng.arena.fragmentation(eng.mgr.pool_class) == 0.0
+            eng.check_consistency()
     assert len(eng.done) == 5
     assert forced and eng.store.stats.swap_outs >= 1
     assert eng.prefix_hits >= 2                # rid=2 and rid=3 forked
+    assert eng.arena.compactions >= 1          # the defrag pass really ran
     # every swap-out moved exactly blocks_held * block bytes -- never more
     per_block = eng.cache.config.swap_nbytes_per_block()
     for seq_id, nblocks, nbytes in eng.store.stats.out_log:
@@ -244,3 +281,4 @@ def test_scripted_workload_token_identical(setup, rng):
     for req in sorted(eng.done, key=lambda r: r.rid):
         ref = greedy_reference(model, params, req.prompt, req.max_new)
         assert req.generated == ref, (req.rid, req.generated, ref)
+    assert_engine_quiescent(eng)

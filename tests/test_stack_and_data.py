@@ -30,17 +30,24 @@ def test_blockstack_matches_list(ops, bs):
     assert s.num_blocks <= len(ref) // bs + 2
 
 
-def test_blockstack_with_shared_allocator():
-    alloc = BlockAllocator(8)
-    s1 = BlockStack(block_size=2, allocator=alloc)
-    s2 = BlockStack(block_size=2, allocator=alloc)
+def test_blockstack_with_shared_arena():
+    from repro.mem import Arena
+    arena = Arena()
+    arena.register_class("stack", num_blocks=8, block_nbytes=2 * 8)
+    s1 = BlockStack(block_size=2, arena=arena, pool_class="stack", owner="s1")
+    s2 = BlockStack(block_size=2, arena=arena, pool_class="stack", owner="s2")
     for i in range(6):
         s1.push(i)
         s2.push(i)
-    assert alloc.num_used == 6
+    assert arena.num_used("stack") == 6
+    assert arena.stats()["stack"].blocks_by_owner == {"s1": 3, "s2": 3}
     for _ in range(6):
         s1.pop()
-    assert alloc.num_used <= 4
+    # fully drained stacks unlink everything (shared-arena leak rule)
+    assert arena.num_used("stack") == 3
+    for _ in range(6):
+        s2.pop()
+    arena.assert_quiescent()
 
 
 def test_device_block_stack():

@@ -60,14 +60,25 @@ def test_gups_scatter_add(rng):
                                atol=1e-5)
 
 
-def test_shared_allocator_tenants():
-    """Many trees share one arena without interference."""
-    alloc = BlockAllocator(64)
+def test_shared_arena_tenants():
+    """Many trees share one unified Arena (radix mappings) without
+    interference, and free back to a quiescent address space."""
+    from repro.mem import Arena
+    arena = Arena()
+    arena.register_class("tree", num_blocks=64, block_shape=(8,),
+                         dtype=np.float32)
     xs = [np.arange(i * 13 + 1, dtype=np.float32) for i in range(5)]
-    ts = [TreeArray.from_dense(x, leaf_size=8, fanout=4, allocator=alloc)
-          for x in xs]
+    ts = [TreeArray.from_dense(x, leaf_size=8, fanout=4, arena=arena,
+                               pool_class="tree", owner=f"t{i}")
+          for i, x in enumerate(xs)]
+    st = arena.stats()["tree"]
+    assert st.mappings_by_kind == {"radix": 5}
+    assert st.num_used == sum(t.num_logical_leaves for t in ts)
     for x, t in zip(xs, ts):
         np.testing.assert_array_equal(np.asarray(t.to_dense()), x)
+    for t in ts:
+        t.arena_mapping.free()
+    arena.assert_quiescent()
 
 
 def test_set_updates_single_element(rng):
