@@ -15,6 +15,14 @@ writes ``BENCH_serve.json``:
   * arena                -- the unified address space's ``ArenaStats``
     snapshot (blocks by owner/placement per pool class, refcount
     histogram, fragmentation, table locality)
+  * transfers           -- the transfer plane's ``TransferStats``
+    (plans/bytes per direction, coalesced launches, overlapped host
+    copies); also written standalone to ``BENCH_transfers.json``
+
+``--smoke`` additionally re-runs the identical workload with
+``overlap_transfers=False`` (the synchronous ``drain()`` fallback) and
+asserts swap bytes/step is BYTE-IDENTICAL between the two schedules --
+the transfer plane may only reschedule traffic, never change it.
 
 ``--baseline PATH`` compares tokens/s against a committed report and
 exits non-zero on a regression beyond ``--regress-frac`` (CI gate).
@@ -31,23 +39,51 @@ import numpy as np
 import jax
 
 OUT_JSON = "BENCH_serve.json"
+OUT_TRANSFERS = "BENCH_transfers.json"
 
 
-def build(args):
+# model/params reused between the overlapped and drain() runs of
+# --smoke (identical weights are a precondition of the equivalence
+# assertion); lives for the process like any loaded checkpoint would
+_MODEL_CACHE = {}
+
+
+def build(args, overlap: bool = True):
     from repro.configs.base import get_config
     from repro.models.api import build_model
     from repro.serve.engine import Engine
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg, max_positions=args.max_seq)
-    params, _ = model.init(jax.random.PRNGKey(args.seed))
+    key = (args.arch, bool(args.reduced), args.max_seq, args.seed)
+    if key not in _MODEL_CACHE:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        model = build_model(cfg, max_positions=args.max_seq)
+        params, _ = model.init(jax.random.PRNGKey(args.seed))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    cfg, model, params = _MODEL_CACHE[key]
     eng = Engine(model, params, slots=args.slots, max_seq=args.max_seq,
                  num_blocks=args.num_blocks, eos_id=-1,
                  watermark=args.watermark,
-                 prefill_budget=args.prefill_budget)
+                 prefill_budget=args.prefill_budget,
+                 overlap_transfers=overlap)
     return cfg, eng
+
+
+def drive(cfg, eng, args):
+    """Run the scripted workload; returns wall time.  Forces at least
+    one preemption round-trip mid-run so swap traffic is always
+    measured, even when the pool happens to fit everything."""
+    workload(cfg, eng, args)
+    forced = False
+    t0 = time.perf_counter()
+    while (eng.sched.has_work or eng.running) and eng.steps < 10_000:
+        eng.step()
+        if eng.steps == 4 and eng.running and not forced:
+            eng.preempt_latest()
+            forced = True
+    eng.sync_transfers()
+    return time.perf_counter() - t0
 
 
 def workload(cfg, eng, args):
@@ -102,17 +138,7 @@ def main(argv=None):
         args.reduced = True
 
     cfg, eng = build(args)
-    workload(cfg, eng, args)
-    # force at least one preemption round-trip mid-run so swap traffic
-    # is always measured, even when the pool happens to fit everything
-    forced = {"done": False}
-    t0 = time.perf_counter()
-    while (eng.sched.has_work or eng.running) and eng.steps < 10_000:
-        eng.step()
-        if eng.steps == 4 and eng.running and not forced["done"]:
-            eng.preempt_latest()
-            forced["done"] = True
-    dt = time.perf_counter() - t0
+    dt = drive(cfg, eng, args)
 
     st = eng.stats
     swp = eng.store.stats
@@ -144,17 +170,42 @@ def main(argv=None):
         "compactions": st["compactions"],
         "blocks_compacted": st["blocks_compacted"],
         "pool_utilization_final": round(st["pool_utilization"], 3),
+        "watermark_effective": st["watermark_effective"],
         "arena": eng.arena_stats().to_dict(),
+        "transfers": st["transfers"],
+        "overlap_transfers": True,
         "all_ok": (len(eng.done) == args.requests
                    and st["prefix_hits"] > 0
                    and st["swap_out_bytes"]
                    == blocks_swapped * per_block),
     }
+    if args.smoke:
+        # the transfer plane may only RESCHEDULE traffic, never change
+        # it: the drain() fallback must move byte-identical swap volume
+        # per step and decode identical tokens
+        cfg2, eng2 = build(args, overlap=False)
+        drive(cfg2, eng2, args)
+        st2 = eng2.stats
+        report["sync_swap_bytes_per_step"] = round(
+            (st2["swap_out_bytes"] + st2["swap_in_bytes"])
+            / max(eng2.steps, 1), 1)
+        report["overlap_equivalent"] = (
+            st2["swap_out_bytes"] == st["swap_out_bytes"]
+            and st2["swap_in_bytes"] == st["swap_in_bytes"]
+            and eng2.steps == eng.steps
+            and [list(r.generated) for r in sorted(
+                eng2.done, key=lambda r: r.rid)]
+            == [list(r.generated) for r in sorted(
+                eng.done, key=lambda r: r.rid)])
+        report["all_ok"] = report["all_ok"] and report["overlap_equivalent"]
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)
+    with open(OUT_TRANSFERS, "w") as f:
+        json.dump(report["transfers"], f, indent=2)
     print(f"bench_serve,{dt * 1e6:.0f},tok_s={report['tokens_per_s']},"
           f"hit_rate={report['prefix_share_hit_rate']},"
           f"swapB_step={report['swap_bytes_per_step']},"
+          f"overlapped={report['transfers']['overlapped']},"
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)

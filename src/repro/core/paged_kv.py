@@ -246,7 +246,8 @@ class PagedKVManager:
         self.arena = arena if arena is not None else Arena()
         self.pool_class = self.arena.register_class(
             pool_class, num_blocks=config.num_blocks,
-            block_nbytes=config.swap_nbytes_per_block())
+            block_nbytes=config.swap_nbytes_per_block(),
+            dp_groups=config.dp_groups)
         self._maps: dict[int, Mapping] = {}
 
     # -- compat views over the Arena -----------------------------------
@@ -314,6 +315,18 @@ class PagedKVManager:
     def release(self, seq_id: int) -> None:
         self._maps.pop(seq_id).free()
 
+    def adopt(self, seq_id: int, mapping: Mapping) -> None:
+        """Register an existing Arena mapping under this manager (the
+        restart path: ``Arena.restore`` rebuilds host-resident mappings
+        and the engine re-adopts them so preempted sequences resume)."""
+        if mapping.pool_class != self.pool_class:
+            raise ValueError(
+                f"adopt of mapping in pool class {mapping.pool_class!r}; "
+                f"this manager allocates in {self.pool_class!r}")
+        if seq_id in self._maps:
+            raise ValueError(f"sequence {seq_id} already tracked")
+        self._maps[seq_id] = mapping
+
     def reserve_sink(self):
         """Pin one block (never handed to a sequence).
 
@@ -356,11 +369,12 @@ class PagedKVManager:
         """COW write barrier for the block covering ``token_pos``.
 
         If that block is shared (refcount > 1) the sequence gets a fresh
-        private block in its table and ``(src, dst)`` is returned -- the
-        caller MUST copy the payload src -> dst on device (one
-        ``block_copy`` DMA) before writing.  Returns None when the block
-        is already exclusively owned.  The fresh block is a deferred
-        claim allocated under pressure (see ``Mapping.ensure_writable``).
+        private block in its table and the fulfilment copy is ENQUEUED
+        on the Arena's transfer plane (the fresh block stays in-flight
+        until the engine dispatches the queue); ``(src, dst)`` is
+        returned for copy-traffic accounting, None when the block is
+        already exclusively owned.  The fresh block is a deferred claim
+        allocated under pressure (see ``Mapping.ensure_writable``).
         """
         return self._maps[seq_id].ensure_writable(
             token_pos // self.config.block_tokens)
@@ -370,16 +384,17 @@ class PagedKVManager:
         """Migrate a preempted sequence to the host tier; return the
         vacated device ids.
 
-        Payload transfer is the caller's job (gather the returned ids
-        BEFORE reusing the pool -- ``serve/swap.py`` does both in one
-        motion and deposits the payload back into the Arena's host
-        tier).
+        The payload move is a d2h plan on the Arena's transfer plane:
+        the vacated ids stay held until its gather is dispatched, and
+        the host copy lands at the next fence (``serve/swap.py`` keeps
+        the byte ledger).
         """
         return self._maps[seq_id].migrate("host")
 
     def swap_in(self, seq_id: int) -> List[int]:
         """Migrate back: reallocate (anywhere!) and return the new block
-        ids to fill.
+        ids, with the scatter of the saved payload enqueued as an h2d
+        plan.
 
         The new physical blocks need not match the old ones -- block
         tables absorb the relocation, which is the paper's 'Relocation /

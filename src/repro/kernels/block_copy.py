@@ -31,6 +31,10 @@ def _gather_kernel(idx_ref, pool_ref, out_ref):
     out_ref[...] = pool_ref[...]
 
 
+def _scatter_kernel(idx_ref, payload_ref, pool_ref, out_ref):
+    out_ref[...] = payload_ref[...]
+
+
 def block_copy(pool: jax.Array, src: jax.Array, dst: jax.Array,
                *, interpret: bool = False) -> jax.Array:
     """pool: (NB, *block); src/dst: (n,) int32 -> pool with plan applied.
@@ -87,6 +91,38 @@ def gather_blocks(pool: jax.Array, idx: jax.Array,
         out_shape=jax.ShapeDtypeStruct((L, n) + blk, pool.dtype),
         interpret=interpret,
     )(idx, pool)
+
+
+def scatter_blocks(pool: jax.Array, idx: jax.Array, payload: jax.Array,
+                   *, interpret: bool = False) -> jax.Array:
+    """pool: (L, NB, *block); idx: (n,); payload: (L, n, *block).
+
+    Grid step (l, i) DMAs payload[l, i] into pool position ``idx[i]`` --
+    the device half of swap-in, and the inverse of ``gather_blocks``.
+    Together they are the transfer plane's d2h/h2d executors: one plan
+    entry moves a whole block across the L axis, and a batched plan (the
+    multi-plan coalesced form) is a single launch over the concatenated
+    id vector.  ``idx`` entries must be distinct (fresh allocations are).
+    """
+    L, n = pool.shape[0], idx.shape[0]
+    blk = pool.shape[2:]
+    ones = (1, 1) + blk
+    zeros = tuple(0 for _ in blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L, n),
+        in_specs=[pl.BlockSpec(ones, lambda l, i, s: (l, i) + zeros),
+                  pl.BlockSpec(ones, lambda l, i, s: (l, s[i]) + zeros)],
+        out_specs=pl.BlockSpec(ones, lambda l, i, s: (l, s[i]) + zeros),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+        input_output_aliases={2: 0},
+    )(idx, payload, pool)
 
 
 def copy_pool_blocks(pool: jax.Array, src: jax.Array, dst: jax.Array,

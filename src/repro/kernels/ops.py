@@ -80,6 +80,14 @@ def copy_pool_blocks(pool, src, dst, interpret: Optional[bool] = None):
                                 interpret=_use_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_blocks(pool, idx, payload, interpret: Optional[bool] = None):
+    """Scatter a compact (L, n, *block) payload into blocks ``idx``
+    (swap-in path -- the inverse of ``gather_blocks``)."""
+    return _bc.scatter_blocks(pool, idx, payload,
+                              interpret=_use_interpret(interpret))
+
+
 # re-export oracles for convenience
 tree_gather_ref = kref.tree_gather_ref
 tree_block_sum_ref = kref.tree_block_sum_ref

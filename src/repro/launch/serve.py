@@ -49,10 +49,14 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--num-blocks", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--watermark", type=int, default=0,
-                    help="free blocks kept as growth headroom")
+    ap.add_argument("--watermark", type=int, default=None,
+                    help="free blocks kept as growth headroom (default: "
+                         "adaptive from the observed growth EWMA)")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="max prompt tokens prefilled per step")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="synchronous transfers (drain per enqueue) "
+                         "instead of the double-buffered schedule")
     ap.add_argument("--shared-frac", type=float, default=0.25,
                     help="fraction of requests sharing a base prompt")
     ap.add_argument("--seed", type=int, default=0)
@@ -67,7 +71,8 @@ def main(argv=None):
     eng = Engine(model, params, slots=args.slots, max_seq=args.max_seq,
                  num_blocks=args.num_blocks, eos_id=-1,
                  watermark=args.watermark,
-                 prefill_budget=args.prefill_budget)
+                 prefill_budget=args.prefill_budget,
+                 overlap_transfers=not args.no_overlap)
     rng = np.random.RandomState(args.seed)
     prompts = make_traffic(rng, args.requests, cfg.vocab_size, args.max_seq,
                            shared_frac=args.shared_frac)
@@ -85,6 +90,11 @@ def main(argv=None):
     print(f"prefix-share hits {st['prefix_hits']}, COW copies "
           f"{st['cow_copies']}, preemptions {st['preemptions']}, "
           f"swap out/in {st['swap_out_bytes']}/{st['swap_in_bytes']} bytes")
+    tr = st["transfers"]
+    print(f"transfer plane: {tr['enqueued']} plans, "
+          f"{tr['launches']} launches ({tr['coalesced']} coalesced), "
+          f"{tr['overlapped']} host copies overlapped decode, "
+          f"effective watermark {st['watermark_effective']}")
     return done
 
 

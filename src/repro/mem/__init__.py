@@ -4,20 +4,27 @@ One ``Arena`` behind every block-backed subsystem: typed ``Lease``
 handles instead of raw ints, ``Mapping`` page tables with
 ``fork``/``ensure_writable``/``migrate`` as the only mutation verbs, a
 host swap tier as a first-class placement level, pressure-time reclaim
-(LIFO preemption) as arena policy, and ``compact()`` as the defrag pass.
+(LIFO preemption) as arena policy, ``compact()`` as the defrag pass,
+and the asynchronous transfer plane (``TransferQueue``/``Fence``) behind
+every block copy, swap and migration.
 """
 
 from repro.mem.arena import Arena, LeaseRevokedError
 from repro.mem.blockpool import (NULL_BLOCK, BlockAllocator, BlockPool,
                                  OutOfBlocksError)
-from repro.mem.lease import COW_SHARED, EXCLUSIVE, PINNED, Lease
+from repro.mem.lease import COW_SHARED, EXCLUSIVE, IN_FLIGHT, PINNED, Lease
 from repro.mem.mapping import DEVICE, FLAT, HOST, RADIX, Mapping
 from repro.mem.stats import ArenaStats, PoolClassStats
+from repro.mem.transfer import (D2D, D2H, DIRECTIONS, H2D, Fence,
+                                TransferPlan, TransferQueue, TransferStats,
+                                UnfencedReadError)
 
 __all__ = [
     "Arena", "LeaseRevokedError",
     "BlockAllocator", "BlockPool", "NULL_BLOCK", "OutOfBlocksError",
-    "Lease", "EXCLUSIVE", "COW_SHARED", "PINNED",
+    "Lease", "EXCLUSIVE", "COW_SHARED", "PINNED", "IN_FLIGHT",
     "Mapping", "FLAT", "RADIX", "DEVICE", "HOST",
     "ArenaStats", "PoolClassStats",
+    "TransferQueue", "TransferPlan", "TransferStats", "Fence",
+    "UnfencedReadError", "D2D", "D2H", "H2D", "DIRECTIONS",
 ]

@@ -28,14 +28,24 @@ Shape of the API:
     negotiates admission against ``free_blocks`` of this one arena;
   * ``compact()`` is the ROADMAP's defrag pass: when free blocks are
     plentiful but table locality has degraded, it emits a
-    ``kernels/block_copy`` plan moving live blocks to a dense prefix and
+    relocation plan moving live blocks to a dense prefix and
     rewrites every lease in place (paper Table 1 row 'Relocation /
-    Migration': tables absorb the move, no client pointer updates).
+    Migration': tables absorb the move, no client pointer updates);
+  * every payload move -- migrate, swap, COW fulfilment, compaction --
+    is a **plan on the arena's ``TransferQueue``** (``mem/transfer.py``):
+    enqueue now, dispatch/fence when the consumer schedules it.  The
+    queue holds vacated DMA sources in the allocator and flags copy
+    targets ``in_flight`` until fenced, so the discipline is provable
+    (``assert_quiescent`` requires an empty queue);
+  * ``snapshot()/restore()`` checkpoint the host tier (payloads +
+    residency) and mappings so a serving process restarts with its swap
+    state intact.
 """
 
 from __future__ import annotations
 
 import collections
+import json
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -45,6 +55,7 @@ from repro.mem.blockpool import BlockAllocator, OutOfBlocksError
 from repro.mem.lease import Lease
 from repro.mem.mapping import DEVICE, FLAT, HOST, Mapping
 from repro.mem.stats import ArenaStats, PoolClassStats
+from repro.mem.transfer import TransferQueue
 
 #: reclaimer signature: called with the requesting owner when a pool
 #: class is exhausted; must free blocks (e.g. preempt a victim) and
@@ -64,19 +75,28 @@ class _PoolClass:
 
     __slots__ = ("name", "num_blocks", "block_shape", "dtype",
                  "block_nbytes", "allocator", "leases", "pinned",
-                 "mappings")
+                 "mappings", "dp_groups")
 
     def __init__(self, name: str, num_blocks: int, block_shape: Tuple,
-                 dtype, block_nbytes: int):
+                 dtype, block_nbytes: int, dp_groups: int = 1):
         self.name = name
         self.num_blocks = num_blocks
         self.block_shape = block_shape
         self.dtype = dtype
         self.block_nbytes = block_nbytes
+        self.dp_groups = dp_groups
         self.allocator = BlockAllocator(num_blocks)
         self.leases: Dict[int, List[Lease]] = {}
         self.pinned: List[Lease] = []
         self.mappings: List[Mapping] = []
+
+    def group_range(self, g: int) -> Tuple[int, int]:
+        """Contiguous id range of dp pool group ``g`` (co-sharded with
+        the pool's block dim -- see ``PagedKVConfig.dp_groups``)."""
+        per = self.num_blocks // self.dp_groups
+        lo = g * per
+        hi = (g + 1) * per if g < self.dp_groups - 1 else self.num_blocks
+        return lo, hi
 
 
 class Arena:
@@ -86,22 +106,28 @@ class Arena:
         self._classes: Dict[str, _PoolClass] = {}
         self._reclaimer: Optional[Reclaimer] = None
         # host tier: residency counts (owned by Mapping.migrate) and
-        # payloads (deposited/taken by the transfer layer) are separate
+        # payloads (deposited/taken by the transfer plane) are separate
         # so migrate("device") can reallocate ids before the scatter.
         self._host_counts: Dict[Tuple[str, object], int] = {}
         self._host_payload: Dict[Tuple[str, object], Tuple[object, int]] = {}
+        #: the asynchronous transfer plane: every payload move (swap,
+        #: COW copy, compaction, migrate) is a plan enqueued here.
+        self.transfers = TransferQueue(self)
         self.compactions = 0
         self.blocks_compacted = 0
 
     # ---------------- pool classes ----------------
     def register_class(self, name: str, *, num_blocks: int,
                        block_shape: Tuple = (), dtype=jnp.float32,
-                       block_nbytes: Optional[int] = None) -> str:
+                       block_nbytes: Optional[int] = None,
+                       dp_groups: int = 1) -> str:
         """Declare (or re-attach to) one (block_shape, dtype) pool class.
 
         Registration is idempotent for an identical spec -- many clients
         of one engine attach to the same class -- and loud on conflict.
-        Returns ``name`` so callers can chain.
+        ``dp_groups`` partitions the id space into contiguous ranges for
+        per-group accounting (``ArenaStats`` reports blocks held/free
+        per group).  Returns ``name`` so callers can chain.
         """
         if block_nbytes is None:
             block_nbytes = (int(np.prod(block_shape)) if block_shape else 1
@@ -111,18 +137,23 @@ class Arena:
             if (st.num_blocks != num_blocks
                     or st.block_nbytes != block_nbytes
                     or st.block_shape != tuple(block_shape)
-                    or st.dtype != dtype):
+                    or st.dtype != dtype
+                    or st.dp_groups != dp_groups):
                 raise ValueError(
                     f"pool class {name!r} re-registered with a different "
                     f"spec: {num_blocks}x{block_nbytes}B "
-                    f"{tuple(block_shape)}/{dtype} vs existing "
+                    f"{tuple(block_shape)}/{dtype}/g{dp_groups} vs existing "
                     f"{st.num_blocks}x{st.block_nbytes}B "
-                    f"{st.block_shape}/{st.dtype}")
+                    f"{st.block_shape}/{st.dtype}/g{st.dp_groups}")
             return name
         if num_blocks <= 0:
             raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        if dp_groups < 1 or dp_groups > num_blocks:
+            raise ValueError(f"dp_groups must be in [1, num_blocks], "
+                             f"got {dp_groups}")
         self._classes[name] = _PoolClass(name, num_blocks, tuple(block_shape),
-                                         dtype, int(block_nbytes))
+                                         dtype, int(block_nbytes),
+                                         int(dp_groups))
         return name
 
     def _cls(self, name: str) -> _PoolClass:
@@ -148,6 +179,17 @@ class Arena:
 
     def refcount(self, cls: str, block: int) -> int:
         return self._cls(cls).allocator.refcount(block)
+
+    def block_nbytes(self, cls: str) -> int:
+        return self._cls(cls).block_nbytes
+
+    def find_mapping(self, cls: str, owner) -> Optional[Mapping]:
+        """The live mapping of ``owner`` in ``cls``, if any (used by the
+        engine to adopt restored host-resident mappings)."""
+        for m in self._cls(cls).mappings:
+            if m.owner == owner:
+                return m
+        return None
 
     def allocator(self, cls: str) -> BlockAllocator:
         """The raw allocator -- a compat escape hatch for tests that poke
@@ -186,6 +228,13 @@ class Arena:
         while True:
             if st.allocator.num_free >= n:
                 return [st.allocator.alloc() for _ in range(n)]
+            if self.transfers.has_undispatched:
+                # undispatched plans hold vacated blocks; DISPATCH
+                # releases the holds without blocking on host copies
+                # (those stay overlapped), so pressure-path allocation
+                # never degenerates to the synchronous schedule
+                self.transfers.dispatch()
+                continue
             if not pressure or self._reclaimer is None:
                 raise OutOfBlocksError(
                     f"pool class {cls!r}: requested {n} blocks, "
@@ -326,16 +375,20 @@ class Arena:
         return self.fragmentation(cls) > frag_threshold
 
     def compact(self, cls: str) -> Tuple[np.ndarray, np.ndarray]:
-        """Move live blocks to the dense prefix; returns the (src, dst)
-        copy plan the caller MUST execute against the device pool
-        (``kernels.block_copy.copy_pool_blocks``) before the next read.
+        """Move live blocks to the dense prefix; the (src, dst) copy
+        plan is ENQUEUED on the arena's ``TransferQueue`` (the moved
+        leases stay ``in_flight`` and the vacated sources HELD until the
+        consumer dispatches it) and also returned for accounting.
 
-        Every lease is rewritten in place (tables built afterwards see
-        only new ids) and the allocator's free list is rebuilt.  Refuses
-        to run when any live block is not lease-tracked (raw-allocator
-        escape hatch in use) -- relocating a block nobody's table names
-        would lose data silently.
+        Compaction is a fence point: pending transfers are drained first
+        so the relocation plan sees settled block contents and no held
+        ids.  Every lease is rewritten in place (tables built afterwards
+        see only new ids) and the allocator's free list is rebuilt.
+        Refuses to run when any live block is not lease-tracked
+        (raw-allocator escape hatch in use) -- relocating a block
+        nobody's table names would lose data silently.
         """
+        self.transfers.drain()
         st = self._cls(cls)
         live = [int(b) for b in st.allocator.used_ids()]
         untracked = [b for b in live if b not in st.leases]
@@ -357,6 +410,7 @@ class Arena:
         self.blocks_compacted += len(plan)
         src = np.asarray([s for s, _ in plan], np.int32)
         dst = np.asarray([d for _, d in plan], np.int32)
+        self.transfers.enqueue_copy(cls, src, dst, kind="compact")
         return src, dst
 
     # ---------------- stats / invariants ----------------
@@ -364,13 +418,28 @@ class Arena:
         classes = {}
         for name, st in self._classes.items():
             by_owner: collections.Counter = collections.Counter()
+            in_flight = 0
             for holders in st.leases.values():
                 for lease in holders:
                     by_owner[str(lease.owner)] += 1
+                    in_flight += int(lease.in_flight)
             host = {str(o): n for (c, o), n in self._host_counts.items()
                     if c == name}
             kinds: collections.Counter = collections.Counter(
                 m.kind for m in st.mappings)
+            groups = []
+            if st.dp_groups > 1:
+                used = set(int(b) for b in st.allocator.used_ids())
+                # transfer-plane-held blocks are not allocatable: count
+                # them out of 'free' so per-group headroom sums to the
+                # class-level num_free even mid-flight
+                held_ids = st.allocator.held_ids()
+                for g in range(st.dp_groups):
+                    lo, hi = st.group_range(g)
+                    u = sum(1 for b in used if lo <= b < hi)
+                    h = sum(1 for b in held_ids if lo <= b < hi)
+                    groups.append({"group": g, "used": u,
+                                   "free": (hi - lo) - u - h})
             classes[name] = PoolClassStats(
                 name=name,
                 num_blocks=st.num_blocks,
@@ -384,9 +453,13 @@ class Arena:
                 fragmentation=round(self.fragmentation(name), 4),
                 table_locality=round(self.table_locality(name), 4),
                 mappings_by_kind=dict(kinds),
+                in_flight=in_flight,
+                held=st.allocator.num_held,
+                groups=groups,
             )
         return ArenaStats(classes=classes, compactions=self.compactions,
-                          blocks_compacted=self.blocks_compacted)
+                          blocks_compacted=self.blocks_compacted,
+                          transfers=self.transfers.stats.to_dict())
 
     def check_registry(self, cls: str) -> None:
         """Invariant: every allocated block's refcount equals its lease
@@ -400,9 +473,16 @@ class Arena:
                 f"{st.allocator.refcount(b)}")
 
     def assert_quiescent(self) -> None:
-        """Leak invariant: nothing but pinned blocks is allocated and the
-        host tier is empty.  Every engine test ends on this."""
+        """Leak invariant: nothing but pinned blocks is allocated, the
+        host tier is empty, and the transfer plane is fenced (no pending
+        plans, no held blocks).  Every engine test ends on this."""
+        assert self.transfers.pending == 0, (
+            f"unfenced transfers at quiescence: "
+            f"{self.transfers.pending_by_direction()}")
         for name, st in self._classes.items():
+            assert st.allocator.num_held == 0, (
+                f"pool class {name!r}: {st.allocator.num_held} blocks "
+                f"still held by the transfer plane")
             pinned_ids = {l.block for l in st.pinned}
             for b in st.allocator.used_ids():
                 b = int(b)
@@ -421,3 +501,124 @@ class Arena:
             f"host tier residency leaked: {self._host_counts}")
         assert not self._host_payload, (
             f"host tier payload leaked: {list(self._host_payload)}")
+
+    # ---------------- checkpoint (host tier + mappings) ----------------
+    @staticmethod
+    def _tag_owner(owner) -> str:
+        if isinstance(owner, (bool, float)):
+            raise TypeError(f"unsupported owner type for snapshot: "
+                            f"{type(owner).__name__}")
+        if isinstance(owner, (int, np.integer)):
+            return f"i:{int(owner)}"
+        if isinstance(owner, str):
+            return f"s:{owner}"
+        raise TypeError(f"unsupported owner type for snapshot: "
+                        f"{type(owner).__name__}")
+
+    @staticmethod
+    def _untag_owner(tag: str):
+        kind, _, val = tag.partition(":")
+        return int(val) if kind == "i" else val
+
+    @staticmethod
+    def _np_dtype(name: str):
+        try:
+            return np.dtype(name)
+        except TypeError:
+            # extension dtypes (bfloat16) resolve through jax
+            return np.dtype(getattr(jnp, name))
+
+    def snapshot(self, path: str) -> None:
+        """Checkpoint the arena's survivable state to one ``.npz``:
+        pool-class specs, host-tier residency + payloads (the swapped
+        sequences' KV), and every mapping's table.
+
+        The transfer plane is drained first (in-flight payloads land).
+        Device pool CONTENTS are deliberately not captured -- a restart
+        loses device memory by definition; the swap tier is exactly the
+        state that survives, which is why checkpoint lives on the arena.
+        """
+        self.transfers.drain()
+        # host-tier residency is NOT serialized separately: each
+        # host-resident mapping entry carries its block count, and
+        # restore() rebuilds _host_counts from those -- one source of
+        # truth in the checkpoint.
+        meta: dict = {"classes": {}, "mappings": [], "payloads": []}
+        arrays: Dict[str, np.ndarray] = {}
+        for name, st in self._classes.items():
+            meta["classes"][name] = {
+                "num_blocks": st.num_blocks,
+                "block_nbytes": st.block_nbytes,
+                "block_shape": list(st.block_shape),
+                "dtype": str(jnp.dtype(st.dtype)),
+                "dp_groups": st.dp_groups,
+            }
+        for name, st in self._classes.items():
+            for m in st.mappings:
+                meta["mappings"].append({
+                    "cls": name, "owner": self._tag_owner(m.owner),
+                    "kind": m.kind, "placement": m.placement,
+                    "blocks": (m.block_ids() if m.placement == DEVICE
+                               else int(m._host_blocks)),
+                })
+        for i, ((cls, owner), (payload, nbytes)) in enumerate(
+                self._host_payload.items()):
+            streams = []
+            for j, arr in enumerate(payload):
+                if arr is None:
+                    streams.append(None)
+                    continue
+                key = f"payload_{i}_{j}"
+                arr = np.ascontiguousarray(arr)
+                arrays[key] = np.frombuffer(arr.tobytes(), np.uint8)
+                streams.append({"key": key, "shape": list(arr.shape),
+                                "dtype": str(arr.dtype)})
+            meta["payloads"].append({"cls": cls,
+                                     "owner": self._tag_owner(owner),
+                                     "nbytes": int(nbytes),
+                                     "streams": streams})
+        arrays["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez(path, **arrays)
+
+    def restore(self, path: str) -> Dict[Tuple[str, object], Mapping]:
+        """Rebuild host-tier residency, payloads and host-resident
+        mappings from a ``snapshot()``.
+
+        Pool classes are re-registered when absent (idempotent-or-loud
+        when present, so restoring into an engine-built arena verifies
+        the specs match).  Only HOST-resident mappings come back -- a
+        restarted process has lost device memory, so device-resident
+        entries in the snapshot are unrecoverable by design (re-submit
+        those requests).  Returns ``{(pool_class, owner): Mapping}`` for
+        the caller to re-adopt (``PagedKVManager.adopt``).
+        """
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+            for name, spec in meta["classes"].items():
+                self.register_class(
+                    name, num_blocks=spec["num_blocks"],
+                    block_shape=tuple(spec["block_shape"]),
+                    dtype=jnp.dtype(spec["dtype"]),
+                    block_nbytes=spec["block_nbytes"],
+                    dp_groups=spec["dp_groups"])
+            restored: Dict[Tuple[str, object], Mapping] = {}
+            for entry in meta["mappings"]:
+                if entry["placement"] != HOST:
+                    continue
+                cls = entry["cls"]
+                owner = self._untag_owner(entry["owner"])
+                m = self.mapping(cls, owner, kind=entry["kind"])
+                m.placement = HOST
+                m._host_blocks = int(entry["blocks"])
+                self._host_register(cls, owner, m._host_blocks)
+                restored[(cls, owner)] = m
+            for p in meta["payloads"]:
+                cls, owner = p["cls"], self._untag_owner(p["owner"])
+                streams = tuple(
+                    None if s is None else np.frombuffer(
+                        z[s["key"]].tobytes(),
+                        self._np_dtype(s["dtype"])).reshape(s["shape"])
+                    for s in p["streams"])
+                self.host_deposit(cls, owner, streams, p["nbytes"])
+        return restored

@@ -47,6 +47,7 @@ class BlockAllocator:
         self.num_blocks = int(num_blocks)
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._refcount = np.zeros(num_blocks, dtype=np.int32)
+        self._held: set = set()
 
     # -- queries ---------------------------------------------------------
     @property
@@ -55,7 +56,11 @@ class BlockAllocator:
 
     @property
     def num_used(self) -> int:
-        return self.num_blocks - len(self._free)
+        return self.num_blocks - len(self._free) - len(self._held)
+
+    @property
+    def num_held(self) -> int:
+        return len(self._held)
 
     def refcount(self, block: int) -> int:
         return int(self._refcount[block])
@@ -102,6 +107,33 @@ class BlockAllocator:
         for b in blocks:
             self.free(int(b))
 
+    # -- transfer-plane holds -------------------------------------------
+    def hold(self, block: int) -> None:
+        """Remove a FREED block from the free list without allocating it.
+
+        The transfer plane holds the vacated sources of an unfenced DMA
+        (swap-out gather, compaction copy): the allocator let go of the
+        ids, but the device still has to read them -- handing them out
+        before the gather launches would let a prefill/scatter clobber
+        the payload mid-flight.  ``release_hold`` returns them.
+        """
+        if self._refcount[block] != 0 or block in self._held:
+            raise ValueError(f"hold of non-free block {block}")
+        self._free.remove(block)
+        self._held.add(block)
+
+    def is_held(self, block: int) -> bool:
+        return block in self._held
+
+    def held_ids(self) -> set:
+        return set(self._held)
+
+    def release_hold(self, block: int) -> None:
+        if block not in self._held:
+            raise ValueError(f"release_hold of unheld block {block}")
+        self._held.remove(block)
+        self._free.append(block)
+
     def fork_for_write(self, block: int) -> Tuple[int, bool]:
         """COW: return a private block id for writing.
 
@@ -135,7 +167,7 @@ class BlockAllocator:
             self._refcount[d] = self._refcount[s]
             self._refcount[s] = 0
         self._free = [b for b in range(self.num_blocks - 1, -1, -1)
-                      if self._refcount[b] == 0]
+                      if self._refcount[b] == 0 and b not in self._held]
 
     def refcount_histogram(self) -> "np.ndarray":
         """histogram[r] = number of blocks currently at refcount r."""

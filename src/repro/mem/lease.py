@@ -15,6 +15,11 @@ Kinds (derived, not stored -- a lease's kind changes as refcounts move):
   * ``pinned``     -- permanently claimed, never handed to a sequence
     (the serving engine's write-sink block); released only via
     ``Arena.unpin``.
+  * ``in-flight``  -- an unfenced transfer plan targets this block (COW
+    copy destination, compaction destination, swap-in scatter target):
+    the payload is not there yet.  Reads must fence first --
+    ``Mapping.assert_settled`` raises ``UnfencedReadError`` otherwise.
+    Set/cleared by ``mem/transfer.py``, never by clients.
 """
 
 from __future__ import annotations
@@ -27,12 +32,14 @@ if TYPE_CHECKING:  # pragma: no cover
 EXCLUSIVE = "exclusive"
 COW_SHARED = "cow-shared"
 PINNED = "pinned"
+IN_FLIGHT = "in-flight"
 
 
 class Lease:
     """One holder's claim on one block of one pool class."""
 
-    __slots__ = ("arena", "pool_class", "block", "owner", "pinned", "live")
+    __slots__ = ("arena", "pool_class", "block", "owner", "pinned", "live",
+                 "in_flight")
 
     def __init__(self, arena: "Arena", pool_class: str, block: int,
                  owner, pinned: bool = False):
@@ -42,6 +49,7 @@ class Lease:
         self.owner = owner
         self.pinned = pinned
         self.live = True
+        self.in_flight = False
 
     # -- queries ---------------------------------------------------------
     @property
@@ -56,6 +64,8 @@ class Lease:
     def kind(self) -> str:
         if self.pinned:
             return PINNED
+        if self.in_flight:
+            return IN_FLIGHT
         return COW_SHARED if self.shared else EXCLUSIVE
 
     # -- verbs (delegate to the arena so bookkeeping stays centralized) --

@@ -23,6 +23,14 @@ reclaimer (the serving engine's LIFO preemption) instead of failing, and
 raises ``LeaseRevokedError`` only when the requester itself had to be
 reclaimed.  That policy used to live inline in ``serve/engine.py``; it
 is Arena-level now so every client shares it.
+
+Since the transfer-plane redesign the mutation verbs are *plan
+producers*: ``migrate`` and ``ensure_writable`` no longer expect the
+caller to move payloads -- they enqueue ``TransferPlan``s onto the
+Arena's ``TransferQueue`` (``mem/transfer.py``) and the engine's step
+loop dispatches/fences them.  ``assert_settled`` is the read barrier:
+building a device table over a block whose transfer is unfenced raises
+``UnfencedReadError``.
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ import numpy as np
 
 from repro.mem.blockpool import NULL_BLOCK
 from repro.mem.lease import Lease
+from repro.mem.transfer import UnfencedReadError
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.mem.arena import Arena
@@ -77,6 +86,21 @@ class Mapping:
         ids = self.block_ids()
         t[: len(ids)] = ids
         return t
+
+    def assert_settled(self) -> None:
+        """Read barrier: every lease's payload must be fenced.
+
+        The engine calls this when it builds the decode tables (after
+        ``TransferQueue.dispatch``); an ``in_flight`` lease here means a
+        transfer targeting the block was never fenced and the decode
+        would read garbage.
+        """
+        stale = [l.block for l in self.leases if l.in_flight]
+        if stale:
+            raise UnfencedReadError(
+                f"mapping {self.owner!r} ({self.pool_class!r}): blocks "
+                f"{stale} are targets of unfenced transfers; dispatch/"
+                f"drain the arena's TransferQueue before reading")
 
     def locality(self) -> float:
         """Fraction of logically-adjacent block pairs that are physically
@@ -129,12 +153,15 @@ class Mapping:
     def ensure_writable(self, idx: int) -> Optional[Tuple[int, int]]:
         """COW write barrier for logical block ``idx``.
 
-        Returns ``(src, dst)`` physical ids the caller MUST copy on
-        device before writing, or None when the block is already
-        exclusive.  Allocates the copy target under pressure (this is
-        the deferred claim admission cannot reserve -- see
-        ``serve/engine.py``); on ``LeaseRevokedError`` the mapping has
-        already been migrated out by the reclaimer.
+        When the block is shared this trades the shared lease for an
+        exclusive one and ENQUEUES the fulfilment copy on the Arena's
+        ``TransferQueue`` (the fresh lease stays ``in_flight`` until the
+        plan executes); returns the ``(src, dst)`` pair for callers that
+        track copy traffic, or None when the block is already exclusive.
+        Allocates the copy target under pressure (this is the deferred
+        claim admission cannot reserve -- see ``serve/engine.py``); on
+        ``LeaseRevokedError`` the mapping has already been migrated out
+        by the reclaimer.
         """
         lease = self.leases[idx]
         if not lease.shared:
@@ -148,18 +175,22 @@ class Mapping:
             return None
         self.leases[idx] = fresh
         lease.release()
+        self.arena.transfers.enqueue_copy(self.pool_class, [lease.block],
+                                          [fresh.block], kind="cow")
         return lease.block, fresh.block
 
     def migrate(self, to: str) -> List[int]:
-        """Move the object device<->host.
+        """Move the object device<->host -- as a transfer-plane producer.
 
-        ``to="host"``: release every device lease and register host
-        residency; returns the vacated ids (the caller gathers their
-        payload BEFORE the pool positions are reused -- the gather reads
-        the current functional snapshot, so freeing first is safe).
+        ``to="host"``: release every device lease, register host
+        residency and ENQUEUE the swap-out plan (gather + host copy) on
+        the Arena's ``TransferQueue``; returns the vacated ids.  The ids
+        stay HELD in the allocator until the gather is dispatched, so
+        reuse cannot clobber the payload mid-flight.
 
-        ``to="device"``: reallocate (anywhere!) and return the fresh ids
-        to scatter the saved payload into -- block tables absorb the
+        ``to="device"``: reallocate (anywhere!), ENQUEUE the swap-in
+        scatter into the fresh ids (leases stay ``in_flight`` until it
+        executes) and return the new ids -- block tables absorb the
         relocation.
         """
         if to == HOST:
@@ -172,6 +203,8 @@ class Mapping:
             self._host_blocks = len(ids)
             self.placement = HOST
             self.arena._host_register(self.pool_class, self.owner, len(ids))
+            self.arena.transfers.enqueue_swap_out(self.pool_class,
+                                                  self.owner, ids)
             return ids
         if to == DEVICE:
             if self.placement != HOST:
@@ -181,6 +214,9 @@ class Mapping:
                                                   self.owner, n)
             self._host_blocks = 0
             self.placement = DEVICE
+            self.arena.transfers.enqueue_swap_in(self.pool_class,
+                                                 self.owner,
+                                                 self.block_ids())
             return self.block_ids()
         raise ValueError(f"unknown placement {to!r}")
 
@@ -190,9 +226,26 @@ class Mapping:
         if self.freed:
             raise ValueError(f"double free of mapping {self.owner!r}")
         if self.placement == HOST:
+            upto = self.arena.transfers.last_transit(self.pool_class,
+                                                     self.owner)
+            if upto is not None:
+                # cancel-while-swapping: land the in-flight payload so
+                # residency and payload tear down together -- only the
+                # FIFO prefix up to our plan; later transfers stay
+                # overlapped
+                self.arena.transfers.drain(upto=upto)
             self.arena._host_unregister(self.pool_class, self.owner)
             self.arena.host_discard(self.pool_class, self.owner)
         else:
+            upto = self.arena.transfers.last_reference(self.pool_class,
+                                                       self.block_ids())
+            if upto is not None:
+                # cancel-while-transferring: a pending plan (swap-in
+                # scatter, COW copy) still names these blocks -- settle
+                # the prefix through it before the ids return to the
+                # free list, or a stale scatter would clobber their
+                # next tenant
+                self.arena.transfers.drain(upto=upto)
             for l in self.leases:
                 l.release()
         self.leases = []

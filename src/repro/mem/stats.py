@@ -16,13 +16,22 @@ Per pool class:
   * ``table_locality``: mean over mappings of the fraction of logically
     adjacent block pairs that are physically adjacent -- the quantity
     that degrades as preemption/swap-in scatters tables, and the trigger
-    (together with plentiful free blocks) for the defrag pass.
+    (together with plentiful free blocks) for the defrag pass,
+  * ``in_flight`` / ``held``: the transfer plane's discipline counters
+    (leases awaiting an unfenced copy; vacated DMA sources the
+    allocator may not reuse yet),
+  * ``groups``: blocks used/free per dp pool group (contiguous id
+    ranges) when the class was registered with ``dp_groups > 1`` -- the
+    measurement surface for group-partitioned allocation.
+
+``ArenaStats.transfers`` embeds the ``TransferStats`` snapshot (plans
+per direction, bytes moved, coalesced launches, overlapped host copies).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -38,6 +47,9 @@ class PoolClassStats:
     fragmentation: float
     table_locality: float
     mappings_by_kind: Dict[str, int]
+    in_flight: int = 0
+    held: int = 0
+    groups: List[Dict[str, int]] = dataclasses.field(default_factory=list)
 
     @property
     def host_blocks(self) -> int:
@@ -54,6 +66,7 @@ class ArenaStats:
     classes: Dict[str, PoolClassStats]
     compactions: int = 0
     blocks_compacted: int = 0
+    transfers: Optional[Dict] = None
 
     def __getitem__(self, name: str) -> PoolClassStats:
         return self.classes[name]
@@ -62,5 +75,6 @@ class ArenaStats:
         return {
             "compactions": self.compactions,
             "blocks_compacted": self.blocks_compacted,
+            "transfers": self.transfers,
             "classes": {k: v.to_dict() for k, v in self.classes.items()},
         }

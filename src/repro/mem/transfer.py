@@ -1,0 +1,540 @@
+"""The asynchronous transfer plane: every block copy is a schedulable plan.
+
+The paper's closing argument is that once software manages physical
+blocks directly, data movement stops being an implicit side effect of
+address translation and becomes an explicit, schedulable resource -- it
+names "chips with multiple DMA devices" as exactly the hardware this
+buys leverage on.  This module is that idea as an API: all four movement
+producers of the address space (``Mapping.migrate`` swap-out/in, the COW
+``ensure_writable`` copy, ``Arena.compact()`` relocation) stop copying
+inline and instead enqueue ``TransferPlan`` descriptors onto the Arena's
+``TransferQueue``.  Nothing outside this module touches the block-copy
+kernels or the host tier's payload verbs -- a grep-enforced test pins
+the rule (``tests/test_transfer.py``).
+
+Shape of the plane:
+
+  * **directions** -- ``d2d`` (COW fulfilment, compaction relocation),
+    ``d2h`` (swap-out gather + host copy), ``h2d`` (swap-in scatter).
+    Plans carry a global FIFO ``seqno``; per-direction queues are views
+    for accounting and batching, execution order is enqueue order.
+  * **``TransferPlan``** -- one batched block-copy descriptor: the
+    generalization of the compaction plan (``src``/``dst`` id vectors,
+    pool class, byte count, producing verb).
+  * **``Fence``** -- an epoch completion token: ``fence.done`` is true
+    once every plan enqueued at or before it has executed;
+    ``fence.wait()`` drains exactly that prefix.
+  * **two-phase d2h** -- ``dispatch()`` launches the device-side gather
+    (async under jax) and *releases the held source blocks*; the
+    blocking host copy (``np.asarray``) is deferred until the fence.
+    The serving engine dispatches at step N and fences at step N+1, so
+    the host copy overlaps the decode in between (double buffering).
+  * **discipline** -- a plan's freed source blocks are HELD in the
+    allocator (unallocatable) until the gather is dispatched, and its
+    destination leases are ``in_flight`` until it executes; reading a
+    block while a transfer targeting it is unfenced raises
+    ``UnfencedReadError`` (``Mapping.assert_settled``).
+  * **``drain()``** -- the synchronous fallback: execute everything
+    now.  Token-identical behavior between the overlapped and drained
+    schedules is pinned by a property test and by ``bench_serve``'s
+    byte-equivalence assertion.
+
+Execution needs device arrays: clients register an *executor* per pool
+class (``register_executor``) exposing the current device streams (the
+KV k/v pools) functionally -- get returns the streams, set writes the
+updated ones back.  Pool classes with no executor (metadata-only arenas,
+e.g. unit tests without a device pool) complete their plans immediately
+as residency-only moves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
+                    Sequence, Tuple)
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.mem.arena import Arena
+
+D2D = "d2d"   # device -> device: COW fulfilment, compaction relocation
+D2H = "d2h"   # device -> host:   swap-out (gather + host copy)
+H2D = "h2d"   # host -> device:   swap-in (scatter)
+DIRECTIONS = (D2D, D2H, H2D)
+
+#: plan lifecycle
+PENDING = "pending"        # enqueued, device work not started
+DISPATCHED = "dispatched"  # d2h only: gather launched, host copy deferred
+DONE = "done"
+
+
+class UnfencedReadError(RuntimeError):
+    """A block was read (table built for decode) while a transfer
+    targeting it was still unfenced.  The engine's read barrier
+    (``TransferQueue.dispatch`` before ``_sync_device_state``) makes
+    this unreachable in the step loop; reaching it means a client
+    skipped the fence."""
+
+
+class Fence:
+    """Epoch completion token: covers every plan with seqno <= epoch."""
+
+    __slots__ = ("queue", "epoch")
+
+    def __init__(self, queue: "TransferQueue", epoch: int):
+        self.queue = queue
+        self.epoch = epoch
+
+    @property
+    def done(self) -> bool:
+        return self.queue._prefix_done(self.epoch)
+
+    def wait(self) -> None:
+        """Synchronously execute every plan this fence covers."""
+        self.queue.stats.fences += 1
+        self.queue.drain(upto=self.epoch)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Fence(epoch={self.epoch} done={self.done})"
+
+
+@dataclasses.dataclass(eq=False)          # identity semantics: plans are
+class TransferPlan:                        # queue entries, not values
+    """One batched block-copy descriptor (the compaction plan,
+    generalized to every movement verb and both placement tiers)."""
+
+    direction: str                     # d2d | d2h | h2d
+    pool_class: str
+    kind: str                          # producing verb: cow|compact|swap-out|swap-in|...
+    src: Optional[np.ndarray] = None   # device ids read (d2d, d2h)
+    dst: Optional[np.ndarray] = None   # device ids written (d2d, h2d)
+    owner: object = None               # host-tier payload key (d2h, h2d)
+    nbytes: int = 0                    # known at enqueue for d2d, measured for d2h/h2d
+    seqno: int = -1                    # global FIFO position
+    state: str = PENDING
+    dispatch_mark: int = -1            # compute-mark count at gather launch
+    # internal: launched-but-uncopied device gathers, holds, in-flight marks
+    _gathered: Optional[list] = dataclasses.field(default=None, repr=False)
+    _held: list = dataclasses.field(default_factory=list, repr=False)
+    _flagged: list = dataclasses.field(default_factory=list, repr=False)
+
+
+def _zeroed() -> Dict[str, int]:
+    return {d: 0 for d in DIRECTIONS}
+
+
+@dataclasses.dataclass
+class TransferStats:
+    """Observability of the transfer plane (rendered by ``repro.report``
+    and embedded in ``BENCH_serve.json`` / ``BENCH_transfers.json``)."""
+
+    enqueued: Dict[str, int] = dataclasses.field(default_factory=_zeroed)
+    completed: Dict[str, int] = dataclasses.field(default_factory=_zeroed)
+    bytes_moved: Dict[str, int] = dataclasses.field(default_factory=_zeroed)
+    launches: int = 0          # device kernel launches / host transfers
+    coalesced: int = 0         # plans merged into a shared launch
+    dispatches: int = 0
+    drains: int = 0
+    fences: int = 0            # fence phases (complete_dispatched / wait)
+    #: d2h host copies that landed only AFTER a compute step ran between
+    #: their gather launch and their completion (``note_compute`` marks
+    #: each decode) -- the genuine double-buffer wins, not mere
+    #: later-queue-op completions
+    overlapped: int = 0
+    max_pending: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class TransferQueue:
+    """Per-direction transfer queues with global FIFO execution order
+    (see module docstring)."""
+
+    def __init__(self, arena: "Arena", eager: bool = False):
+        self.arena = arena
+        #: eager=True is the synchronous fallback: every enqueue drains
+        #: immediately, pinning token-identical behavior for tests/CI.
+        self.eager = eager
+        self.stats = TransferStats()
+        self._pending: List[TransferPlan] = []
+        self._dispatched: List[TransferPlan] = []
+        self._seq = 0
+        self._compute_marks = 0
+        # pool class -> (get_streams, set_streams, layered)
+        self._executors: Dict[str, Tuple[Callable, Callable, bool]] = {}
+        self._observers: Dict[object, Callable[[TransferPlan], None]] = {}
+
+    # ---------------- wiring ----------------
+    def register_executor(self, pool_class: str, get_streams: Callable,
+                          set_streams: Callable,
+                          layered: bool = True) -> None:
+        """Bind the device streams of one pool class.
+
+        ``get_streams()`` returns the current list of device arrays
+        (layered: ``(L, NB, *block)``; flat: ``(NB, *block)``);
+        ``set_streams(list)`` writes the updated arrays back.  The last
+        registration wins (an arena handed to a new engine re-binds).
+        """
+        self._executors[pool_class] = (get_streams, set_streams, layered)
+
+    def add_observer(self, fn: Callable[[TransferPlan], None],
+                     key: Optional[str] = None) -> None:
+        """Called once per completed plan (byte ledgers, e.g.
+        ``serve/swap.HostBlockStore``).
+
+        A ``key``ed registration REPLACES any earlier observer with the
+        same key -- the same last-wins rule as ``register_executor``, so
+        re-handing an arena to a new engine does not accumulate (and
+        retain) dead ledgers.
+        """
+        self._observers[key if key is not None else object()] = fn
+
+    def unregister_executor(self, pool_class: str) -> None:
+        """Symmetric teardown: drop the executor binding (refuses while
+        plans that would need it are outstanding)."""
+        if any(p.pool_class == pool_class
+               for p in self._pending + self._dispatched):
+            raise ValueError(
+                f"pool class {pool_class!r} has outstanding plans; "
+                f"drain() before unregistering its executor")
+        self._executors.pop(pool_class, None)
+
+    def remove_observer(self, key: str) -> None:
+        self._observers.pop(key, None)
+
+    def note_compute(self) -> None:
+        """Mark that a compute step (decode) ran: a d2h host copy whose
+        gather launched before this mark and completes after it
+        genuinely overlapped compute (the ``overlapped`` stat)."""
+        self._compute_marks += 1
+
+    # ---------------- queries ----------------
+    @property
+    def pending(self) -> int:
+        """Plans not yet fully executed (pending + dispatched)."""
+        return len(self._pending) + len(self._dispatched)
+
+    @property
+    def has_undispatched(self) -> bool:
+        """Plans whose device work has not launched (these may hold
+        freed blocks; ``dispatch()`` releases the holds non-blocking)."""
+        return bool(self._pending)
+
+    def pending_by_direction(self) -> Dict[str, int]:
+        out = _zeroed()
+        for p in self._pending + self._dispatched:
+            out[p.direction] += 1
+        return out
+
+    def in_transit(self, pool_class: str) -> List[object]:
+        """Owners whose swap-out payload has not reached the host tier
+        yet (enqueued or dispatched d2h)."""
+        return [p.owner for p in self._pending + self._dispatched
+                if p.direction == D2H and p.pool_class == pool_class]
+
+    def in_flight_blocks(self, pool_class: str) -> set:
+        """Device ids named as destination by any unexecuted plan."""
+        out = set()
+        for p in self._pending:
+            if p.pool_class == pool_class and p.dst is not None:
+                out.update(int(b) for b in p.dst)
+        return out
+
+    def last_reference(self, pool_class: str, ids) -> Optional[int]:
+        """Highest seqno of a PENDING plan that reads or writes one of
+        ``ids``, or None.
+
+        Dispatched d2h plans have already captured their sources, so
+        only undispatched plans pin device state.  ``Mapping.free``
+        consults this: releasing blocks a pending plan still names
+        would let reuse race the plan's execution -- a
+        ``drain(upto=<this seqno>)`` settles exactly the FIFO prefix
+        that matters and leaves later plans overlapped.
+        """
+        ids = set(int(b) for b in ids)
+        last = None
+        for p in self._pending:
+            if p.pool_class != pool_class:
+                continue
+            for vec in (p.src, p.dst):
+                if vec is not None and any(int(b) in ids for b in vec):
+                    last = p.seqno
+        return last
+
+    def last_transit(self, pool_class: str, owner) -> Optional[int]:
+        """Highest seqno of an unfenced d2h plan of ``owner`` (payload
+        still in transit), or None -- the fence target for teardown."""
+        last = None
+        for p in self._pending + self._dispatched:
+            if p.direction == D2H and p.pool_class == pool_class \
+                    and p.owner == owner:
+                last = max(p.seqno, last if last is not None else p.seqno)
+        return last
+
+    def _prefix_done(self, epoch: int) -> bool:
+        return not any(p.seqno <= epoch
+                       for p in self._pending + self._dispatched)
+
+    def fence(self) -> Fence:
+        """Epoch token covering everything enqueued so far."""
+        return Fence(self, self._seq - 1)
+
+    def _done_fence(self) -> Fence:
+        """An already-complete fence (empty/no-op plans): waiting on it
+        must not serialize unrelated pending transfers."""
+        return Fence(self, -1)
+
+    # ---------------- producer API ----------------
+    def enqueue_copy(self, pool_class: str, src, dst,
+                     kind: str = "cow") -> Fence:
+        """d2d: copy block src[i] -> dst[i] on every stream."""
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        if src.size == 0:
+            return self._done_fence()
+        nbytes = int(src.size) * self.arena.block_nbytes(pool_class)
+        return self._enqueue(TransferPlan(D2D, pool_class, kind,
+                                          src=src, dst=dst, nbytes=nbytes))
+
+    def enqueue_swap_out(self, pool_class: str, owner, src,
+                         kind: str = "swap-out") -> Fence:
+        """d2h: gather ``src`` on device, deposit the compact payload in
+        the arena host tier under ``owner`` at the fence."""
+        src = np.asarray(src, np.int32).reshape(-1)
+        if src.size == 0:
+            return self._done_fence()
+        return self._enqueue(TransferPlan(D2H, pool_class, kind,
+                                          src=src, owner=owner))
+
+    def enqueue_swap_in(self, pool_class: str, owner, dst,
+                        kind: str = "swap-in") -> Fence:
+        """h2d: scatter ``owner``'s host payload into fresh ids ``dst``."""
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        if dst.size == 0:
+            return self._done_fence()
+        return self._enqueue(TransferPlan(H2D, pool_class, kind,
+                                          dst=dst, owner=owner))
+
+    # ---------------- enqueue internals ----------------
+    def _enqueue(self, plan: TransferPlan) -> Fence:
+        plan.seqno = self._seq
+        self._seq += 1
+        self.stats.enqueued[plan.direction] += 1
+        if plan.pool_class not in self._executors:
+            # metadata-only arena: no device payload exists, so the plan
+            # completes immediately as a residency-only move
+            plan.state = DONE
+            self.stats.completed[plan.direction] += 1
+            self._notify(plan)
+            return Fence(self, plan.seqno)
+        self._mark(plan)
+        self._pending.append(plan)
+        self.stats.max_pending = max(self.stats.max_pending, self.pending)
+        fence = Fence(self, plan.seqno)
+        if self.eager:
+            self.drain()
+        return fence
+
+    def _mark(self, plan: TransferPlan) -> None:
+        """Discipline marks: HOLD freed source blocks (a DMA reads them
+        after the allocator let go -- they must not be reallocated
+        before the gather launches) and flag destination leases
+        ``in_flight`` (their payload is not there yet)."""
+        st = self.arena._cls(plan.pool_class)
+        if plan.src is not None:
+            for b in plan.src:
+                b = int(b)
+                if st.allocator.refcount(b) == 0:
+                    if st.allocator.is_held(b):
+                        # an earlier pending plan already holds it; move
+                        # the hold to this (later) reader so it survives
+                        # until the LAST gather over the block launches
+                        for p in self._pending:
+                            if (p.pool_class == plan.pool_class
+                                    and b in p._held):
+                                p._held.remove(b)
+                                break
+                    else:
+                        st.allocator.hold(b)
+                    plan._held.append(b)
+        if plan.dst is not None:
+            for b in plan.dst:
+                for lease in st.leases.get(int(b), []):
+                    if not lease.in_flight:
+                        lease.in_flight = True
+                        plan._flagged.append(lease)
+
+    def _release_holds(self, plan: TransferPlan) -> None:
+        st = self.arena._cls(plan.pool_class)
+        for b in plan._held:
+            st.allocator.release_hold(b)
+        plan._held = []
+
+    def _clear_flags(self, plan: TransferPlan) -> None:
+        for lease in plan._flagged:
+            lease.in_flight = False
+        plan._flagged = []
+
+    def _notify(self, plan: TransferPlan) -> None:
+        for fn in self._observers.values():
+            fn(plan)
+
+    # ---------------- execution ----------------
+    def dispatch(self, upto: Optional[int] = None) -> None:
+        """Execute d2d/h2d plans; LAUNCH d2h gathers, deferring their
+        host copies to the next ``complete_dispatched``/``drain`` (the
+        double-buffer half of the step loop)."""
+        self.stats.dispatches += 1
+        self._run_dispatch(upto)
+
+    def complete_dispatched(self, upto: Optional[int] = None) -> None:
+        """Fence phase: land every launched-but-uncopied d2h payload."""
+        self.stats.fences += 1
+        self._run_complete(upto)
+
+    def drain(self, upto: Optional[int] = None) -> None:
+        """Synchronous fallback: execute everything (or the fenced
+        prefix) now, in enqueue order."""
+        self.stats.drains += 1
+        self._run_dispatch(upto)
+        self._run_complete(upto)
+
+    def _covered(self, plan: TransferPlan, upto: Optional[int]) -> bool:
+        return upto is None or plan.seqno <= upto
+
+    def _run_dispatch(self, upto: Optional[int] = None) -> None:
+        while self._pending and self._covered(self._pending[0], upto):
+            plan = self._pending.pop(0)
+            if plan.direction == D2D:
+                self._exec_copies(self._take_batch(plan, upto))
+            elif plan.direction == D2H:
+                self._dispatch_gathers(self._take_batch(plan, upto))
+            else:
+                self._exec_swap_in(plan)
+
+    def _take_batch(self, head: TransferPlan,
+                    upto: Optional[int]) -> List[TransferPlan]:
+        """Coalesce consecutive same-direction same-class plans into one
+        launch (the batched multi-plan gather/copy).  A d2d plan whose
+        sources overlap an earlier destination in the batch depends on
+        that copy and must not share its snapshot -- the batch breaks
+        there."""
+        batch = [head]
+        dsts = set() if head.dst is None else set(int(b) for b in head.dst)
+        while self._pending:
+            nxt = self._pending[0]
+            if (nxt.direction != head.direction
+                    or nxt.pool_class != head.pool_class
+                    or not self._covered(nxt, upto)):
+                break
+            if nxt.src is not None and any(int(b) in dsts for b in nxt.src):
+                break
+            batch.append(self._pending.pop(0))
+            if nxt.dst is not None:
+                dsts.update(int(b) for b in nxt.dst)
+        self.stats.coalesced += len(batch) - 1
+        return batch
+
+    def _streams(self, pool_class: str):
+        get, set_, layered = self._executors[pool_class]
+        return get(), set_, layered
+
+    def _exec_copies(self, batch: List[TransferPlan]) -> None:
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        src = jnp.asarray(np.concatenate([p.src for p in batch]), jnp.int32)
+        dst = jnp.asarray(np.concatenate([p.dst for p in batch]), jnp.int32)
+        streams, set_, layered = self._streams(batch[0].pool_class)
+        copy = ops.copy_pool_blocks if layered else ops.block_copy
+        set_([copy(s, src, dst) for s in streams])
+        self.stats.launches += 1
+        for plan in batch:
+            self._release_holds(plan)
+            self._clear_flags(plan)
+            plan.state = DONE
+            self.stats.completed[D2D] += 1
+            self.stats.bytes_moved[D2D] += plan.nbytes
+            self._notify(plan)
+
+    def _dispatch_gathers(self, batch: List[TransferPlan]) -> None:
+        """Launch ONE device gather over the batch's concatenated ids
+        (multi-plan) and slice per plan; the blocking host copies wait
+        for the fence.  Holds release here: the gather has captured the
+        functional snapshot, so the ids are safely reusable."""
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        ids = jnp.asarray(np.concatenate([p.src for p in batch]), jnp.int32)
+        streams, _, layered = self._streams(batch[0].pool_class)
+        gathered = [ops.gather_blocks(s, ids) if layered else s[ids]
+                    for s in streams]
+        self.stats.launches += 1
+        off = 0
+        for plan in batch:
+            n = plan.src.size
+            plan._gathered = [(g[:, off:off + n] if layered
+                               else g[off:off + n]) for g in gathered]
+            off += n
+            self._release_holds(plan)
+            plan.state = DISPATCHED
+            plan.dispatch_mark = self._compute_marks
+            self._dispatched.append(plan)
+
+    def _run_complete(self, upto: Optional[int] = None) -> None:
+        for plan in [p for p in self._dispatched if self._covered(p, upto)]:
+            self._dispatched.remove(plan)
+            self._complete(plan)
+
+    def _complete(self, plan: TransferPlan) -> None:
+        host = tuple(np.asarray(g) for g in plan._gathered)
+        plan._gathered = None
+        plan.nbytes = int(sum(h.nbytes for h in host))
+        self.arena.host_deposit(plan.pool_class, plan.owner, host,
+                                plan.nbytes)
+        plan.state = DONE
+        self.stats.launches += 1                 # the host copy itself
+        self.stats.completed[D2H] += 1
+        self.stats.bytes_moved[D2H] += plan.nbytes
+        if self._compute_marks > plan.dispatch_mark:
+            self.stats.overlapped += 1           # a decode ran in between
+        self._notify(plan)
+
+    def _exec_swap_in(self, plan: TransferPlan) -> None:
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        cls, owner = plan.pool_class, plan.owner
+        if not self.arena.host_contains(cls, owner):
+            # the payload is still in a dispatched d2h of the same owner
+            # (preempt + immediate resume): land it first, in FIFO order
+            for p in [p for p in self._dispatched
+                      if p.pool_class == cls and p.owner == owner]:
+                self._dispatched.remove(p)
+                self._complete(p)
+        payload = self.arena.host_take(cls, owner)
+        idx = jnp.asarray(plan.dst, jnp.int32)
+        streams, set_, layered = self._streams(cls)
+        if len(payload) != len(streams):
+            raise ValueError(
+                f"swap-in of {owner!r}: payload has {len(payload)} "
+                f"streams, executor exposes {len(streams)}")
+        n = int(plan.dst.size)
+        for h in payload:
+            saved = (h.shape[1] if layered else h.shape[0]) \
+                if h is not None else n
+            if saved != n:
+                raise ValueError(
+                    f"swap-in of {owner!r}: {saved} saved blocks into "
+                    f"{n} fresh ids")
+        out = [s if h is None
+               else ops.scatter_blocks(s, idx, jnp.asarray(h)) if layered
+               else s.at[idx].set(jnp.asarray(h))
+               for s, h in zip(streams, payload)]
+        set_(out)
+        plan.nbytes = int(sum(h.nbytes for h in payload if h is not None))
+        self._clear_flags(plan)
+        plan.state = DONE
+        self.stats.launches += 1
+        self.stats.completed[H2D] += 1
+        self.stats.bytes_moved[H2D] += plan.nbytes
+        self._notify(plan)

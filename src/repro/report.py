@@ -68,22 +68,49 @@ def fmt_dryrun_table(rows: List[Dict]) -> str:
 def fmt_arena_table(arena: Dict) -> str:
     """Render an ``ArenaStats.to_dict()`` snapshot (the ``arena`` key of
     BENCH_serve.json) as the unified-address-space table: one row per
-    pool class with placement split, sharing, and locality metrics."""
+    pool class with placement split, sharing, locality metrics, and
+    blocks used/free per dp pool group when the class is partitioned."""
     out = ["| pool class | blocks | used | free | pinned | host tier | "
-           "COW-shared | frag | table locality | owners |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+           "COW-shared | frag | table locality | owners | dp groups |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
     for name in sorted(arena.get("classes", {})):
         c = arena["classes"][name]
         hist = c.get("refcount_histogram", [])
         shared = sum(hist[2:]) if len(hist) > 2 else 0
+        groups = " ".join(f"g{g['group']} {g['used']}/{g['free']}"
+                          for g in c.get("groups", [])) or "—"
         out.append(
             f"| {name} | {c['num_blocks']} | {c['num_used']} | "
             f"{c['num_free']} | {c['pinned']} | {c['host_blocks']} | "
             f"{shared} | {c['fragmentation']:.3f} | "
-            f"{c['table_locality']:.3f} | {len(c['blocks_by_owner'])} |")
+            f"{c['table_locality']:.3f} | {len(c['blocks_by_owner'])} | "
+            f"{groups} |")
     out.append("")
     out.append(f"compactions: {arena.get('compactions', 0)} "
                f"(blocks moved: {arena.get('blocks_compacted', 0)})")
+    return "\n".join(out)
+
+
+def fmt_transfer_table(tr: Dict) -> str:
+    """Render a ``TransferStats.to_dict()`` snapshot: plans and bytes
+    per direction plus the scheduling counters of the transfer plane."""
+    out = ["| direction | enqueued | completed | bytes moved |",
+           "|---|---|---|---|"]
+    names = {"d2d": "d2d (COW / compaction)",
+             "d2h": "d2h (swap-out)",
+             "h2d": "h2d (swap-in)"}
+    for d in ("d2d", "d2h", "h2d"):
+        out.append(f"| {names[d]} | {tr['enqueued'].get(d, 0)} | "
+                   f"{tr['completed'].get(d, 0)} | "
+                   f"{tr['bytes_moved'].get(d, 0)} |")
+    out.append("")
+    out.append(
+        f"launches: {tr.get('launches', 0)} "
+        f"(coalesced plans: {tr.get('coalesced', 0)}) · "
+        f"dispatches: {tr.get('dispatches', 0)} · "
+        f"drains: {tr.get('drains', 0)} · "
+        f"overlapped host copies: {tr.get('overlapped', 0)} · "
+        f"max queue depth: {tr.get('max_pending', 0)}")
     return "\n".join(out)
 
 
@@ -96,6 +123,10 @@ def main(path: str) -> None:
             raise SystemExit(f"{path}: no ArenaStats ('arena' key) found")
         print("### Unified address space (ArenaStats)\n")
         print(fmt_arena_table(arena))
+        transfers = doc.get("transfers") or arena.get("transfers")
+        if transfers:
+            print("\n### Transfer plane (TransferStats)\n")
+            print(fmt_transfer_table(transfers))
         return
     rows = load(path)
     print("### Single-pod (16x16 = 256 chips)\n")

@@ -5,19 +5,27 @@ The serving stack is three layers over one address space
 
   * ``scheduler.py`` -- POLICY: FCFS admission negotiated against the
     Arena's grantable leases (``free_blocks``), LIFO victim choice,
-    per-step prefill budgeting, dp-pool-group fork gating.  No jax.
-  * ``swap.py`` -- TRANSFERS: block-granular device<->host payload
-    moves whose cost scales with blocks held, never pool size;
-    residency lives in the Arena's host tier.
-  * ``repro.mem`` -- ADDRESS SPACE: allocation, refcounts, the COW
-    write barrier, pressure-time reclaim (this engine registers its
-    LIFO preemption as the Arena's reclaimer) and ``compact()``.
+    per-step prefill budgeting, an adaptive free-block watermark fed by
+    observed growth, dp-pool-group fork gating.  No jax.
+  * ``swap.py`` -- LEDGER: the byte ledger and residency views over the
+    transfer plane; swap cost scales with blocks held, never pool size.
+  * ``repro.mem`` -- ADDRESS SPACE + TRANSFER PLANE: allocation,
+    refcounts, the COW write barrier, pressure-time reclaim (this
+    engine registers its LIFO preemption as the Arena's reclaimer),
+    ``compact()``, and the ``TransferQueue`` every payload move rides
+    (``mem/transfer.py`` is the only module that touches the
+    block-copy kernels).
   * this module -- MECHANISM: one decode step for a fixed slot count B
     (padding empty slots, how a TPU serving binary keeps one compiled
     shape), ONE padded batched prefill for all of a step's admissions,
-    COW prefix sharing, execution of COW-copy and compaction plans, and
-    the bookkeeping that keeps host tables and device state in
-    lockstep.
+    COW prefix sharing, and the SCHEDULE of the transfer plane: the
+    step loop fences step N-1's host copies, produces this step's
+    plans (compaction, swap-in, growth preemptions, COW), dispatches
+    the queue, then decodes -- so swap-out host copies overlap the
+    decode (dispatch at N, fence at N+1).  ``overlap_transfers=False``
+    selects the synchronous ``drain()`` fallback, which is
+    token-identical and byte-identical by construction (pinned in
+    tests and ``bench_serve --smoke``).
 
 COW prefix sharing end-to-end: every admitted prompt registers its
 block-aligned prefixes in a hash map; a later prompt that matches forks
@@ -39,7 +47,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paged_kv import PagedKVCache, PagedKVManager
-from repro.kernels import ops
 from repro.mem import NULL_BLOCK, Arena, LeaseRevokedError
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.swap import HostBlockStore
@@ -65,13 +72,15 @@ class Engine:
     """
 
     def __init__(self, model, params, *, slots: int, max_seq: int,
-                 num_blocks: int, eos_id: int = 1, watermark: int = 0,
+                 num_blocks: int, eos_id: int = 1,
+                 watermark: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
                  share_prefixes: bool = True,
                  arena: Optional[Arena] = None, dp_groups: int = 1,
                  auto_compact: bool = True,
                  compact_free_frac: float = 0.5,
-                 compact_frag_threshold: float = 0.5):
+                 compact_frag_threshold: float = 0.5,
+                 overlap_transfers: bool = True):
         self.model = model
         self.params = params
         self.slots = slots
@@ -102,6 +111,14 @@ class Engine:
                                arena=self.arena)
         self.store = HostBlockStore(self.arena, self.mgr.pool_class)
         self.arena.set_reclaimer(self._reclaim_for_pressure)
+        # the transfer plane: this engine is the executor for the KV
+        # pool class (streams = the cache's functional k/v pools) and
+        # the scheduler of dispatch/fence phases in the step loop.
+        self.transfers = self.arena.transfers
+        self.transfers.eager = not overlap_transfers
+        self.transfers.register_executor(self.mgr.pool_class,
+                                     self._transfer_streams,
+                                     self._set_transfer_streams)
         self.auto_compact = auto_compact
         self.compact_free_frac = compact_free_frac
         self.compact_frag_threshold = compact_frag_threshold
@@ -122,6 +139,37 @@ class Engine:
     def sink(self) -> int:
         """Current physical id of the pinned write-sink block."""
         return self._sink.block
+
+    # ---------------- transfer-plane executor ----------------
+    def _transfer_streams(self):
+        """Current device streams of the KV pool class (functional)."""
+        c = self.cache
+        return [c.k_pool] + ([c.v_pool] if c.v_pool is not None else [])
+
+    def _set_transfer_streams(self, streams) -> None:
+        k, *rest = streams
+        self.cache = dataclasses.replace(
+            self.cache, k_pool=k, v_pool=rest[0] if rest else None)
+
+    def sync_transfers(self) -> None:
+        """Fence everything: drain the transfer plane to completion
+        (the synchronous fallback, also used by tests that inspect the
+        byte ledger right after a forced preemption)."""
+        self.transfers.drain()
+
+    def release_arena(self) -> None:
+        """Detach this engine from a SHARED arena so the arena stops
+        retaining it (executor/observer closures hold the engine, and
+        with it params and the device pools).  Drains outstanding
+        plans, then unbinds reclaimer, executor and swap ledger; the
+        arena can be handed to a new engine afterwards.  Engines owning
+        a private arena never need this -- both die together.
+        """
+        self.transfers.drain()
+        if self.arena._reclaimer == self._reclaim_for_pressure:
+            self.arena.set_reclaimer(None)
+        self.transfers.unregister_executor(self.mgr.pool_class)
+        self.transfers.remove_observer(f"swap-ledger:{self.mgr.pool_class}")
 
     # ---------------- intake / compat views ----------------
     def submit(self, req: Request) -> None:
@@ -200,8 +248,10 @@ class Engine:
                                           num_running=len(self.running))
         for req in plan.resume:
             slot = free.pop(0)
-            new_ids = self.mgr.swap_in(req.rid)
-            self.cache = self.store.swap_in(req.rid, self.cache, new_ids)
+            # migrate("device") reallocates AND enqueues the h2d scatter
+            # plan; the payload lands when the step loop dispatches the
+            # queue (before any decode read)
+            self.mgr.swap_in(req.rid)
             self._next_tok[slot] = req.pending_tok
             self._place(req, slot)
         batch: List[Tuple[int, Request, int]] = []
@@ -278,9 +328,11 @@ class Engine:
     def _preempt_slot(self, slot: int) -> None:
         req = self.running.pop(slot)
         req.pending_tok = int(self._next_tok[slot])
-        # freeing ids before the gather is safe: the gather reads the
-        # current immutable pool snapshot, not future reuse of the ids
-        self.store.swap_out(req.rid, self.cache, self.mgr.swap_out(req.rid))
+        # migrate("host") frees the ids and enqueues the d2h plan; the
+        # allocator HOLDS the vacated ids until the gather is
+        # dispatched, so reuse cannot clobber the payload mid-flight,
+        # and the host copy overlaps the next decode (fence at N+1)
+        self.mgr.swap_out(req.rid)
         self._deregister_prefix(req)
         req.slot = -1
         self.sched.on_preempt(req)
@@ -292,11 +344,14 @@ class Engine:
         The victim is keyed on ``admit_order`` -- the scheduler's
         monotonic admission stamp -- not on ``rid`` (submission order):
         a request submitted first but resumed last is still the first
-        evicted.
+        evicted.  The swap-out gather dispatches immediately (we are
+        between steps); its host copy lands at the next step's fence,
+        overlapping whatever decodes in between.
         """
         if not self.running:
             return
         self._preempt_slot(self.sched.pick_victim(self.running))
+        self.transfers.dispatch()
 
     def _reclaim_for_pressure(self, requester) -> Optional[int]:
         """Arena reclaimer: evict the LIFO victim, return its owner id.
@@ -320,12 +375,18 @@ class Engine:
         Empty slots map to the SINK block, not NULL: jax scatter WRAPS
         negative indices, so a NULL (-1) entry would silently clobber
         the pool's last block on every padded decode write.
+
+        This is the READ BARRIER: the decode gathers every table entry,
+        so every running mapping must be settled (no lease still the
+        target of an unfenced transfer) -- ``assert_settled`` raises
+        ``UnfencedReadError`` if the dispatch phase was skipped.
         """
         cfg = self.cache.config
         tables = np.full((self.slots, cfg.max_blocks_per_seq), self.sink,
                          np.int32)
         lens = np.zeros(self.slots, np.int32)
         for slot, req in self.running.items():
+            self.mgr.mapping(req.rid).assert_settled()
             tables[slot] = self.mgr.device_table(req.rid)
             lens[slot] = req.tokens_held
         self.cache = dataclasses.replace(
@@ -333,8 +394,9 @@ class Engine:
             seq_lens=jnp.asarray(lens))
 
     # ---------------- main loop ----------------
-    def _grow_for_next_token(self) -> None:
-        """Ensure every running seq can write this step's token.
+    def _grow_for_next_token(self) -> int:
+        """Ensure every running seq can write this step's token; returns
+        blocks allocated (the adaptive watermark's growth signal).
 
         Growth allocates under Arena pressure: exhaustion triggers the
         registered reclaimer (LIFO preemption) inside the Arena; only
@@ -342,45 +404,31 @@ class Engine:
         surface here, and then the write is moot -- its blocks are
         already on the host tier.
         """
+        grown = 0
         for slot in sorted(self.running):
             if slot not in self.running:
                 continue
             req = self.running[slot]
             try:
-                self.mgr.extend(req.rid, req.tokens_held + 1)
+                grown += len(self.mgr.extend(req.rid, req.tokens_held + 1))
             except LeaseRevokedError:
                 continue
+        return grown
 
-    def _execute_copy_plan(self, src, dst) -> None:
-        """Apply a (src, dst) block-copy plan to every pool stream
-        (kernels.block_copy): COW fulfilments and compaction both land
-        here."""
-        s = jnp.asarray(src, jnp.int32).reshape(-1)
-        d = jnp.asarray(dst, jnp.int32).reshape(-1)
-        k_pool = ops.copy_pool_blocks(self.cache.k_pool, s, d)
-        v_pool = self.cache.v_pool
-        if v_pool is not None:
-            v_pool = ops.copy_pool_blocks(v_pool, s, d)
-        self.cache = dataclasses.replace(self.cache, k_pool=k_pool,
-                                         v_pool=v_pool)
-
-    def _apply_block_copy(self, src: int, dst: int) -> None:
-        """One COW fulfilment DMA per pool stream."""
-        self._execute_copy_plan([src], [dst])
-        self.cow_copies += 1
-
-    def _cow_barrier(self) -> None:
-        """Private-block guarantee for every position written this step.
+    def _cow_barrier(self) -> int:
+        """Private-block guarantee for every position written this step;
+        returns the number of fulfilment copies enqueued.
 
         The copy-target block is a DEFERRED claim the admission check
         could not reserve (a forked child is charged its worst case but
-        allocates nothing while sharing).  The barrier itself is Arena
-        policy now (``Mapping.ensure_writable`` allocates the target
-        under pressure, falling back to LIFO preemption inside the
-        Arena); this loop only executes the returned copy plans.  Each
-        fulfilment copy is applied IMMEDIATELY so a later preemption in
-        the same pass gathers settled blocks.
+        allocates nothing while sharing).  The barrier is Arena policy
+        (``Mapping.ensure_writable`` allocates the target under
+        pressure, falling back to LIFO preemption inside the Arena, and
+        ENQUEUES the fulfilment copy on the transfer plane); the queue
+        preserves enqueue order, so a preemption gather later in the
+        same pass reads settled blocks once dispatched.
         """
+        copies = 0
         for slot in sorted(self.running):
             if slot not in self.running:
                 continue
@@ -390,12 +438,15 @@ class Engine:
             except LeaseRevokedError:
                 continue            # the writer itself was reclaimed
             if plan is not None:
-                self._apply_block_copy(*plan)
+                self.cow_copies += 1
+                copies += 1
+        return copies
 
     # ---------------- compaction (Arena defrag) ----------------
     def compact_now(self) -> int:
         """One Arena ``compact()`` cycle: move live blocks to the dense
-        prefix, execute the copy plan on device, tables absorb the move.
+        prefix; the copy plan rides the transfer plane and lands at the
+        next dispatch (before any decode read).
 
         Safe between steps (no writes in flight); every table built
         afterwards (``_sync_device_state``, prefill tables) reads the
@@ -403,9 +454,7 @@ class Engine:
         relocation -- the paper's 'Relocation / Migration' row.  Returns
         the number of blocks moved.
         """
-        src, dst = self.arena.compact(self.mgr.pool_class)
-        if len(src):
-            self._execute_copy_plan(src, dst)
+        src, _ = self.arena.compact(self.mgr.pool_class)
         return len(src)
 
     def _maybe_compact(self) -> None:
@@ -422,20 +471,40 @@ class Engine:
             self.compact_now()
 
     def step(self) -> None:
-        """Admit what fits, grow tables, run one decode step."""
+        """One serving step, scheduled around the transfer plane:
+
+            fence(N-1) -> produce plans -> dispatch -> decode
+            [host copies of step N's swap-outs overlap this decode]
+
+        FENCE: land step N-1's dispatched swap-out host copies (double
+        buffering: dispatched at N-1, fenced here).  PRODUCE: compaction
+        policy, admissions/resumes (h2d plans), growth + COW barrier
+        (d2d plans, growth preemptions enqueue d2h).  DISPATCH: execute
+        d2d/h2d and launch d2h gathers -- everything decode will READ is
+        settled, while the blocking host copies stay pending and overlap
+        the decode below.
+        """
+        self.transfers.complete_dispatched()
         self._maybe_compact()
         self._admit()
         self.steps += 1
         if not self.running:
+            self.transfers.drain()      # idle: nothing to overlap against
             return
-        self._grow_for_next_token()
+        grown = self._grow_for_next_token()
         if not self.running:
+            self.transfers.drain()
             return
-        self._cow_barrier()
+        grown += self._cow_barrier()
+        self.sched.observe_growth(grown)
+        self.transfers.dispatch()
         self._sync_device_state()
         tokens = jnp.asarray(self._next_tok)
         logits, self.cache = self.model.decode_step(self.params, tokens,
                                                     self.cache)
+        # compute mark: any dispatched host copy that completes after
+        # this point genuinely overlapped a decode (honest `overlapped`)
+        self.transfers.note_compute()
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.decode_tokens += len(self.running)
         for slot, req in list(self.running.items()):
@@ -452,7 +521,27 @@ class Engine:
         while (self.sched.has_work or self.running) and \
                 self.steps < max_steps:
             self.step()
+        self.transfers.drain()          # settle trailing transfers
         return self.done
+
+    # ---------------- restart (checkpoint-on-arena) ----------------
+    def restore_preempted(self, req: Request) -> None:
+        """Re-adopt a preempted request after ``Arena.restore``.
+
+        The arena snapshot carries the sequence's host-tier payload and
+        mapping; the caller re-creates the ``Request`` (rid, prompt,
+        generated, pending_tok are serving-layer state) and this hooks
+        both back together: the manager adopts the restored mapping and
+        the scheduler queues the request for resume.
+        """
+        m = self.arena.find_mapping(self.mgr.pool_class, req.rid)
+        if m is None or m.placement != "host":
+            raise ValueError(
+                f"no restored host-resident mapping for rid {req.rid}; "
+                f"run Arena.restore first (device-resident sequences do "
+                f"not survive a restart -- re-submit them)")
+        self.mgr.adopt(req.rid, m)
+        self.sched.on_preempt(req)
 
     # ---------------- introspection ----------------
     @property
@@ -472,6 +561,8 @@ class Engine:
             "pool_utilization": self.mgr.utilization,
             "compactions": self.arena.compactions,
             "blocks_compacted": self.arena.blocks_compacted,
+            "watermark_effective": self.sched.watermark,
+            "transfers": self.transfers.stats.to_dict(),
         }
 
     def arena_stats(self):
@@ -481,7 +572,8 @@ class Engine:
     def check_consistency(self) -> None:
         """Invariant audit (used by tests after every step)."""
         alloc = self.mgr.allocator
-        assert alloc.num_used + alloc.num_free == alloc.num_blocks
+        assert (alloc.num_used + alloc.num_free + alloc.num_held
+                == alloc.num_blocks)
         assert alloc.refcount(self.sink) == 1
         bt = self.cache.config.block_tokens
         lens = np.asarray(self.cache.seq_lens)
@@ -492,8 +584,20 @@ class Engine:
             assert all(alloc.is_allocated(b) for b in tbl)
             assert lens[slot] == req.tokens_held, (slot, lens[slot],
                                                    req.tokens_held)
-        assert len(self.store) == len(self.mgr.swapped)
+        # transfer-plane accounting: every swapped sequence's payload is
+        # either deposited on the host tier or IN TRANSIT (its d2h plan
+        # enqueued/dispatched but not fenced) -- never both, never lost
+        transit = set(self.transfers.in_transit(self.mgr.pool_class))
+        assert len(self.store) + len(transit) == len(self.mgr.swapped)
         for rid in self.mgr.swapped:
-            assert rid in self.store
+            assert rid in self.store or rid in transit
+        # in-flight leases must exactly mirror pending-plan destinations
+        pending_dst = self.transfers.in_flight_blocks(self.mgr.pool_class)
+        for rid in self.mgr.tables:
+            for lease in self.mgr.mapping(rid).leases:
+                if lease.in_flight:
+                    assert lease.block in pending_dst, (
+                        f"rid {rid}: lease {lease!r} flagged in-flight "
+                        f"but no pending plan targets it")
         # lease registry mirrors allocator refcounts exactly
         self.arena.check_registry(self.mgr.pool_class)

@@ -12,7 +12,12 @@ Policies implemented:
 * **FCFS admission with a free-block watermark** -- queued requests are
   admitted in submission order, and only while admission leaves at least
   ``watermark`` blocks free (headroom for the per-``block_tokens``-steps
-  growth of already-running sequences).  A request is only ever admitted
+  growth of already-running sequences).  The watermark is ADAPTIVE by
+  default: an EWMA of observed allocation per step (growth + COW copy
+  targets, reported by the engine via ``observe_growth``) times a small
+  lookahead horizon, so headroom tracks the workload instead of a
+  hand-tuned constant; passing ``watermark=<int>`` overrides the
+  adaptive path with the static knob.  A request is only ever admitted
   when its WORST-CASE footprint (prompt + max_new tokens) currently
   fits: blocks are handed out lazily as the sequence grows, but the
   up-front check plus LIFO preemption guarantees the oldest running
@@ -99,14 +104,21 @@ class Scheduler:
     #: preempted-LIFO BlockStack) when it shares the engine's Arena
     META_CLASS = "sched-meta"
 
-    def __init__(self, *, watermark: int = 0,
+    def __init__(self, *, watermark: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 arena: Optional[Arena] = None):
-        if watermark < 0:
+                 arena: Optional[Arena] = None,
+                 growth_alpha: float = 0.25, growth_horizon: int = 4):
+        if watermark is not None and watermark < 0:
             raise ValueError("watermark must be >= 0")
         if prefill_budget is not None and prefill_budget <= 0:
             raise ValueError("prefill_budget must be positive")
-        self.watermark = watermark
+        if not 0.0 < growth_alpha <= 1.0:
+            raise ValueError("growth_alpha must be in (0, 1]")
+        #: static override; None selects the adaptive EWMA watermark
+        self.watermark_override = watermark
+        self.growth_alpha = growth_alpha
+        self.growth_horizon = growth_horizon
+        self._growth_ewma = 0.0
         self.prefill_budget = prefill_budget
         self.queue: List[Request] = []           # FCFS arrivals
         if arena is not None:
@@ -120,6 +132,27 @@ class Scheduler:
         else:
             self.preempted = BlockStack(block_size=256)  # LIFO resume order
         self._admit_counter = 0
+
+    # ---------------- adaptive watermark ----------------
+    @property
+    def watermark(self) -> int:
+        """Free-block headroom demanded beyond each admission.
+
+        Static when the constructor knob was given; otherwise derived
+        from the observed allocation rate: ``ceil(EWMA(blocks/step) *
+        growth_horizon)`` -- enough free blocks for the running set to
+        keep growing for ``growth_horizon`` steps while the next
+        admission's worst case is reserved.
+        """
+        if self.watermark_override is not None:
+            return self.watermark_override
+        return int(np.ceil(self._growth_ewma * self.growth_horizon))
+
+    def observe_growth(self, blocks: int) -> None:
+        """Engine feedback: blocks allocated for growth + COW targets
+        this step (drives the adaptive watermark)."""
+        a = self.growth_alpha
+        self._growth_ewma = (1 - a) * self._growth_ewma + a * max(0, blocks)
 
     # ---------------- intake ----------------
     def submit(self, req: Request) -> None:

@@ -1,26 +1,33 @@
-"""Host swap transfers: block-granular device<->host (paper 'Swapping').
+"""Host swap ledger: block-granular device<->host (paper 'Swapping').
 
-The mechanism half of preemption, now a thin TRANSFER layer over the
-``repro.mem.Arena`` host tier: residency (who lives host-side, how many
-blocks) is Arena state written by ``Mapping.migrate``; this module only
-moves payloads and keeps the byte ledger.  Swap-out first runs a COMPACT
-gather on device (``kernels.block_copy.gather_blocks`` -- only the
-preempted sequence's blocks, ``k_pool[:, idx]``), then moves that one
-small array host-side and deposits it in the arena
-(``Arena.host_deposit``); swap-in takes the payload back
-(``Arena.host_take``) and scatters it into freshly allocated blocks.
-Bytes moved are therefore exactly
+Since the transfer-plane redesign, NOTHING here moves bytes.  Swap-out
+and swap-in are ``TransferPlan``s produced by ``Mapping.migrate`` and
+executed by the Arena's ``TransferQueue`` (``mem/transfer.py`` -- the
+only module allowed to touch the block-copy kernels or the host tier's
+payload verbs; a grep-enforced test pins that rule).  This module is the
+serving stack's *ledger and view* over that plane:
 
-    blocks_held * config.swap_nbytes_per_block()
+  * ``SwapStats`` accumulates the byte ledger from completed plans (the
+    store registers itself as a queue observer), preserving the
+    regression surface: every swap-out moves exactly
 
-per swap -- proportional to what the sequence holds and INDEPENDENT of
-pool size.  The naive alternative (materialising the whole pool on host
-and slicing there) moves ``num_blocks / blocks_held`` times more; the
-regression tests pin this ratio out of existence, the same way the cost
-model pins pool-size-independent byte bills.
+        blocks_held * config.swap_nbytes_per_block()
 
-Every transfer is logged in ``SwapStats`` so the serving benchmark can
-report swap traffic per step and tests can assert the proportionality.
+    bytes -- proportional to what the sequence holds and INDEPENDENT of
+    pool size.  The naive alternative (materialising the whole pool on
+    host and slicing there) moves ``num_blocks / blocks_held`` times
+    more; tests pin this ratio out of existence, the same way the cost
+    model pins pool-size-independent byte bills.
+  * ``__contains__`` / ``__len__`` are the engine-invariant views:
+    residency lives in the Arena's host tier, and a sequence mid-swap
+    (payload still in a dispatched-but-unfenced d2h plan) is IN TRANSIT,
+    which ``Engine.check_consistency`` accounts for explicitly.
+
+Because payload transfers ride the queue, swap-out device gathers
+dispatch at step N and their host copies land at the step N+1 fence --
+the double-buffering the ROADMAP asked for -- while ``queue.drain()``
+remains the synchronous fallback with byte-identical traffic
+(asserted by ``bench_serve --smoke``).
 """
 
 from __future__ import annotations
@@ -28,12 +35,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.paged_kv import PagedKVCache
-from repro.kernels import ops
 from repro.mem import Arena
+from repro.mem.transfer import D2H, H2D, TransferPlan
 
 
 @dataclasses.dataclass
@@ -43,18 +46,20 @@ class SwapStats:
     swap_out_bytes: int = 0
     swap_in_bytes: int = 0
     last_swap_out_bytes: int = 0
-    # (seq_id, blocks_moved, bytes_moved) per swap-out, oldest first
+    # (seq_id, blocks_moved, bytes_moved) per swap-out, completion order
     out_log: List[Tuple[int, int, int]] = dataclasses.field(
         default_factory=list)
 
 
 class HostBlockStore:
-    """Transfer layer for preempted sequences' KV payloads.
+    """Byte ledger + residency view for preempted sequences' payloads.
 
     Standalone construction (no arena) creates a private Arena so the
     class keeps working as a self-contained store; serving passes the
     engine's shared arena + pool class so host-tier residency, payloads
     and ``ArenaStats`` placement counts all live in ONE address space.
+    The ledger updates when plans COMPLETE (at the fence), so bytes
+    reported are bytes actually moved.
     """
 
     def __init__(self, arena: Optional[Arena] = None,
@@ -62,60 +67,35 @@ class HostBlockStore:
         self.arena = arena if arena is not None else Arena()
         self.pool_class = pool_class
         self.stats = SwapStats()
+        self.arena.transfers.add_observer(self._on_complete,
+                                          key=f"swap-ledger:{pool_class}")
 
+    def _on_complete(self, plan: TransferPlan) -> None:
+        if plan.pool_class != self.pool_class:
+            return
+        st = self.stats
+        if plan.direction == D2H and plan.kind == "swap-out":
+            st.swap_outs += 1
+            st.swap_out_bytes += plan.nbytes
+            st.last_swap_out_bytes = plan.nbytes
+            st.out_log.append((plan.owner, int(plan.src.size), plan.nbytes))
+        elif plan.direction == H2D and plan.kind == "swap-in":
+            st.swap_ins += 1
+            st.swap_in_bytes += plan.nbytes
+
+    # ---------------- residency views ----------------
     def __contains__(self, seq_id: int) -> bool:
         return self.arena.host_contains(self.pool_class, seq_id)
 
     def __len__(self) -> int:
         return self.arena.host_len(self.pool_class)
 
-    # ---------------- device -> host ----------------
-    def swap_out(self, seq_id: int, cache: PagedKVCache,
-                 block_ids: List[int]) -> None:
-        """Gather ``block_ids`` on device, then one transfer per stream.
-
-        Must be called while the blocks still hold the sequence's data
-        (i.e. BEFORE the pool positions are rewritten); the manager may
-        free the ids immediately after -- the gather reads the current
-        functional snapshot.
-        """
-        idx = jnp.asarray(np.asarray(block_ids, np.int32))
-        k_host = np.asarray(ops.gather_blocks(cache.k_pool, idx))
-        v_host = None
-        if cache.v_pool is not None:
-            v_host = np.asarray(ops.gather_blocks(cache.v_pool, idx))
-        moved = k_host.nbytes + (0 if v_host is None else v_host.nbytes)
-        self.arena.host_deposit(self.pool_class, seq_id, (k_host, v_host),
-                                moved)
-        st = self.stats
-        st.swap_outs += 1
-        st.swap_out_bytes += moved
-        st.last_swap_out_bytes = moved
-        st.out_log.append((seq_id, len(block_ids), moved))
-
-    # ---------------- host -> device ----------------
-    def swap_in(self, seq_id: int, cache: PagedKVCache,
-                new_ids: List[int]) -> PagedKVCache:
-        """Scatter the saved payload into ``new_ids`` (any physical
-        blocks -- the table absorbs relocation) and return the updated
-        cache."""
-        k_host, v_host = self.arena.host_take(self.pool_class, seq_id)
-        if len(new_ids) != k_host.shape[1]:
-            raise ValueError(
-                f"swap-in of {k_host.shape[1]} saved blocks into "
-                f"{len(new_ids)} fresh ids")
-        idx = jnp.asarray(np.asarray(new_ids, np.int32))
-        k_pool = cache.k_pool.at[:, idx].set(jnp.asarray(k_host))
-        v_pool = cache.v_pool
-        if v_host is not None:
-            v_pool = cache.v_pool.at[:, idx].set(jnp.asarray(v_host))
-        st = self.stats
-        st.swap_ins += 1
-        st.swap_in_bytes += k_host.nbytes + (
-            0 if v_host is None else v_host.nbytes)
-        return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool)
+    def in_transit(self, seq_id: int) -> bool:
+        """Swap-out enqueued/dispatched but its host copy not fenced yet."""
+        return seq_id in self.arena.transfers.in_transit(self.pool_class)
 
     # NOTE: cancelling a sequence while preempted goes through
-    # ``PagedKVManager.release`` (``Mapping.free``), which tears down
-    # host residency AND payload together -- a store-level drop would
-    # desync the two views the engine's check_consistency pins.
+    # ``PagedKVManager.release`` (``Mapping.free``), which settles any
+    # in-transit plan and tears down host residency AND payload together
+    # -- a store-level drop would desync the two views the engine's
+    # check_consistency pins.

@@ -164,3 +164,21 @@ def test_copy_pool_blocks_plan(layers, nb, blk, rng):
     ref = np.asarray(pool).copy()
     ref[:, dst] = np.asarray(pool)[:, src]
     np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+@pytest.mark.parametrize("layers,nb,blk", [(2, 8, (4, 2, 5)), (1, 6, (8,)),
+                                           (3, 5, (4, 3))])
+def test_scatter_blocks_inverse_of_gather(layers, nb, blk, rng):
+    """Swap-in scatter: payload[l, i] lands at pool[l, idx[i]], untouched
+    blocks preserved; gathering the same ids returns the payload."""
+    from repro.kernels.block_copy import gather_blocks, scatter_blocks
+    pool = jnp.asarray(rng.randn(layers, nb, *blk).astype(np.float32))
+    ids = np.array([3, 0, 2], np.int32)
+    payload = jnp.asarray(rng.randn(layers, len(ids), *blk)
+                          .astype(np.float32))
+    out = scatter_blocks(pool, jnp.asarray(ids), payload, interpret=True)
+    ref = np.asarray(pool).copy()
+    ref[:, ids] = np.asarray(payload)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    back = gather_blocks(out, jnp.asarray(ids), interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(payload))

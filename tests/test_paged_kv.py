@@ -10,12 +10,12 @@ from repro.core.blockpool import OutOfBlocksError
 from repro.core.paged_kv import PagedKVCache, PagedKVConfig, PagedKVManager
 
 
-def make(B=3, S=32, layers=2, kvh=2, hd=4, bt=8):
+def make(B=3, S=32, layers=2, kvh=2, hd=4, bt=8, arena=None):
     cfg = PagedKVConfig(num_layers=layers, kv_heads=kvh, head_dim=hd,
                         block_tokens=bt, num_blocks=B * S // bt + 4,
                         max_blocks_per_seq=S // bt, dtype=jnp.float32)
     cache = PagedKVCache.create(cfg, B)
-    mgr = PagedKVManager(cfg)
+    mgr = PagedKVManager(cfg, arena=arena)
     tables = []
     for sid in range(B):
         mgr.admit(sid, S)
@@ -73,27 +73,38 @@ def test_manager_admission_by_blocks():
 def test_swap_out_in_relocates(rng):
     """Swap-in may land on different physical blocks; tables absorb it.
 
-    Payload moves through the serve-layer host store, which gathers ONLY
-    the sequence's blocks on device (never the whole pool)."""
+    The payload rides the Arena's transfer plane (migrate enqueues the
+    d2h/h2d plans, the registered executor moves ONLY the sequence's
+    blocks -- never the whole pool); the serve-layer store is the byte
+    ledger over completed plans."""
+    from repro.mem import Arena
     from repro.serve.swap import HostBlockStore
-    cfg, cache, mgr = make(B=2, S=16)
+    arena = Arena()
+    cfg, cache, mgr = make(B=2, S=16, arena=arena)
     k_np = rng.randn(*cache.k_pool.shape).astype(np.float32)
-    cache = dataclasses.replace(cache, k_pool=jnp.asarray(k_np))
+    cell = {"cache": dataclasses.replace(cache, k_pool=jnp.asarray(k_np))}
+    arena.transfers.register_executor(
+        mgr.pool_class,
+        lambda: [cell["cache"].k_pool, cell["cache"].v_pool],
+        lambda s: cell.update(cache=dataclasses.replace(
+            cell["cache"], k_pool=s[0], v_pool=s[1])))
+    store = HostBlockStore(arena, mgr.pool_class)
     blocks_before = list(mgr.tables[0])
-    store = HostBlockStore()
-    store.swap_out(0, cache, mgr.swap_out(0))
+    mgr.swap_out(0)
+    arena.transfers.drain()
     assert 0 not in mgr.tables and mgr.swapped[0] == len(blocks_before)
     # occupy some freed blocks so swap-in must relocate
     mgr.admit(99, 8)
     new_ids = mgr.swap_in(0)
     assert new_ids != blocks_before
-    cache = store.swap_in(0, cache, new_ids)
+    arena.transfers.drain()
     np.testing.assert_array_equal(
-        np.asarray(cache.k_pool)[:, np.asarray(new_ids)],
+        np.asarray(cell["cache"].k_pool)[:, np.asarray(new_ids)],
         k_np[:, np.asarray(blocks_before)])
     # transfer cost: blocks held, never pool size
     assert store.stats.swap_out_bytes == \
         len(blocks_before) * cfg.swap_nbytes_per_block()
+    assert store.stats.swap_in_bytes == store.stats.swap_out_bytes
 
 
 def test_cow_fork_shares_blocks():

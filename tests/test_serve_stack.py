@@ -62,6 +62,7 @@ def _swap_bytes_for(model, params, num_blocks, rng):
         eng.step()
     blocks_held = len(eng.mgr.tables[0])
     eng.preempt_latest()
+    eng.sync_transfers()     # fence: the d2h plan's host copy lands here
     return blocks_held, eng.store.stats.last_swap_out_bytes, eng.cache.config
 
 
@@ -178,6 +179,31 @@ def test_scheduler_full_footprint_gate():
     assert [r.rid for r in plan.admit] == [0]
 
 
+def test_scheduler_adaptive_watermark():
+    """With no static knob the watermark tracks the EWMA of observed
+    blocks/step (times the lookahead horizon); the knob overrides."""
+    sched = Scheduler()                        # adaptive by default
+    assert sched.watermark == 0                # no growth observed yet
+    for _ in range(60):
+        sched.observe_growth(2)                # steady 2 blocks/step
+    assert sched.watermark == 2 * sched.growth_horizon   # EWMA converged
+    static = Scheduler(watermark=3)
+    for _ in range(60):
+        static.observe_growth(10)
+    assert static.watermark == 3               # the knob still wins
+    # the adaptive headroom actually holds back admissions: first
+    # admission ignores the watermark (progress guarantee); the second
+    # would leave 11-2-2=7 < 8 free and is deferred
+    sched.submit(Request(rid=0, prompt=np.arange(8), max_new=8))  # 2 blocks
+    sched.submit(Request(rid=1, prompt=np.arange(8), max_new=8))
+    plan = sched.plan_admissions(2, _Mem(free=11), num_running=0)
+    assert [r.rid for r in plan.admit] == [0]
+    sched.submit(Request(rid=2, prompt=np.arange(8), max_new=8))
+    plan = sched.plan_admissions(2, _Mem(free=11), num_running=1)
+    # 11-2=9 >= 8 admits rid=1; 9-2=7 < 8 defers rid=2
+    assert [r.rid for r in plan.admit] == [1]
+
+
 def test_scheduler_rejects_cross_group_fork():
     """dp_groups > 1: block tables hold group-local ids, so a fork may
     only alias a parent in its own pool group -- anything else fails
@@ -227,6 +253,82 @@ def test_cow_barrier_under_pool_exhaustion(setup, rng):
         ref = greedy_reference(model, params, req.prompt, 4, max_seq=32)
         assert req.generated == ref, (req.rid, req.generated, ref)
     assert_engine_quiescent(eng)
+
+
+# ---------------------------------------------------------------------------
+# the transfer plane, engine-level: the overlapped schedule (dispatch at
+# step N, fence at N+1) is token- AND byte-identical to drain()
+# ---------------------------------------------------------------------------
+def _drive_overlap_workload(model, params, overlap):
+    eng = Engine(model, params, slots=2, max_seq=32, num_blocks=6,
+                 eos_id=-1, overlap_transfers=overlap)
+    rngl = np.random.RandomState(3)
+    prompts = [rngl.randint(2, 100, size=n) for n in (8, 7, 6)]
+    for i, pr in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=pr, max_new=12))
+    while (eng.sched.has_work or eng.running) and eng.steps < 400:
+        eng.step()
+        eng.check_consistency()
+    eng.sync_transfers()
+    toks = {r.rid: list(r.generated) for r in eng.done}
+    st = eng.store.stats
+    return eng, toks, (st.swap_outs, st.swap_ins,
+                       st.swap_out_bytes, st.swap_in_bytes)
+
+
+def test_overlapped_schedule_token_and_byte_identical(setup):
+    """Growth-pressure preemptions under double-buffering: same tokens,
+    same swap traffic as the synchronous drain() schedule -- and at
+    least one host copy genuinely overlapped a decode step."""
+    cfg, model, params = setup
+    eng_async, toks_async, bytes_async = _drive_overlap_workload(
+        model, params, overlap=True)
+    eng_sync, toks_sync, bytes_sync = _drive_overlap_workload(
+        model, params, overlap=False)
+    assert len(toks_async) == 3
+    assert toks_async == toks_sync
+    assert bytes_async == bytes_sync
+    assert eng_async.preemptions > 0            # pressure actually fired
+    # the double-buffer win: a swap-out host copy fenced at step N+1
+    assert eng_async.transfers.stats.overlapped >= 1
+    assert eng_sync.transfers.stats.overlapped == 0
+    assert_engine_quiescent(eng_async)
+    assert_engine_quiescent(eng_sync)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-on-arena: a restarted engine resumes a preempted sequence
+# ---------------------------------------------------------------------------
+def test_restart_resumes_decoding(setup, rng, tmp_path):
+    cfg, model, params = setup
+    eng = Engine(model, params, slots=2, max_seq=64, num_blocks=24,
+                 eos_id=-1)
+    pr = rng.randint(2, 100, size=9)
+    eng.submit(Request(rid=0, prompt=pr, max_new=8))
+    for _ in range(4):
+        eng.step()
+    eng.preempt_latest()
+    old = eng.sched.preempted.peek()
+    assert old.rid == 0 and len(old.generated) > 0
+    path = str(tmp_path / "arena.npz")
+    eng.arena.snapshot(path)        # drains the in-transit swap payload
+
+    # "restart": fresh process state -- new engine, new arena; the
+    # serving layer re-creates the Request from its own durable queue
+    eng2 = Engine(model, params, slots=2, max_seq=64, num_blocks=24,
+                  eos_id=-1)
+    restored = eng2.arena.restore(path)
+    assert ("kv", 0) in restored
+    req = Request(rid=0, prompt=pr, max_new=8,
+                  generated=list(old.generated),
+                  pending_tok=old.pending_tok)
+    eng2.restore_preempted(req)
+    done = eng2.run(max_steps=200)
+    assert len(done) == 1
+    ref = greedy_reference(model, params, pr, 8)
+    assert done[0].generated == ref
+    assert done[0].generated[: len(old.generated)] == list(old.generated)
+    assert_engine_quiescent(eng2)
 
 
 # ---------------------------------------------------------------------------

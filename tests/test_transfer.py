@@ -1,0 +1,458 @@
+"""The asynchronous transfer plane (repro.mem.transfer).
+
+Four layers of pins:
+
+  * the grep-enforced API rule: NOTHING outside ``mem/transfer.py``
+    (and the kernel definitions themselves) calls the block-copy
+    kernels or the host tier's payload verbs -- every movement rides
+    the Arena's ``TransferQueue``;
+  * unit semantics: fences/epochs, eager (synchronous-fallback) mode,
+    multi-plan coalescing with dependency breaks, metadata-only arenas,
+    allocator holds on unfenced DMA sources;
+  * the ORDERING property: any interleaving of enqueued plans, fences
+    and (barriered) device writes yields block contents identical to
+    the fully synchronous ``drain()`` schedule;
+  * the read barrier: an unfenced read of an ``in_flight`` lease raises
+    ``UnfencedReadError``.
+
+Plus the checkpoint-on-arena roundtrip (``snapshot``/``restore``).
+"""
+
+import dataclasses
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.mem import (Arena, IN_FLIGHT, OutOfBlocksError,
+                       UnfencedReadError)
+from _hypothesis_compat import given, settings, strategies as st
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# the API rule, grep-enforced
+# ---------------------------------------------------------------------------
+def test_no_direct_transfer_calls_outside_transfer_plane():
+    """Zero direct block-copy-kernel / host-transfer calls outside
+    mem/transfer.py: all four movement producers (migrate, swap, COW
+    copy, compact) route through the TransferQueue."""
+    kernel_call = re.compile(
+        r"\b(?:gather_blocks|scatter_blocks|copy_pool_blocks|block_copy)"
+        r"\s*\(")
+    host_verb = re.compile(r"\bhost_(?:deposit|take)\s*\(")
+    kernels_dir = REPO / "src" / "repro" / "kernels"
+    mem_dir = REPO / "src" / "repro" / "mem"
+    offenders = []
+    for root in ("src/repro", "benchmarks", "examples"):
+        for path in sorted((REPO / root).rglob("*.py")):
+            if kernels_dir in path.parents:
+                continue                      # kernel definitions/wrappers
+            in_mem = mem_dir in path.parents
+            if in_mem and path.name == "transfer.py":
+                continue                      # the one permitted executor
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if kernel_call.search(line):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{i}: {line.strip()}")
+                # the host tier's own module may manage its payload dict;
+                # everything outside repro.mem must go through plans
+                if not in_mem and host_verb.search(line):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "direct transfer calls outside the transfer plane (enqueue a "
+        "TransferPlan on Arena.transfers instead):\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# harness: an arena with a registered executor over real device streams
+# ---------------------------------------------------------------------------
+CLS = "kv"
+
+
+def make_executor_arena(n=12, layers=1, blk=2, streams=1):
+    a = Arena()
+    a.register_class(CLS, num_blocks=n,
+                     block_nbytes=layers * blk * 4 * streams)
+    cell = {"streams": [jnp.zeros((layers, n, blk), jnp.float32)
+                        for _ in range(streams)]}
+    a.transfers.register_executor(
+        CLS, lambda: list(cell["streams"]),
+        lambda s: cell.update(streams=list(s)))
+    return a, cell
+
+
+def write_blocks(a, cell, mapping, value):
+    """A device write through the engine's schedule: dispatch first
+    (settles everything the write could race: pending d2d copies into
+    or out of these blocks), then write."""
+    a.transfers.dispatch()
+    mapping.assert_settled()
+    ids = jnp.asarray(mapping.block_ids(), jnp.int32)
+    cell["streams"] = [s.at[:, ids].set(value) for s in cell["streams"]]
+
+
+def contents(cell, ids):
+    return [np.asarray(s)[:, np.asarray(ids, np.int32)]
+            for s in cell["streams"]]
+
+
+# ---------------------------------------------------------------------------
+# fences / eager mode / holds
+# ---------------------------------------------------------------------------
+def test_fence_epochs_and_drain():
+    a, cell = make_executor_arena()
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 7.0)
+    m.migrate("host")
+    f = a.transfers.fence()
+    assert not f.done and a.transfers.pending == 1
+    assert not a.host_contains(CLS, 0)        # payload still in flight
+    f.wait()
+    assert f.done and a.transfers.pending == 0
+    assert a.host_contains(CLS, 0)            # deposited at the fence
+    m.free()
+    a.assert_quiescent()
+
+
+def test_eager_mode_is_synchronous():
+    a, cell = make_executor_arena()
+    a.transfers.eager = True
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 3.0)
+    m.migrate("host")
+    assert a.transfers.pending == 0           # drained inside enqueue
+    assert a.host_contains(CLS, 0)
+    m.migrate("device")
+    assert a.transfers.pending == 0
+    np.testing.assert_array_equal(contents(cell, m.block_ids())[0],
+                                  np.full((1, 2, 2), 3.0, np.float32))
+    m.free()
+    a.assert_quiescent()
+
+
+def test_swap_out_holds_sources_until_dispatch():
+    """Vacated d2h sources are unallocatable until the gather launches;
+    an allocation that needs them DISPATCHES the plane (non-blocking
+    hold release -- the host copy stays overlapped, never a forced
+    synchronous drain on the pressure path)."""
+    a, cell = make_executor_arena(n=4)
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(3)
+    write_blocks(a, cell, m, 5.0)
+    old = m.migrate("host")
+    alloc = a.allocator(CLS)
+    assert alloc.num_held == 3 and a.num_free(CLS) == 1
+    assert alloc.num_used + alloc.num_free + alloc.num_held == 4
+    # needs 3 blocks; only 1 unheld -> the arena dispatches the plane
+    m2 = a.mapping(CLS, owner=1)
+    m2.ensure_capacity(3)
+    assert alloc.num_held == 0
+    # the gather launched (ids reusable) but the host copy is still in
+    # transit: allocation pressure does not force the synchronous path
+    assert not a.host_contains(CLS, 0)
+    assert 0 in a.transfers.in_transit(CLS)
+    a.transfers.drain()
+    assert a.host_contains(CLS, 0)
+    np.testing.assert_array_equal(
+        a._host_payload[(CLS, 0)][0][0],
+        np.full((1, 3, 2), 5.0, np.float32)[:, :len(old)])
+    m2.free()
+    m.free()
+    a.assert_quiescent()
+
+
+def test_metadata_only_arena_completes_plans_inline():
+    """No executor registered: plans complete immediately as
+    residency-only moves (pure-policy arenas keep working)."""
+    a = Arena()
+    a.register_class("meta", num_blocks=4, block_nbytes=8)
+    m = a.mapping("meta", owner=0)
+    m.ensure_capacity(2)
+    m.migrate("host")
+    assert a.transfers.pending == 0
+    assert a.transfers.stats.enqueued["d2h"] == 1
+    assert a.transfers.stats.completed["d2h"] == 1
+    m.migrate("device")
+    assert a.transfers.pending == 0
+    m.free()
+    a.assert_quiescent()
+
+
+# ---------------------------------------------------------------------------
+# coalescing: the batched multi-plan launch, and its dependency break
+# ---------------------------------------------------------------------------
+def test_coalesced_copies_respect_dependencies():
+    a, cell = make_executor_arena(n=6)
+    cell["streams"] = [cell["streams"][0].at[:, 0].set(9.0)]
+    # chain: 0 -> 1, then 1 -> 2 (reads the first copy's destination)
+    a.transfers.enqueue_copy(CLS, [0], [1])
+    a.transfers.enqueue_copy(CLS, [1], [2])
+    # independent pair: may share the chain tail's launch
+    a.transfers.enqueue_copy(CLS, [0], [3])
+    a.transfers.drain()
+    got = np.asarray(cell["streams"][0])
+    for b in (1, 2, 3):
+        np.testing.assert_array_equal(got[:, b],
+                                      np.full((1, 2), 9.0, np.float32))
+    st_ = a.transfers.stats
+    assert st_.coalesced == 1                  # [1->2, 0->3] shared a launch
+    assert st_.completed["d2d"] == 3
+
+
+def test_multi_plan_gather_single_launch():
+    """Two swap-outs enqueued back-to-back ride ONE device gather."""
+    a, cell = make_executor_arena(n=8)
+    m1 = a.mapping(CLS, owner=1)
+    m1.ensure_capacity(2)
+    write_blocks(a, cell, m1, 1.0)
+    m2 = a.mapping(CLS, owner=2)
+    m2.ensure_capacity(3)
+    write_blocks(a, cell, m2, 2.0)
+    launches_before = a.transfers.stats.launches
+    m1.migrate("host")
+    m2.migrate("host")
+    a.transfers.dispatch()                     # one gather for both plans
+    gather_launches = (a.transfers.stats.launches - launches_before)
+    assert gather_launches == 1
+    assert a.transfers.stats.coalesced >= 1
+    a.transfers.complete_dispatched()
+    k1 = a._host_payload[(CLS, 1)][0][0]
+    k2 = a._host_payload[(CLS, 2)][0][0]
+    np.testing.assert_array_equal(k1, np.full((1, 2, 2), 1.0, np.float32))
+    np.testing.assert_array_equal(k2, np.full((1, 3, 2), 2.0, np.float32))
+    m1.free()
+    m2.free()
+    a.assert_quiescent()
+
+
+# ---------------------------------------------------------------------------
+# the read barrier: unfenced reads of in-flight leases raise
+# ---------------------------------------------------------------------------
+def test_unfenced_read_of_in_flight_lease_raises():
+    a, cell = make_executor_arena()
+    parent = a.mapping(CLS, owner=0)
+    parent.ensure_capacity(2)
+    write_blocks(a, cell, parent, 4.0)
+    child = parent.fork(owner=1, nblocks=2)
+    plan = child.ensure_writable(1)            # enqueues the COW copy
+    assert plan is not None
+    lease = child.leases[1]
+    assert lease.in_flight and lease.kind == IN_FLIGHT
+    with pytest.raises(UnfencedReadError):
+        child.assert_settled()                 # the copy has not landed
+    parent.assert_settled()                    # parent is untouched
+    a.transfers.dispatch()                     # the engine's read barrier
+    assert not lease.in_flight
+    child.assert_settled()
+    np.testing.assert_array_equal(contents(cell, [lease.block])[0],
+                                  np.full((1, 1, 2), 4.0, np.float32))
+    child.free()
+    parent.free()
+    a.assert_quiescent()
+
+
+def test_free_while_swap_in_pending_does_not_clobber_next_tenant():
+    """Regression: freeing a device mapping whose swap-in scatter is
+    still pending must settle the plan first -- otherwise the ids
+    return to the free list, a new tenant writes them, and the stale
+    scatter clobbers the new data at the next dispatch."""
+    a, cell = make_executor_arena(n=4)
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 7.0)
+    m.migrate("host")
+    m.migrate("device")                        # h2d scatter pending
+    m.free()                                   # cancel mid-resume
+    a.assert_quiescent()
+    m2 = a.mapping(CLS, owner=1)
+    m2.ensure_capacity(2)                      # reuses the vacated ids
+    ids = jnp.asarray(m2.block_ids(), jnp.int32)
+    cell["streams"] = [s.at[:, ids].set(3.0) for s in cell["streams"]]
+    a.transfers.drain()                        # must NOT replay 7.0 here
+    np.testing.assert_array_equal(contents(cell, m2.block_ids())[0],
+                                  np.full((1, 2, 2), 3.0, np.float32))
+    m2.free()
+    a.assert_quiescent()
+
+
+def test_quiescence_requires_fenced_plane():
+    a, cell = make_executor_arena()
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(1)
+    m.migrate("host")
+    with pytest.raises(AssertionError):
+        a.assert_quiescent()                   # unfenced d2h plan
+    a.transfers.drain()
+    m.free()
+    a.assert_quiescent()
+
+
+# ---------------------------------------------------------------------------
+# ORDERING property: any interleaving == the synchronous drain() schedule
+# ---------------------------------------------------------------------------
+GROW, PREEMPT, RESUME, COW, FENCE = range(5)
+
+
+def _avail(a):
+    return a.num_free(CLS) + a.allocator(CLS).num_held
+
+
+def _run_schedule(ops, eager):
+    a, cell = make_executor_arena(n=10)
+    a.transfers.eager = eager
+    maps = []
+    next_owner = [0]
+    fill = [1.0]
+
+    def new_owner():
+        next_owner[0] += 1
+        return next_owner[0]
+
+    for code, arg in ops:
+        live = [m for m in maps if not m.freed]
+        device = [m for m in live if m.placement == "device"]
+        host = [m for m in live if m.placement == "host"]
+        if code == GROW and _avail(a) >= 2:
+            m = a.mapping(CLS, owner=new_owner())
+            m.ensure_capacity(1 + arg % 2)
+            maps.append(m)
+            write_blocks(a, cell, m, fill[0])
+            fill[0] += 1
+        elif code == PREEMPT and device:
+            device[arg % len(device)].migrate("host")
+        elif code == RESUME and host:
+            target = host[arg % len(host)]
+            if _avail(a) >= len(target):
+                target.migrate("device")
+        elif code == COW and device and _avail(a) >= 1:
+            parent = device[arg % len(device)]
+            child = parent.fork(owner=new_owner(), nblocks=1)
+            maps.append(child)
+            child.ensure_writable(0)
+            write_blocks(a, cell, child, fill[0])
+            fill[0] += 1
+        elif code == FENCE:
+            a.transfers.drain()
+    a.transfers.drain()
+    state = {}
+    for m in maps:
+        if m.freed:
+            continue
+        if m.placement == "device":
+            state[m.owner] = ("device", contents(cell, m.block_ids()))
+        else:
+            payload, nbytes = a._host_payload[(CLS, m.owner)]
+            state[m.owner] = ("host", [np.asarray(p) for p in payload],
+                              nbytes)
+    return state
+
+
+@settings(max_examples=20)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 7)),
+                min_size=0, max_size=24))
+def test_any_interleaving_matches_synchronous_drain(ops):
+    """Block contents and host payloads after an arbitrary mix of
+    grows, preemptions, resumes, COW barriers, device writes and fences
+    are identical between the overlapped schedule and the eager
+    (drain-per-enqueue) schedule."""
+    deferred = _run_schedule(ops, eager=False)
+    eager = _run_schedule(ops, eager=True)
+    assert deferred.keys() == eager.keys()
+    for owner in deferred:
+        d, e = deferred[owner], eager[owner]
+        assert d[0] == e[0], (owner, d[0], e[0])
+        for da, ea in zip(d[1], e[1]):
+            np.testing.assert_array_equal(da, ea)
+        if d[0] == "host":
+            assert d[2] == e[2]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-on-arena: snapshot/restore of host tier + mappings
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_roundtrip(tmp_path):
+    a, cell = make_executor_arena(n=8)
+    m = a.mapping(CLS, owner=5)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 6.0)
+    m.migrate("host")
+    dev = a.mapping(CLS, owner="live")
+    dev.ensure_capacity(1)
+    path = str(tmp_path / "arena.npz")
+    a.snapshot(path)                           # drains in-flight payloads
+
+    b = Arena()
+    restored = b.restore(path)
+    assert (CLS, 5) in restored
+    mm = restored[(CLS, 5)]
+    assert mm.placement == "host" and len(mm) == 2
+    assert b.host_counts(CLS) == {5: 2}
+    # device-resident mappings do NOT survive a restart by design
+    assert b.find_mapping(CLS, "live") is None
+    # payload bytes roundtrip exactly (uint8 view through the npz)
+    pa, na = a._host_payload[(CLS, 5)]
+    pb, nb = b._host_payload[(CLS, 5)]
+    assert na == nb
+    for x, y in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and the restored mapping re-materializes through a new executor
+    cell2 = {"streams": [jnp.zeros((1, 8, 2), jnp.float32)]}
+    b.transfers.register_executor(
+        CLS, lambda: list(cell2["streams"]),
+        lambda s: cell2.update(streams=list(s)))
+    new_ids = mm.migrate("device")
+    b.transfers.drain()
+    np.testing.assert_array_equal(
+        np.asarray(cell2["streams"][0])[:, np.asarray(new_ids)],
+        np.full((1, 2, 2), 6.0, np.float32))
+    mm.free()
+    b.assert_quiescent()
+
+
+def test_restore_rejects_spec_mismatch(tmp_path):
+    a, _ = make_executor_arena(n=8)
+    path = str(tmp_path / "arena.npz")
+    a.snapshot(path)
+    b = Arena()
+    b.register_class(CLS, num_blocks=16, block_nbytes=8)   # different spec
+    with pytest.raises(ValueError):
+        b.restore(path)
+
+
+# ---------------------------------------------------------------------------
+# per-dp-group accounting (ArenaStats measurement surface)
+# ---------------------------------------------------------------------------
+def test_per_dp_group_block_accounting():
+    a = Arena()
+    a.register_class("kvg", num_blocks=8, block_nbytes=16, dp_groups=2)
+    m = a.mapping("kvg", owner=0)
+    m.ensure_capacity(3)                       # ids 0,1,2 -> group 0
+    st_ = a.stats()["kvg"]
+    assert st_.groups == [{"group": 0, "used": 3, "free": 1},
+                          {"group": 1, "used": 0, "free": 4}]
+    # re-registration with a different grouping is loud
+    with pytest.raises(ValueError):
+        a.register_class("kvg", num_blocks=8, block_nbytes=16, dp_groups=4)
+    m.free()
+    a.assert_quiescent()
+
+
+def test_report_renders_groups_and_transfers():
+    from repro.report import fmt_arena_table, fmt_transfer_table
+    a = Arena()
+    a.register_class("kvg", num_blocks=8, block_nbytes=16, dp_groups=2)
+    m = a.mapping("kvg", owner=0)
+    m.ensure_capacity(2)
+    d = a.stats().to_dict()
+    table = fmt_arena_table(d)
+    assert "g0 2/2" in table and "g1 0/4" in table
+    tr = fmt_transfer_table(d["transfers"])
+    assert "d2h" in tr and "coalesced" in tr
+    m.free()
