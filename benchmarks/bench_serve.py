@@ -11,18 +11,29 @@ writes ``BENCH_serve.json``:
   * swap_bytes_per_block / blocks_swapped -- proportionality evidence:
     per-block swap cost must equal config.swap_nbytes_per_block()
   * prefix_share_hit_rate -- forked admissions / total requests
+  * prefetch_hit_rate   -- resumes served from a COMPLETED speculative
+    swap-in / total swap-ins (the multi-queue plane's background h2d
+    lane); ``--smoke`` additionally runs ``prefetch_probe`` -- a
+    scripted forced-preemption workload shaped so the LIFO victim's
+    resume stays blocked on its worst-case footprint while its current
+    blocks fit -- and CI gates ``prefetch_hits > 0`` on it
   * cow_copies, preemptions, compactions, pool_utilization_final
   * arena                -- the unified address space's ``ArenaStats``
     snapshot (blocks by owner/placement per pool class, refcount
     histogram, fragmentation, table locality)
   * transfers           -- the transfer plane's ``TransferStats``
-    (plans/bytes per direction, coalesced launches, overlapped host
-    copies); also written standalone to ``BENCH_transfers.json``
+    (plans/bytes/queue depth/overlap per ENGINE, coalesced and
+    reorder-window launches, prefetch-lane counters); also written
+    standalone to ``BENCH_transfers.json`` together with the
+    per-engine queue depths and both modes' throughput
 
 ``--smoke`` additionally re-runs the identical workload with
-``overlap_transfers=False`` (the synchronous ``drain()`` fallback) and
-asserts swap bytes/step is BYTE-IDENTICAL between the two schedules --
-the transfer plane may only reschedule traffic, never change it.
+``overlap_transfers=False`` -- the single-queue synchronous ``drain()``
+fallback (one serialized schedule, prefetch off) -- and asserts the
+multi-queue+prefetch schedule is step-, token- and demand-swap-byte-
+IDENTICAL to it: the per-engine queues and the speculation may only
+reschedule traffic, never change a decision (speculative blocks are
+credited as free at admission and cancelled first under pressure).
 
 ``--baseline PATH`` compares tokens/s against a committed report and
 exits non-zero on a regression beyond ``--regress-frac`` (CI gate).
@@ -84,6 +95,52 @@ def drive(cfg, eng, args):
             forced = True
     eng.sync_transfers()
     return time.perf_counter() - t0
+
+
+def prefetch_probe(args):
+    """Scripted forced-preemption workload whose LIFO resume is served
+    from a COMPLETED speculative prefetch (the CI hit-rate gate).
+
+    Shape: two long growers fill two slots, a short filler's completion
+    admits a YOUNG victim mid-flight, and the forced eviction at step
+    34 lands in the window where the victim's worst-case footprint is
+    blocked (free - wc < watermark) while its current blocks fit
+    (free - cur >= watermark) -- so the background h2d scatter runs and
+    completes during the multi-step wait, and the eventual resume
+    commits it (see serve/README.md's step-loop timeline).  Everything
+    is deterministic: greedy decode, fixed lengths, eos never fires.
+    """
+    import argparse as _ap
+    from repro.serve.engine import Engine, Request
+
+    pargs = _ap.Namespace(**{**vars(args), "slots": 3, "max_seq": 64,
+                             "num_blocks": 20, "watermark": 2})
+    cfg, eng = build(pargs)
+    rng = np.random.RandomState(args.seed)
+    for rid, (plen, max_new) in enumerate(
+            ((8, 48), (8, 48), (8, 8), (8, 40))):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.randint(2, cfg.vocab_size, size=plen),
+                           max_new=max_new))
+    forced = False
+    while (eng.sched.has_work or eng.running) and eng.steps < 400:
+        eng.step()
+        if eng.steps == 34 and eng.running and not forced:
+            eng.preempt_latest()
+            forced = True
+    eng.sync_transfers()
+    st = eng.stats
+    return {
+        "completed": len(eng.done),
+        "steps": eng.steps,
+        "preemptions": st["preemptions"],
+        "prefetches": st["prefetches"],
+        "prefetch_hits": st["prefetch_hits"],
+        "prefetch_cancels": st["prefetch_cancels"],
+        "prefetch_hit_rate": round(st["prefetch_hit_rate"], 3),
+        "queue_depths": st["transfers"]["max_pending"],
+        "overlapped": st["transfers"]["overlapped"],
+    }
 
 
 def workload(cfg, eng, args):
@@ -166,6 +223,10 @@ def main(argv=None):
         "prefix_hits": st["prefix_hits"],
         "prefix_share_hit_rate": round(
             st["prefix_hits"] / max(args.requests, 1), 3),
+        "prefetches": st["prefetches"],
+        "prefetch_hits": st["prefetch_hits"],
+        "prefetch_cancels": st["prefetch_cancels"],
+        "prefetch_hit_rate": round(st["prefetch_hit_rate"], 3),
         "cow_copies": st["cow_copies"],
         "compactions": st["compactions"],
         "blocks_compacted": st["blocks_compacted"],
@@ -179,16 +240,28 @@ def main(argv=None):
                    and st["swap_out_bytes"]
                    == blocks_swapped * per_block),
     }
+    transfers_doc = {
+        **report["transfers"],
+        # per-engine queue-depth high-water marks (the multi-queue
+        # refactor's headline observability) and the prefetch outcome
+        "queue_depths": report["transfers"]["max_pending"],
+        "prefetch_hit_rate": report["prefetch_hit_rate"],
+        "prefetch_hits": report["prefetch_hits"],
+        "modes": {"multiqueue+prefetch": report["tokens_per_s"]},
+    }
     if args.smoke:
-        # the transfer plane may only RESCHEDULE traffic, never change
-        # it: the drain() fallback must move byte-identical swap volume
-        # per step and decode identical tokens
+        # the per-engine queues + speculation may only RESCHEDULE
+        # traffic, never change a decision: the single-queue drain()
+        # fallback must take the same number of steps, move
+        # byte-identical demand swap volume and decode identical tokens
         cfg2, eng2 = build(args, overlap=False)
-        drive(cfg2, eng2, args)
+        dt2 = drive(cfg2, eng2, args)
         st2 = eng2.stats
         report["sync_swap_bytes_per_step"] = round(
             (st2["swap_out_bytes"] + st2["swap_in_bytes"])
             / max(eng2.steps, 1), 1)
+        transfers_doc["modes"]["single-queue-drain"] = round(
+            st2["decode_tokens"] / max(dt2, 1e-9), 2)
         report["overlap_equivalent"] = (
             st2["swap_out_bytes"] == st["swap_out_bytes"]
             and st2["swap_in_bytes"] == st["swap_in_bytes"]
@@ -197,15 +270,26 @@ def main(argv=None):
                 eng2.done, key=lambda r: r.rid)]
             == [list(r.generated) for r in sorted(
                 eng.done, key=lambda r: r.rid)])
-        report["all_ok"] = report["all_ok"] and report["overlap_equivalent"]
+        # CI gate: the scripted forced-preemption probe must serve at
+        # least one LIFO resume from a COMPLETED speculative prefetch
+        probe = prefetch_probe(args)
+        report["prefetch_probe"] = probe
+        transfers_doc["prefetch_probe"] = probe
+        transfers_doc["prefetch_hit_rate"] = probe["prefetch_hit_rate"]
+        report["all_ok"] = (report["all_ok"]
+                            and report["overlap_equivalent"]
+                            and probe["completed"] == 4
+                            and probe["prefetch_hits"] > 0)
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)
     with open(OUT_TRANSFERS, "w") as f:
-        json.dump(report["transfers"], f, indent=2)
+        json.dump(transfers_doc, f, indent=2)
+    probe_hits = report.get("prefetch_probe", {}).get("prefetch_hits", "-")
     print(f"bench_serve,{dt * 1e6:.0f},tok_s={report['tokens_per_s']},"
           f"hit_rate={report['prefix_share_hit_rate']},"
           f"swapB_step={report['swap_bytes_per_step']},"
           f"overlapped={report['transfers']['overlapped']},"
+          f"probe_prefetch_hits={probe_hits},"
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)

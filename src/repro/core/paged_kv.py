@@ -402,6 +402,42 @@ class PagedKVManager:
         """
         return self._maps[seq_id].migrate("device")
 
+    # -- speculative swap-in (prefetch) ---------------------------------
+    def prefetch(self, seq_id: int) -> List[int]:
+        """Speculatively swap a preempted sequence back in on the
+        BACKGROUND h2d lane: fresh blocks are allocated and the scatter
+        enqueued, but host residency and payload stay intact until
+        ``commit_prefetch`` -- so the speculation costs nothing to
+        cancel (``Mapping.prefetch``)."""
+        return self._maps[seq_id].prefetch()
+
+    def is_prefetched(self, seq_id: int) -> bool:
+        m = self._maps.get(seq_id)
+        return m is not None and m.prefetched
+
+    def prefetched_ids(self) -> List[int]:
+        """Sequences with an uncommitted speculative swap-in (the
+        pressure path's cheapest reclaim victims)."""
+        return [sid for sid, m in self._maps.items() if m.prefetched]
+
+    def commit_prefetch(self, seq_id: int) -> Tuple[List[int], bool]:
+        """Promote the speculation to the real resume; returns
+        ``(new_ids, served_from_completed_prefetch)``."""
+        return self._maps[seq_id].commit_prefetch()
+
+    def cancel_prefetch(self, seq_id: int) -> None:
+        """Withdraw the speculation (candidate evicted/freed or memory
+        tightened): blocks release, host state stays resumable."""
+        self._maps[seq_id].cancel_prefetch()
+
+    @property
+    def speculative_blocks(self) -> int:
+        """Device blocks held by uncommitted prefetches.  Admission
+        counts these as FREE (they cancel instantly under pressure), so
+        scheduling decisions are identical with and without
+        speculation."""
+        return sum(m.spec_blocks for m in self._maps.values())
+
     def device_table(self, seq_id: int) -> np.ndarray:
         return self._maps[seq_id].packed_table(self.config.max_blocks_per_seq)
 

@@ -93,7 +93,9 @@ def main(argv=None):
     tr = st["transfers"]
     print(f"transfer plane: {tr['enqueued']} plans, "
           f"{tr['launches']} launches ({tr['coalesced']} coalesced), "
-          f"{tr['overlapped']} host copies overlapped decode, "
+          f"{tr['overlapped']['d2h']} host copies + "
+          f"{tr['overlapped']['h2d']} prefetch scatters overlapped decode "
+          f"({st['prefetch_hits']} resumes served from prefetch), "
           f"effective watermark {st['watermark_effective']}")
     return done
 

@@ -5,8 +5,10 @@ handles instead of raw ints, ``Mapping`` page tables with
 ``fork``/``ensure_writable``/``migrate`` as the only mutation verbs, a
 host swap tier as a first-class placement level, pressure-time reclaim
 (LIFO preemption) as arena policy, ``compact()`` as the defrag pass,
-and the asynchronous transfer plane (``TransferQueue``/``Fence``) behind
-every block copy, swap and migration.
+and the multi-queue transfer plane (a ``TransferEngine`` per direction
+with urgent/background lanes behind a ``QueueSet`` front-end,
+cross-queue ``Fence`` epoch vectors, speculative swap-in prefetch)
+behind every block copy, swap and migration.
 """
 
 from repro.mem.arena import Arena, LeaseRevokedError
@@ -15,8 +17,10 @@ from repro.mem.blockpool import (NULL_BLOCK, BlockAllocator, BlockPool,
 from repro.mem.lease import COW_SHARED, EXCLUSIVE, IN_FLIGHT, PINNED, Lease
 from repro.mem.mapping import DEVICE, FLAT, HOST, RADIX, Mapping
 from repro.mem.stats import ArenaStats, PoolClassStats
-from repro.mem.transfer import (D2D, D2H, DIRECTIONS, H2D, Fence,
-                                TransferPlan, TransferQueue, TransferStats,
+from repro.mem.transfer import (BACKGROUND, D2D, D2H, DIRECTIONS, H2D,
+                                LANES, URGENT, Fence, QueueSet,
+                                TransferEngine, TransferPlan,
+                                TransferQueue, TransferStats,
                                 UnfencedReadError)
 
 __all__ = [
@@ -25,6 +29,7 @@ __all__ = [
     "Lease", "EXCLUSIVE", "COW_SHARED", "PINNED", "IN_FLIGHT",
     "Mapping", "FLAT", "RADIX", "DEVICE", "HOST",
     "ArenaStats", "PoolClassStats",
-    "TransferQueue", "TransferPlan", "TransferStats", "Fence",
-    "UnfencedReadError", "D2D", "D2H", "H2D", "DIRECTIONS",
+    "QueueSet", "TransferEngine", "TransferQueue", "TransferPlan",
+    "TransferStats", "Fence", "UnfencedReadError",
+    "D2D", "D2H", "H2D", "DIRECTIONS", "URGENT", "BACKGROUND", "LANES",
 ]

@@ -55,7 +55,7 @@ from repro.mem.blockpool import BlockAllocator, OutOfBlocksError
 from repro.mem.lease import Lease
 from repro.mem.mapping import DEVICE, FLAT, HOST, Mapping
 from repro.mem.stats import ArenaStats, PoolClassStats
-from repro.mem.transfer import TransferQueue
+from repro.mem.transfer import QueueSet
 
 #: reclaimer signature: called with the requesting owner when a pool
 #: class is exhausted; must free blocks (e.g. preempt a victim) and
@@ -111,8 +111,9 @@ class Arena:
         self._host_counts: Dict[Tuple[str, object], int] = {}
         self._host_payload: Dict[Tuple[str, object], Tuple[object, int]] = {}
         #: the asynchronous transfer plane: every payload move (swap,
-        #: COW copy, compaction, migrate) is a plan enqueued here.
-        self.transfers = TransferQueue(self)
+        #: COW copy, compaction, migrate) is a plan enqueued here --
+        #: one TransferEngine per direction behind a QueueSet front-end.
+        self.transfers = QueueSet(self)
         self.compactions = 0
         self.blocks_compacted = 0
 
@@ -331,6 +332,14 @@ class Arena:
         payload, _ = self._host_payload.pop((cls, owner))
         return payload
 
+    def host_peek(self, cls: str, owner):
+        """Read a payload WITHOUT consuming it -- the speculative
+        swap-in path: a prefetch scatters the payload to device but the
+        host copy stays authoritative until ``commit_prefetch`` (so a
+        cancelled prefetch costs nothing to undo)."""
+        payload, _ = self._host_payload[(cls, owner)]
+        return payload
+
     def host_discard(self, cls: str, owner) -> None:
         self._host_payload.pop((cls, owner), None)
 
@@ -455,6 +464,7 @@ class Arena:
                 mappings_by_kind=dict(kinds),
                 in_flight=in_flight,
                 held=st.allocator.num_held,
+                held_by_engine=st.allocator.held_by_engine(),
                 groups=groups,
             )
         return ArenaStats(classes=classes, compactions=self.compactions,

@@ -20,7 +20,7 @@ it actually needs).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +47,10 @@ class BlockAllocator:
         self.num_blocks = int(num_blocks)
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._refcount = np.zeros(num_blocks, dtype=np.int32)
-        self._held: set = set()
+        # block -> the DMA engine (transfer direction) holding it; the
+        # per-engine discipline lets the transfer plane release one
+        # engine's holds without fencing the others
+        self._held: Dict[int, str] = {}
 
     # -- queries ---------------------------------------------------------
     @property
@@ -107,20 +110,33 @@ class BlockAllocator:
         for b in blocks:
             self.free(int(b))
 
-    # -- transfer-plane holds -------------------------------------------
-    def hold(self, block: int) -> None:
+    # -- transfer-plane holds (per-engine) ------------------------------
+    def hold(self, block: int, engine: str = "dma") -> None:
         """Remove a FREED block from the free list without allocating it.
 
         The transfer plane holds the vacated sources of an unfenced DMA
         (swap-out gather, compaction copy): the allocator let go of the
         ids, but the device still has to read them -- handing them out
         before the gather launches would let a prefill/scatter clobber
-        the payload mid-flight.  ``release_hold`` returns them.
+        the payload mid-flight.  Each hold is tagged with the DMA
+        engine (direction) that will read the block -- since holds are
+        released plan-by-plan as each per-direction queue dispatches,
+        the tags attribute every outstanding hold to the engine
+        responsible for it (``held_by_engine`` feeds ``ArenaStats``, so
+        a stalled queue's pinned blocks are visible per engine).
+        ``release_hold`` returns them.
         """
         if self._refcount[block] != 0 or block in self._held:
             raise ValueError(f"hold of non-free block {block}")
         self._free.remove(block)
-        self._held.add(block)
+        self._held[block] = engine
+
+    def retag_hold(self, block: int, engine: str) -> None:
+        """Move an existing hold to another engine (a later plan in a
+        different queue became the block's last reader)."""
+        if block not in self._held:
+            raise ValueError(f"retag_hold of unheld block {block}")
+        self._held[block] = engine
 
     def is_held(self, block: int) -> bool:
         return block in self._held
@@ -128,10 +144,22 @@ class BlockAllocator:
     def held_ids(self) -> set:
         return set(self._held)
 
+    def held_by(self, engine: str) -> set:
+        """Blocks held on behalf of one DMA engine (direction)."""
+        return {b for b, e in self._held.items() if e == engine}
+
+    def held_by_engine(self) -> Dict[str, int]:
+        """Outstanding holds per DMA engine (the ``ArenaStats``
+        attribution surface: which queue is pinning vacated blocks)."""
+        out: Dict[str, int] = {}
+        for e in self._held.values():
+            out[e] = out.get(e, 0) + 1
+        return out
+
     def release_hold(self, block: int) -> None:
         if block not in self._held:
             raise ValueError(f"release_hold of unheld block {block}")
-        self._held.remove(block)
+        del self._held[block]
         self._free.append(block)
 
     def fork_for_write(self, block: int) -> Tuple[int, bool]:

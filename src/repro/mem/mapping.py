@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.mem.blockpool import NULL_BLOCK
 from repro.mem.lease import Lease
-from repro.mem.transfer import UnfencedReadError
+from repro.mem.transfer import D2H, DONE, PENDING, URGENT, UnfencedReadError
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.mem.arena import Arena
@@ -57,7 +57,8 @@ class Mapping:
     """Ordered leases for one logical object (see module docstring)."""
 
     __slots__ = ("arena", "pool_class", "owner", "kind", "leases",
-                 "placement", "_host_blocks", "freed")
+                 "placement", "_host_blocks", "freed", "_spec",
+                 "_spec_plan")
 
     def __init__(self, arena: "Arena", pool_class: str, owner,
                  kind: str = FLAT):
@@ -71,6 +72,10 @@ class Mapping:
         self.placement = DEVICE
         self._host_blocks = 0
         self.freed = False
+        # speculative swap-in (prefetch): fresh device leases + their
+        # background h2d plan, parked until commit_prefetch/cancel
+        self._spec: List[Lease] = []
+        self._spec_plan = None
 
     # -- views -----------------------------------------------------------
     def __len__(self) -> int:
@@ -99,8 +104,11 @@ class Mapping:
         if stale:
             raise UnfencedReadError(
                 f"mapping {self.owner!r} ({self.pool_class!r}): blocks "
-                f"{stale} are targets of unfenced transfers; dispatch/"
-                f"drain the arena's TransferQueue before reading")
+                f"{stale} are targets of unfenced transfers (per-engine "
+                f"queue depths "
+                f"{self.arena.transfers.pending_by_direction()}); "
+                f"dispatch/drain the arena's transfer queues before "
+                f"reading")
 
     def locality(self) -> float:
         """Fraction of logically-adjacent block pairs that are physically
@@ -209,6 +217,10 @@ class Mapping:
         if to == DEVICE:
             if self.placement != HOST:
                 raise ValueError("already device-resident")
+            if self._spec:
+                # a speculative prefetch already reallocated and (maybe)
+                # scattered the payload: the resume just commits it
+                return self.commit_prefetch()[0]
             n = self.arena._host_unregister(self.pool_class, self.owner)
             self.leases = self.arena.lease_blocks(self.pool_class,
                                                   self.owner, n)
@@ -220,20 +232,110 @@ class Mapping:
             return self.block_ids()
         raise ValueError(f"unknown placement {to!r}")
 
+    # -- speculative swap-in (prefetch) ---------------------------------
+    @property
+    def prefetched(self) -> bool:
+        """A speculative swap-in is parked on this mapping (its blocks
+        are on device -- or in flight -- but the resume has not been
+        committed; host residency and payload are still intact)."""
+        return bool(self._spec)
+
+    @property
+    def spec_blocks(self) -> int:
+        """Device blocks held by the uncommitted prefetch (0 if none)."""
+        return len(self._spec)
+
+    def prefetch(self) -> List[int]:
+        """Speculative swap-in: allocate fresh device leases and enqueue
+        the h2d scatter on the BACKGROUND lane, while host residency and
+        the payload stay intact until ``commit_prefetch``.
+
+        This is the multi-queue plane's hedge: the serving engine
+        prefetches the scheduler's LIFO resume candidate while decode
+        runs, so a later resume skips the synchronous swap-in entirely.
+        Never allocates under pressure (speculation must not evict
+        anyone -- the caller checks headroom and the Arena reclaimer
+        cancels speculation first when memory tightens).
+        """
+        if self.placement != HOST:
+            raise ValueError("prefetch of a device-resident mapping")
+        if self._spec:
+            raise ValueError(f"{self.owner!r} already prefetched")
+        if self._host_blocks == 0:
+            raise ValueError("prefetch of an empty mapping")
+        self._spec = self.arena.lease_blocks(self.pool_class, self.owner,
+                                             self._host_blocks)
+        ids = [l.block for l in self._spec]
+        self._spec_plan = self.arena.transfers.enqueue_prefetch(
+            self.pool_class, self.owner, ids)
+        return ids
+
+    def commit_prefetch(self) -> Tuple[List[int], bool]:
+        """Promote the speculative swap-in to the real resume: the spec
+        leases become the mapping's table, host residency tears down,
+        and -- when the scatter has not executed yet -- the plan leaves
+        the background lane to run as a normal swap-in at the next
+        dispatch.  Returns ``(new_ids, was_completed)``; ``True`` means
+        the resume was served entirely from the completed prefetch (the
+        acceptance metric ``prefetch_hit``)."""
+        if not self._spec:
+            raise ValueError(f"{self.owner!r} has no prefetch to commit")
+        plan = self._spec_plan
+        completed = plan.state == DONE
+        self.leases = self._spec
+        self._spec = []
+        self._spec_plan = None
+        self._host_blocks = 0
+        self.placement = DEVICE
+        self.arena._host_unregister(self.pool_class, self.owner)
+        if completed:
+            # the scatter only PEEKED the payload; consume it now
+            self.arena.host_discard(self.pool_class, self.owner)
+        elif plan.state == PENDING:
+            plan.lane = URGENT
+            plan.speculative = False     # executes as a real swap-in
+        self.arena.transfers.note_prefetch_commit(plan)
+        return self.block_ids(), completed
+
+    def cancel_prefetch(self) -> None:
+        """Withdraw the speculation: drop the plan (if still pending),
+        release the fresh leases and leave the mapping exactly as
+        preempted -- host residency and payload intact, so a later real
+        swap-in still works.  Called when the candidate is freed, or by
+        the pressure path (speculative blocks are the FIRST thing
+        reclaimed -- cheaper than preempting a running sequence)."""
+        if not self._spec:
+            raise ValueError(f"{self.owner!r} has no prefetch to cancel")
+        plan = self._spec_plan
+        if not self.arena.transfers.cancel_plan(plan):
+            # the scatter already ran (wasted speculation): the payload
+            # was only peeked, so releasing the leases loses nothing --
+            # ledgers are re-notified to write the parked bytes off
+            self.arena.transfers.note_prefetch_abandon(plan)
+        for l in self._spec:
+            l.release()
+        self._spec = []
+        self._spec_plan = None
+
     # -- teardown --------------------------------------------------------
     def free(self) -> None:
         """Release everything this mapping holds (either placement)."""
         if self.freed:
             raise ValueError(f"double free of mapping {self.owner!r}")
+        if self._spec:
+            # cancel-while-prefetched: withdraw the speculation first so
+            # the spec leases and their pending scatter never outlive
+            # the mapping
+            self.cancel_prefetch()
         if self.placement == HOST:
             upto = self.arena.transfers.last_transit(self.pool_class,
                                                      self.owner)
             if upto is not None:
                 # cancel-while-swapping: land the in-flight payload so
                 # residency and payload tear down together -- only the
-                # FIFO prefix up to our plan; later transfers stay
-                # overlapped
-                self.arena.transfers.drain(upto=upto)
+                # d2h prefix up to our plan (plus its cross-queue
+                # dependency closure); later transfers stay overlapped
+                self.arena.transfers.drain(upto={D2H: upto})
             self.arena._host_unregister(self.pool_class, self.owner)
             self.arena.host_discard(self.pool_class, self.owner)
         else:

@@ -49,6 +49,9 @@ class PoolClassStats:
     mappings_by_kind: Dict[str, int]
     in_flight: int = 0
     held: int = 0
+    #: outstanding holds attributed to the DMA engine (direction)
+    #: responsible for them -- which queue is pinning vacated blocks
+    held_by_engine: Dict[str, int] = dataclasses.field(default_factory=dict)
     groups: List[Dict[str, int]] = dataclasses.field(default_factory=list)
 
     @property

@@ -92,25 +92,40 @@ def fmt_arena_table(arena: Dict) -> str:
 
 
 def fmt_transfer_table(tr: Dict) -> str:
-    """Render a ``TransferStats.to_dict()`` snapshot: plans and bytes
-    per direction plus the scheduling counters of the transfer plane."""
-    out = ["| direction | enqueued | completed | bytes moved |",
-           "|---|---|---|---|"]
+    """Render a ``TransferStats.to_dict()`` snapshot: one row per DMA
+    ENGINE (plans, bytes, per-engine queue depth and overlap) plus the
+    scheduling counters of the multi-queue plane."""
+    out = ["| engine | enqueued | completed | bytes moved | "
+           "max depth | overlapped |",
+           "|---|---|---|---|---|---|"]
     names = {"d2d": "d2d (COW / compaction)",
              "d2h": "d2h (swap-out)",
-             "h2d": "h2d (swap-in)"}
+             "h2d": "h2d (swap-in / prefetch)"}
+
+    def per_engine(field, d):
+        v = tr.get(field, 0)
+        # pre-multi-queue snapshots carried a single global counter
+        return v.get(d, 0) if isinstance(v, dict) else v
+
     for d in ("d2d", "d2h", "h2d"):
         out.append(f"| {names[d]} | {tr['enqueued'].get(d, 0)} | "
                    f"{tr['completed'].get(d, 0)} | "
-                   f"{tr['bytes_moved'].get(d, 0)} |")
+                   f"{tr['bytes_moved'].get(d, 0)} | "
+                   f"{per_engine('max_pending', d)} | "
+                   f"{per_engine('overlapped', d)} |")
     out.append("")
     out.append(
         f"launches: {tr.get('launches', 0)} "
-        f"(coalesced plans: {tr.get('coalesced', 0)}) · "
+        f"(coalesced plans: {tr.get('coalesced', 0)}, "
+        f"reordered past a blocked plan: {tr.get('reordered', 0)}) · "
         f"dispatches: {tr.get('dispatches', 0)} · "
-        f"drains: {tr.get('drains', 0)} · "
-        f"overlapped host copies: {tr.get('overlapped', 0)} · "
-        f"max queue depth: {tr.get('max_pending', 0)}")
+        f"drains: {tr.get('drains', 0)}")
+    if tr.get("prefetch_enqueued"):
+        out.append(
+            f"prefetch lane: {tr['prefetch_enqueued']} speculative "
+            f"swap-ins ({tr.get('prefetch_completed', 0)} completed, "
+            f"{tr.get('prefetch_committed', 0)} committed, "
+            f"{tr.get('prefetch_cancelled', 0)} cancelled)")
     return "\n".join(out)
 
 

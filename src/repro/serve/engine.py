@@ -18,12 +18,18 @@ The serving stack is three layers over one address space
   * this module -- MECHANISM: one decode step for a fixed slot count B
     (padding empty slots, how a TPU serving binary keeps one compiled
     shape), ONE padded batched prefill for all of a step's admissions,
-    COW prefix sharing, and the SCHEDULE of the transfer plane: the
-    step loop fences step N-1's host copies, produces this step's
-    plans (compaction, swap-in, growth preemptions, COW), dispatches
-    the queue, then decodes -- so swap-out host copies overlap the
-    decode (dispatch at N, fence at N+1).  ``overlap_transfers=False``
-    selects the synchronous ``drain()`` fallback, which is
+    COW prefix sharing, and the SCHEDULE of the per-engine transfer
+    queues: the step loop fences step N-1's d2h host copies, produces
+    this step's plans (compaction, swap-in, growth preemptions, COW),
+    dispatches every engine's URGENT lane, then speculatively
+    prefetches the scheduler's LIFO resume candidate on the BACKGROUND
+    h2d lane, then decodes -- so swap-out host copies AND the prefetch
+    scatter overlap the decode (dispatch at N, fence at N+1).  A
+    prefetched resume commits bookkeeping instead of swapping in
+    synchronously; pressure cancels speculation before preempting
+    anyone, which keeps every scheduling decision identical to the
+    non-speculative schedule.  ``overlap_transfers=False`` selects the
+    synchronous ``drain()`` fallback (prefetch off), which is
     token-identical and byte-identical by construction (pinned in
     tests and ``bench_serve --smoke``).
 
@@ -41,17 +47,41 @@ software over a paged pool.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paged_kv import PagedKVCache, PagedKVManager
-from repro.mem import NULL_BLOCK, Arena, LeaseRevokedError
+from repro.mem import BACKGROUND, NULL_BLOCK, URGENT, Arena, \
+    LeaseRevokedError
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.swap import HostBlockStore
 
 __all__ = ["Engine", "Request"]
+
+
+class _SpecCreditView:
+    """Admission view crediting speculative (prefetch) blocks as free.
+
+    Uncommitted prefetches cancel instantly under pressure (no byte
+    moves -- the host payload is still authoritative), so the scheduler
+    must see them as grantable headroom: admission decisions are then
+    IDENTICAL with and without speculation, which is what keeps the
+    multi-queue+prefetch schedule token- and step-identical to the
+    ``drain()`` fallback.
+    """
+
+    def __init__(self, mgr: PagedKVManager):
+        self._mgr = mgr
+
+    @property
+    def free_blocks(self) -> int:
+        return self._mgr.free_blocks + self._mgr.speculative_blocks
+
+    def blocks_needed(self, tokens: int) -> int:
+        return self._mgr.blocks_needed(tokens)
 
 
 class Engine:
@@ -74,13 +104,14 @@ class Engine:
     def __init__(self, model, params, *, slots: int, max_seq: int,
                  num_blocks: int, eos_id: int = 1,
                  watermark: Optional[int] = None,
-                 prefill_budget: Optional[int] = None,
+                 prefill_budget=None,
                  share_prefixes: bool = True,
                  arena: Optional[Arena] = None, dp_groups: int = 1,
                  auto_compact: bool = True,
                  compact_free_frac: float = 0.5,
                  compact_frag_threshold: float = 0.5,
-                 overlap_transfers: bool = True):
+                 overlap_transfers: bool = True,
+                 prefetch: bool = True):
         self.model = model
         self.params = params
         self.slots = slots
@@ -122,6 +153,12 @@ class Engine:
         self.auto_compact = auto_compact
         self.compact_free_frac = compact_free_frac
         self.compact_frag_threshold = compact_frag_threshold
+        # speculative swap-in of the scheduler's LIFO resume candidate:
+        # enqueued on the background h2d lane while decode runs, so the
+        # real resume skips the synchronous swap-in.  Only meaningful
+        # on the overlapped schedule -- the eager fallback would
+        # serialize the speculation anyway.
+        self.prefetch_enabled = prefetch and overlap_transfers
         self.running: Dict[int, Request] = {}   # slot -> req
         self.done: List[Request] = []
         self.share_prefixes = share_prefixes
@@ -134,6 +171,9 @@ class Engine:
         self.preemptions = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.prefetches = 0        # speculative swap-ins launched
+        self.prefetch_hits = 0     # resumes served from a COMPLETED prefetch
+        self.prefetch_cancels = 0  # speculations withdrawn (pressure/free)
 
     @property
     def sink(self) -> int:
@@ -244,14 +284,27 @@ class Engine:
 
     def _admit(self) -> None:
         free = self._free_slots()
-        plan = self.sched.plan_admissions(len(free), self.mgr,
+        plan = self.sched.plan_admissions(len(free),
+                                          _SpecCreditView(self.mgr),
                                           num_running=len(self.running))
         for req in plan.resume:
             slot = free.pop(0)
-            # migrate("device") reallocates AND enqueues the h2d scatter
-            # plan; the payload lands when the step loop dispatches the
-            # queue (before any decode read)
-            self.mgr.swap_in(req.rid)
+            if self.mgr.is_prefetched(req.rid):
+                # the background h2d lane already reallocated (and maybe
+                # scattered) this candidate: committing skips the
+                # synchronous swap-in entirely.  A completed prefetch is
+                # a HIT (resume latency fully hidden); a still-pending
+                # one is promoted to the urgent lane and rides this
+                # step's normal dispatch.  The byte ledger syncs through
+                # the queue's commit re-notification, not engine glue.
+                _, completed = self.mgr.commit_prefetch(req.rid)
+                if completed:
+                    self.prefetch_hits += 1
+            else:
+                # migrate("device") reallocates AND enqueues the h2d
+                # scatter plan; the payload lands when the step loop
+                # dispatches the queue (before any decode read)
+                self.mgr.swap_in(req.rid)
             self._next_tok[slot] = req.pending_tok
             self._place(req, slot)
         batch: List[Tuple[int, Request, int]] = []
@@ -314,12 +367,14 @@ class Engine:
         view = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
                             jnp.asarray(tables),
                             jnp.zeros((len(batch),), jnp.int32), cfg)
+        t0 = time.perf_counter()
         last, view = self.model.prefill(
             self.params, {"tokens": jnp.asarray(toks)}, view,
             jnp.asarray(lens, jnp.int32))
+        nxt = np.asarray(jnp.argmax(last, axis=-1))   # forces completion
+        self.sched.observe_prefill(sum(lens), time.perf_counter() - t0)
         self.cache = dataclasses.replace(self.cache, k_pool=view.k_pool,
                                          v_pool=view.v_pool)
-        nxt = np.asarray(jnp.argmax(last, axis=-1))
         for row, (slot, req, _) in enumerate(batch):
             self._next_tok[slot] = nxt[row]
         self.prefill_tokens += sum(lens)
@@ -354,13 +409,23 @@ class Engine:
         self.transfers.dispatch()
 
     def _reclaim_for_pressure(self, requester) -> Optional[int]:
-        """Arena reclaimer: evict the LIFO victim, return its owner id.
+        """Arena reclaimer: cancel speculation first, then evict the
+        LIFO victim; returns the reclaimed owner id.
 
         Called by ``Arena._alloc_ids`` when a lease request cannot be
         granted; the Arena keeps asking until the request fits or the
         victim IS the requester (surfaced to the caller as
-        ``LeaseRevokedError``).
+        ``LeaseRevokedError``).  Uncommitted prefetches are the
+        CHEAPEST victims -- cancelling one frees its blocks without
+        moving a byte (the host payload is still authoritative), and it
+        restores exactly the free-block state the no-speculation
+        schedule would have had, so pressure behavior stays
+        decision-identical to the ``drain()`` fallback.
         """
+        for rid in self.mgr.prefetched_ids():
+            self.mgr.cancel_prefetch(rid)
+            self.prefetch_cancels += 1
+            return rid
         if not self.running:
             return None
         slot = self.sched.pick_victim(self.running)
@@ -445,8 +510,12 @@ class Engine:
     # ---------------- compaction (Arena defrag) ----------------
     def compact_now(self) -> int:
         """One Arena ``compact()`` cycle: move live blocks to the dense
-        prefix; the copy plan rides the transfer plane and lands at the
-        next dispatch (before any decode read).
+        prefix; the copy plan rides the transfer plane and is
+        dispatched IMMEDIATELY (it would launch before the decode
+        anyway, and its holds on the vacated sources must not leak into
+        this step's admission arithmetic -- the eager fallback releases
+        them inside the enqueue's drain, so the overlapped schedule
+        must match or the two diverge on marginal admissions).
 
         Safe between steps (no writes in flight); every table built
         afterwards (``_sync_device_state``, prefill tables) reads the
@@ -455,6 +524,7 @@ class Engine:
         the number of blocks moved.
         """
         src, _ = self.arena.compact(self.mgr.pool_class)
+        self.transfers.dispatch(lanes=(URGENT,))
         return len(src)
 
     def _maybe_compact(self) -> None:
@@ -470,19 +540,60 @@ class Engine:
                 frag_threshold=self.compact_frag_threshold):
             self.compact_now()
 
-    def step(self) -> None:
-        """One serving step, scheduled around the transfer plane:
+    def _maybe_prefetch(self) -> None:
+        """Speculative swap-in of the scheduler's LIFO resume candidate
+        on the BACKGROUND h2d lane, launched just before decode so the
+        scatter overlaps it -- the candidate's next resume then commits
+        bookkeeping instead of waiting on a synchronous swap-in.
 
-            fence(N-1) -> produce plans -> dispatch -> decode
-            [host copies of step N's swap-outs overlap this decode]
+        Guards keep the speculation free of side effects: never while
+        the candidate's swap-out is still in transit (completing it
+        early would un-overlap the d2h double buffer), never under
+        pressure (headroom must cover the watermark plus a block per
+        runner -- and the reclaimer cancels speculation FIRST anyway),
+        never twice for the same candidate.
+        """
+        if not self.prefetch_enabled:
+            return
+        for req in self.sched.resume_candidates():
+            rid = req.rid
+            if self.mgr.is_prefetched(rid) or rid not in self.mgr.swapped:
+                continue
+            if self.store.in_transit(rid):
+                continue                 # wait for the fence at N+1
+            need = self.mgr.swapped[rid]
+            if need == 0:
+                continue
+            # same headroom the resume itself would be held to, but
+            # against CURRENT blocks rather than the worst case -- the
+            # window in between is exactly where speculation pays.  A
+            # wrong guess is free: pressure cancels the speculation
+            # before anything else moves.
+            if self.mgr.free_blocks - need < self.sched.watermark:
+                continue
+            self.mgr.prefetch(rid)
+            self.prefetches += 1
+
+    def step(self) -> None:
+        """One serving step, scheduled around the per-engine queues:
+
+            fence(N-1) -> produce plans -> dispatch urgent -> prefetch
+            -> dispatch background -> decode
+            [d2h host copies of step N's swap-outs AND the speculative
+             h2d scatter overlap this decode]
 
         FENCE: land step N-1's dispatched swap-out host copies (double
-        buffering: dispatched at N-1, fenced here).  PRODUCE: compaction
-        policy, admissions/resumes (h2d plans), growth + COW barrier
-        (d2d plans, growth preemptions enqueue d2h).  DISPATCH: execute
-        d2d/h2d and launch d2h gathers -- everything decode will READ is
-        settled, while the blocking host copies stay pending and overlap
-        the decode below.
+        buffering: dispatched at N-1, fenced here -- the d2h engine's
+        completion phase).  PRODUCE: compaction policy, admissions/
+        resumes (h2d plans; prefetched resumes commit instead), growth
+        + COW barrier (d2d plans, growth preemptions enqueue d2h).
+        DISPATCH URGENT: every engine runs its urgent lane -- d2d
+        copies and h2d scatters execute, d2h gathers launch --
+        everything decode will READ is settled, while the blocking host
+        copies stay pending and overlap the decode below.  PREFETCH:
+        the LIFO resume candidate's speculative swap-in enqueues and
+        launches on the background h2d lane, overlapping the decode
+        too.
         """
         self.transfers.complete_dispatched()
         self._maybe_compact()
@@ -497,15 +608,20 @@ class Engine:
             return
         grown += self._cow_barrier()
         self.sched.observe_growth(grown)
-        self.transfers.dispatch()
+        self.transfers.dispatch(lanes=(URGENT,))
+        self._maybe_prefetch()
+        self.transfers.dispatch(lanes=(BACKGROUND,))
         self._sync_device_state()
         tokens = jnp.asarray(self._next_tok)
+        t0 = time.perf_counter()
         logits, self.cache = self.model.decode_step(self.params, tokens,
                                                     self.cache)
-        # compute mark: any dispatched host copy that completes after
-        # this point genuinely overlapped a decode (honest `overlapped`)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # forces completion
+        self.sched.observe_decode(time.perf_counter() - t0)
+        # compute mark: any dispatched host copy that completes -- or
+        # speculative scatter that commits -- after this point genuinely
+        # overlapped a decode (honest per-engine `overlapped`)
         self.transfers.note_compute()
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.decode_tokens += len(self.running)
         for slot, req in list(self.running.items()):
             req.generated.append(int(tokens[slot]))
@@ -558,6 +674,12 @@ class Engine:
             "swap_ins": st.swap_ins,
             "swap_out_bytes": st.swap_out_bytes,
             "swap_in_bytes": st.swap_in_bytes,
+            "swap_by_engine": st.by_engine,
+            "prefetches": self.prefetches,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_cancels": self.prefetch_cancels,
+            "prefetch_hit_rate": (self.prefetch_hits
+                                  / max(self.store.stats.swap_ins, 1)),
             "pool_utilization": self.mgr.utilization,
             "compactions": self.arena.compactions,
             "blocks_compacted": self.arena.blocks_compacted,
@@ -592,6 +714,8 @@ class Engine:
         for rid in self.mgr.swapped:
             assert rid in self.store or rid in transit
         # in-flight leases must exactly mirror pending-plan destinations
+        # (speculative prefetch leases included: their background-lane
+        # scatter counts as a pending plan like any other)
         pending_dst = self.transfers.in_flight_blocks(self.mgr.pool_class)
         for rid in self.mgr.tables:
             for lease in self.mgr.mapping(rid).leases:
@@ -599,5 +723,14 @@ class Engine:
                     assert lease.block in pending_dst, (
                         f"rid {rid}: lease {lease!r} flagged in-flight "
                         f"but no pending plan targets it")
+        for rid in self.mgr.prefetched_ids():
+            m = self.mgr.mapping(rid)
+            assert rid in self.store, (
+                f"rid {rid}: prefetched but its host payload is gone")
+            for lease in m._spec:
+                if lease.in_flight:
+                    assert lease.block in pending_dst, (
+                        f"rid {rid}: speculative lease {lease!r} flagged "
+                        f"in-flight but no pending plan targets it")
         # lease registry mirrors allocator refcounts exactly
         self.arena.check_registry(self.mgr.pool_class)

@@ -31,11 +31,23 @@ Policies implemented:
   ``prefill_budget`` prompt tokens (the engine prefills all of a step's
   admissions in ONE padded batched call), bounding per-step latency
   spikes.  The budget never blocks the first admission of an otherwise
-  idle engine.
+  idle engine.  ``prefill_budget="auto"`` derives the budget from an
+  EWMA of MEASURED prefill latency (the same adapt-with-knob-override
+  pattern as the watermark): the engine reports seconds-per-prefill-
+  token and seconds-per-decode-step (``observe_prefill`` /
+  ``observe_decode``), and the budget is sized so one step's prefill
+  takes at most ``prefill_slack`` decode-steps' worth of wall time.
+  Wall-clock-derived policy is opt-in (unlike the block-arithmetic
+  watermark it is not deterministic across runs, which would unpin the
+  schedule-equivalence tests); the integer knob remains the static
+  override.
 
 Resumed requests are preferred over new ones and pop LIFO off a
 ``BlockStack`` (the paper's split stack backing a runtime structure).
-They carry their saved KV payload, so they cost no prefill budget.
+They carry their saved KV payload, so they cost no prefill budget --
+and ``resume_candidates()`` exposes the LIFO head to the engine so the
+transfer plane can PREFETCH its swap-in on the background h2d lane
+while decode runs.
 """
 
 from __future__ import annotations
@@ -105,21 +117,38 @@ class Scheduler:
     META_CLASS = "sched-meta"
 
     def __init__(self, *, watermark: Optional[int] = None,
-                 prefill_budget: Optional[int] = None,
+                 prefill_budget=None,
                  arena: Optional[Arena] = None,
-                 growth_alpha: float = 0.25, growth_horizon: int = 4):
+                 growth_alpha: float = 0.25, growth_horizon: int = 4,
+                 latency_alpha: float = 0.25, prefill_slack: int = 4):
         if watermark is not None and watermark < 0:
             raise ValueError("watermark must be >= 0")
-        if prefill_budget is not None and prefill_budget <= 0:
-            raise ValueError("prefill_budget must be positive")
+        if not (prefill_budget is None or prefill_budget == "auto"):
+            if not isinstance(prefill_budget, int) or prefill_budget <= 0:
+                raise ValueError(
+                    "prefill_budget must be a positive int, 'auto', or "
+                    "None")
         if not 0.0 < growth_alpha <= 1.0:
             raise ValueError("growth_alpha must be in (0, 1]")
+        if not 0.0 < latency_alpha <= 1.0:
+            raise ValueError("latency_alpha must be in (0, 1]")
+        if prefill_slack <= 0:
+            raise ValueError("prefill_slack must be positive")
         #: static override; None selects the adaptive EWMA watermark
         self.watermark_override = watermark
         self.growth_alpha = growth_alpha
         self.growth_horizon = growth_horizon
         self._growth_ewma = 0.0
-        self.prefill_budget = prefill_budget
+        #: int = static budget, "auto" = derived from measured latency,
+        #: None = unlimited
+        self.prefill_budget_override = (prefill_budget
+                                        if isinstance(prefill_budget, int)
+                                        else None)
+        self.prefill_auto = prefill_budget == "auto"
+        self.latency_alpha = latency_alpha
+        self.prefill_slack = prefill_slack
+        self._prefill_spt_ewma = 0.0   # seconds per prefill token
+        self._decode_s_ewma = 0.0      # seconds per decode step
         self.queue: List[Request] = []           # FCFS arrivals
         if arena is not None:
             # scheduler scratch rides the same address space as the KV
@@ -154,6 +183,43 @@ class Scheduler:
         a = self.growth_alpha
         self._growth_ewma = (1 - a) * self._growth_ewma + a * max(0, blocks)
 
+    # ---------------- adaptive prefill budget ----------------
+    @property
+    def prefill_budget(self) -> Optional[int]:
+        """Per-step prompt-token budget (None = unlimited).
+
+        Static when the constructor knob was an int; with ``"auto"``,
+        derived from measured latency: enough tokens that one step's
+        prefill costs at most ``prefill_slack`` decode-steps of wall
+        time (``prefill_slack * EWMA(s/decode-step) /
+        EWMA(s/prefill-token)``).  Unlimited until both EWMAs have
+        observations -- the first admission is never blocked.
+        """
+        if not self.prefill_auto:
+            return self.prefill_budget_override
+        if self._prefill_spt_ewma <= 0.0 or self._decode_s_ewma <= 0.0:
+            return None
+        return max(1, int(self.prefill_slack * self._decode_s_ewma
+                          / self._prefill_spt_ewma))
+
+    def observe_prefill(self, tokens: int, seconds: float) -> None:
+        """Engine feedback: one batched prefill of ``tokens`` prompt
+        tokens took ``seconds`` (drives the auto prefill budget)."""
+        if tokens <= 0 or seconds <= 0.0:
+            return
+        a = self.latency_alpha
+        spt = seconds / tokens
+        self._prefill_spt_ewma = ((1 - a) * self._prefill_spt_ewma + a * spt
+                                  if self._prefill_spt_ewma > 0.0 else spt)
+
+    def observe_decode(self, seconds: float) -> None:
+        """Engine feedback: one decode step took ``seconds``."""
+        if seconds <= 0.0:
+            return
+        a = self.latency_alpha
+        self._decode_s_ewma = ((1 - a) * self._decode_s_ewma + a * seconds
+                               if self._decode_s_ewma > 0.0 else seconds)
+
     # ---------------- intake ----------------
     def submit(self, req: Request) -> None:
         req.state = "queued"
@@ -166,6 +232,18 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or len(self.preempted) > 0
+
+    def resume_candidates(self) -> List[Request]:
+        """The LIFO resume candidate(s), most-likely-next first.
+
+        This is the policy surface the speculative prefetch rides: the
+        head of the preempted stack is the next sequence a freed slot
+        will resume, so the engine can enqueue its swap-in on the
+        background h2d lane WHILE decode runs and commit (or cancel) it
+        when the admission decision actually lands.  Peeking never
+        changes scheduling state.
+        """
+        return [self.preempted.peek()] if len(self.preempted) > 0 else []
 
     # ---------------- admission ----------------
     def _stamp(self, req: Request) -> Request:

@@ -204,6 +204,58 @@ def test_scheduler_adaptive_watermark():
     assert [r.rid for r in plan.admit] == [1]
 
 
+def test_scheduler_adaptive_prefill_budget():
+    """Satellite pin: ``prefill_budget="auto"`` derives the per-step
+    prompt-token budget from MEASURED latency EWMAs (the watermark
+    pattern: adapt by default of the mode, knob overrides) -- sized so
+    one step's prefill costs at most ``prefill_slack`` decode-steps of
+    wall time.  Unlimited until both EWMAs have data (the first
+    admission is never starved)."""
+    sched = Scheduler(prefill_budget="auto")
+    assert sched.prefill_budget is None        # no observations yet
+    sched.observe_decode(0.1)
+    assert sched.prefill_budget is None        # still missing prefill data
+    sched.observe_prefill(100, 1.0)            # 10 ms / prompt token
+    for _ in range(60):                        # converge both EWMAs
+        sched.observe_decode(0.1)
+        sched.observe_prefill(100, 1.0)
+    # 4 decode-steps of slack * 0.1 s / 0.01 s-per-token = 40 tokens
+    assert sched.prefill_budget == 4 * 10
+    # and the derived budget actually chunks admissions
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=np.arange(32), max_new=4))
+    plan = sched.plan_admissions(3, _Mem(free=64), num_running=1)
+    assert [r.rid for r in plan.admit] == [0]  # 32 <= 40; next 32 > 8 left
+    # the static knob still overrides the adaptive path entirely
+    static = Scheduler(prefill_budget=10)
+    static.observe_decode(5.0)
+    static.observe_prefill(10, 0.001)
+    assert static.prefill_budget == 10
+    # default None stays unlimited no matter what is observed
+    off = Scheduler()
+    off.observe_decode(0.1)
+    off.observe_prefill(100, 1.0)
+    assert off.prefill_budget is None
+    with pytest.raises(ValueError):
+        Scheduler(prefill_budget="fast")
+    with pytest.raises(ValueError):
+        Scheduler(prefill_budget=0)
+
+
+def test_scheduler_resume_candidates_peek():
+    """``resume_candidates`` exposes the LIFO head without popping --
+    the surface the engine's speculative prefetch rides."""
+    sched = Scheduler()
+    assert sched.resume_candidates() == []
+    a = Request(rid=0, prompt=np.arange(8), max_new=8)
+    b = Request(rid=1, prompt=np.arange(8), max_new=8)
+    sched.on_preempt(a)
+    sched.on_preempt(b)
+    assert [r.rid for r in sched.resume_candidates()] == [1]   # LIFO top
+    assert len(sched.preempted) == 2           # peek does not pop
+    assert sched.resume_candidates()[0] is sched.preempted.peek()
+
+
 def test_scheduler_rejects_cross_group_fork():
     """dp_groups > 1: block tables hold group-local ids, so a fork may
     only alias a parent in its own pool group -- anything else fails
@@ -289,11 +341,139 @@ def test_overlapped_schedule_token_and_byte_identical(setup):
     assert toks_async == toks_sync
     assert bytes_async == bytes_sync
     assert eng_async.preemptions > 0            # pressure actually fired
-    # the double-buffer win: a swap-out host copy fenced at step N+1
-    assert eng_async.transfers.stats.overlapped >= 1
-    assert eng_sync.transfers.stats.overlapped == 0
+    # the double-buffer win: a swap-out host copy fenced at step N+1 --
+    # attributed to the d2h ENGINE (per-engine since the multi-queue
+    # refactor: h2d prefetch overlap must not inflate this counter)
+    assert eng_async.transfers.stats.overlapped["d2h"] >= 1
+    assert all(v == 0 for v in
+               eng_sync.transfers.stats.overlapped.values())
     assert_engine_quiescent(eng_async)
     assert_engine_quiescent(eng_sync)
+
+
+# ---------------------------------------------------------------------------
+# speculative swap-in prefetch: a LIFO resume served from a COMPLETED
+# background-lane scatter, token-identical to the drain() schedule
+# ---------------------------------------------------------------------------
+def _drive_prefetch_workload(model, params, overlap):
+    """Forced-preemption workload whose LIFO victim waits in the
+    prefetch window: two long growers fill two slots, a short filler's
+    completion admits a YOUNG victim, and the forced eviction at step
+    34 leaves the victim's worst-case footprint blocked
+    (free - wc < watermark) while its current blocks fit
+    (free - cur >= watermark).  The background h2d scatter completes
+    during the multi-step wait; the resume commits it."""
+    eng = Engine(model, params, slots=3, max_seq=64, num_blocks=20,
+                 eos_id=-1, watermark=2, overlap_transfers=overlap)
+    rngl = np.random.RandomState(3)
+    shapes = [(8, 48), (8, 48), (8, 8), (8, 40)]
+    reqs = [Request(rid=i, prompt=rngl.randint(2, 100, size=pl),
+                    max_new=mn) for i, (pl, mn) in enumerate(shapes)]
+    for r in reqs:
+        eng.submit(r)
+    forced = False
+    while (eng.sched.has_work or eng.running) and eng.steps < 400:
+        eng.step()
+        eng.check_consistency()
+        if eng.steps == 34 and eng.running and not forced:
+            eng.preempt_latest()
+            forced = True
+    eng.sync_transfers()
+    assert forced
+    return eng
+
+
+def test_lifo_resume_served_from_completed_prefetch(setup):
+    """Acceptance pin: on the forced-preemption workload, at least one
+    LIFO resume is served from a COMPLETED speculative prefetch -- and
+    the prefetching schedule stays step- and token-identical to the
+    single-queue drain() fallback (speculation never changes a
+    decision)."""
+    cfg, model, params = setup
+    eng = _drive_prefetch_workload(model, params, overlap=True)
+    assert len(eng.done) == 4
+    assert eng.preemptions >= 1
+    assert eng.prefetches >= 1
+    assert eng.prefetch_hits >= 1            # resume skipped the swap-in
+    assert eng.prefetch_cancels == 0         # speculation was never wrong
+    # the h2d scatter genuinely overlapped decode steps while waiting,
+    # attributed to the h2d engine (the per-engine stats bugfix)
+    assert eng.transfers.stats.overlapped["h2d"] >= 1
+    # decision-identical to the synchronous single-queue schedule
+    eng_sync = _drive_prefetch_workload(model, params, overlap=False)
+    assert eng_sync.prefetches == 0          # prefetch off under drain()
+    assert eng_sync.steps == eng.steps
+    assert ({r.rid: list(r.generated) for r in eng.done}
+            == {r.rid: list(r.generated) for r in eng_sync.done})
+    st, st2 = eng.store.stats, eng_sync.store.stats
+    assert (st.swap_out_bytes, st.swap_in_bytes) \
+        == (st2.swap_out_bytes, st2.swap_in_bytes)
+    # token-identical to the single-request greedy reference
+    for req in sorted(eng.done, key=lambda r: r.rid):
+        ref = greedy_reference(model, params, req.prompt, req.max_new)
+        assert req.generated == ref, (req.rid, req.generated, ref)
+    assert_engine_quiescent(eng)
+    assert_engine_quiescent(eng_sync)
+
+
+# ---------------------------------------------------------------------------
+# the swap ledger's two-phase speculative accounting syncs through the
+# queue's commit/abandon re-notifications -- no engine glue required
+# ---------------------------------------------------------------------------
+def test_ledger_syncs_on_direct_migrate_commit_and_cancel():
+    """Regression: resuming a prefetched mapping through the PUBLIC
+    ``migrate("device")`` path (not the engine's guarded commit) must
+    still fold the parked speculative bytes into swap_ins -- and a
+    cancelled executed prefetch must write them off as waste, never
+    leave them parked to corrupt a later resume's accounting."""
+    from repro.mem import Arena as _Arena
+
+    def make(n=8):
+        a = _Arena()
+        a.register_class("kv", num_blocks=n, block_nbytes=8)
+        cell = {"s": [jnp.zeros((1, n, 2), jnp.float32)]}
+        a.transfers.register_executor(
+            "kv", lambda: list(cell["s"]),
+            lambda s: cell.update(s=list(s)))
+        return a, HostBlockStore(a, "kv")
+
+    # commit path: direct migrate("device") of a prefetched mapping
+    a, store = make()
+    m = a.mapping("kv", owner=0)
+    m.ensure_capacity(2)
+    m.migrate("host")
+    a.transfers.drain()
+    m.prefetch()
+    a.transfers.dispatch()                      # scatter completes
+    assert store.stats.swap_ins == 0            # parked, not yet demand
+    m.migrate("device")                         # auto-commits
+    assert store.stats.swap_ins == 1
+    assert store.stats.prefetch_commits == 1
+    assert store.stats.swap_in_bytes == store.stats.by_engine[
+        "h2d-prefetch"]["bytes"]
+    m.free()
+    a.transfers.drain()
+    a.assert_quiescent()
+
+    # cancel path: executed speculation written off, later real resume
+    # counted exactly once
+    a2, store2 = make()
+    m2 = a2.mapping("kv", owner=0)
+    m2.ensure_capacity(2)
+    m2.migrate("host")
+    a2.transfers.drain()
+    m2.prefetch()
+    a2.transfers.dispatch()
+    m2.cancel_prefetch()
+    assert store2.stats.prefetch_cancels == 1
+    assert store2.stats.prefetch_wasted_bytes > 0
+    assert store2.stats.swap_ins == 0
+    m2.migrate("device")                        # real (demand) swap-in
+    a2.transfers.drain()
+    assert store2.stats.swap_ins == 1
+    assert store2.stats.prefetch_commits == 0
+    m2.free()
+    a2.assert_quiescent()
 
 
 # ---------------------------------------------------------------------------

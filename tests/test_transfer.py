@@ -26,8 +26,8 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.mem import (Arena, IN_FLIGHT, OutOfBlocksError,
-                       UnfencedReadError)
+from repro.mem import (Arena, BACKGROUND, D2D, D2H, H2D, IN_FLIGHT,
+                       OutOfBlocksError, UnfencedReadError)
 from _hypothesis_compat import given, settings, strategies as st
 
 REPO = Path(__file__).resolve().parents[1]
@@ -150,6 +150,10 @@ def test_swap_out_holds_sources_until_dispatch():
     alloc = a.allocator(CLS)
     assert alloc.num_held == 3 and a.num_free(CLS) == 1
     assert alloc.num_used + alloc.num_free + alloc.num_held == 4
+    # per-engine hold attribution: the d2h queue owns all three, and
+    # the ArenaStats surface reports the same split
+    assert alloc.held_by_engine() == {"d2h": 3}
+    assert a.stats()[CLS].held_by_engine == {"d2h": 3}
     # needs 3 blocks; only 1 unheld -> the arena dispatches the plane
     m2 = a.mapping(CLS, owner=1)
     m2.ensure_capacity(3)
@@ -233,6 +237,206 @@ def test_multi_plan_gather_single_launch():
 
 
 # ---------------------------------------------------------------------------
+# multi-queue: cross-queue fences, the d2h reorder window, prefetch
+# ---------------------------------------------------------------------------
+def test_cross_queue_dependency_check_both_ways():
+    """The enqueue-time dependency check: a d2h gather reading a block a
+    pending d2d copy WRITES depends on the copy (launch strength); one
+    that only shares READS does not.  This is the check that gates the
+    reorder-window coalescing."""
+    a, cell = make_executor_arena(n=8)
+    m = a.mapping(CLS, owner=1)
+    m.ensure_capacity(2)                       # blocks 0, 1
+    write_blocks(a, cell, m, 1.0)
+    a.transfers.enqueue_copy(CLS, [0], [2])    # d2d: writes block 2
+    # FAILS the check: swap-out whose gather reads the copy's dst
+    m2 = a.mapping(CLS, owner=2)
+    m2.leases.append(a.lease_blocks(CLS, 2, 1)[0])
+    # (hand-build a src overlap without device state: direct enqueue)
+    f = a.transfers.enqueue_swap_out(CLS, "dep", [2])
+    [dep_plan] = [p for p in a.transfers.engines[D2H]._pending
+                  if p.owner == "dep"]
+    assert dep_plan.deps == {D2D: 0}           # must wait for the copy
+    # PASSES the check: swap-out reading only the copy's SOURCE
+    a.transfers.enqueue_swap_out(CLS, "indep", [1])
+    [ind_plan] = [p for p in a.transfers.engines[D2H]._pending
+                  if p.owner == "indep"]
+    assert ind_plan.deps == {}                 # read-read: no ordering
+    a.transfers.drain()
+    a.host_discard(CLS, "dep")
+    a.host_discard(CLS, "indep")
+    m2.leases.pop().release()
+    m.free()
+    a.assert_quiescent()
+
+
+def test_d2h_reorder_window_coalesces_across_dependency():
+    """Satellite pin: two INDEPENDENT swap-outs enqueued on either side
+    of a d2d copy share one gather launch (the reorder window -- the
+    old single-FIFO plane could only batch consecutive plans), while a
+    swap-out that depends on the copy's destination is held back and
+    reads the POST-copy payload."""
+    a, cell = make_executor_arena(n=12)
+    m1 = a.mapping(CLS, owner=1)
+    m1.ensure_capacity(2)
+    write_blocks(a, cell, m1, 1.0)
+    parent = a.mapping(CLS, owner=3)
+    parent.ensure_capacity(1)
+    write_blocks(a, cell, parent, 9.0)
+    m2 = a.mapping(CLS, owner=2)
+    m2.ensure_capacity(2)
+    write_blocks(a, cell, m2, 2.0)
+
+    m1.migrate("host")                          # d2h A (independent)
+    child = parent.fork(owner=4, nblocks=1)     # d2d X: COW copy into a
+    assert child.ensure_writable(0) is not None  # fresh block
+    cow_dst = child.leases[0].block
+    child_swap = child.migrate("host")          # d2h B: reads X's dst
+    assert cow_dst in child_swap
+    m2.migrate("host")                          # d2h C (independent)
+
+    launches_before = a.transfers.stats.launches
+    a.transfers.dispatch()
+    # A and C coalesced into ONE gather past the blocked B; X executed;
+    # B launched separately once its dependency settled
+    assert a.transfers.stats.reordered >= 1
+    gather_launches = a.transfers.stats.launches - launches_before
+    assert gather_launches == 3                # [A+C] + [X] + [B]
+    a.transfers.complete_dispatched()
+    # B's payload is the POST-copy content (the dependency held)
+    np.testing.assert_array_equal(
+        a._host_payload[(CLS, 4)][0][0],
+        np.full((1, 1, 2), 9.0, np.float32))
+    for m in (child, m1, m2):
+        m.free()
+    parent.free()
+    a.assert_quiescent()
+
+
+def test_swap_in_waits_for_same_owner_swap_out_fence():
+    """Cross-queue COMPLETE-strength fence: an h2d swap-in enqueued
+    while the owner's d2h swap-out is still unfenced lands the payload
+    first (preempt + immediate resume), in any dispatch order."""
+    a, cell = make_executor_arena(n=6)
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 5.0)
+    m.migrate("host")                          # d2h pending
+    m.migrate("device")                        # h2d with fdep on the d2h
+    [plan] = a.transfers.engines[H2D]._pending
+    assert plan.fdeps == {D2H: 0}
+    a.transfers.dispatch()
+    np.testing.assert_array_equal(contents(cell, m.block_ids())[0],
+                                  np.full((1, 2, 2), 5.0, np.float32))
+    m.free()
+    a.assert_quiescent()
+
+
+def test_prefetch_rides_background_lane_and_commits():
+    """Speculative swap-in: payload is PEEKED (host copy stays
+    authoritative), the plan rides the background lane, and committing
+    after completion is pure bookkeeping -- with the overlap attributed
+    to the h2d engine, NOT the d2h double buffer (the stats bugfix)."""
+    a, cell = make_executor_arena(n=8)
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 4.0)
+    m.migrate("host")
+    a.transfers.drain()
+    ids = m.prefetch()
+    assert m.prefetched and m.placement == "host"
+    assert a.host_contains(CLS, 0)             # payload NOT consumed
+    assert all(l.in_flight for l in m._spec)
+    assert a.transfers.queue_depths()[H2D][BACKGROUND] == 1
+    a.transfers.dispatch()                     # scatter executes
+    assert a.host_contains(CLS, 0)             # still only peeked
+    a.transfers.note_compute()                 # a decode runs in between
+    got_ids, completed = m.commit_prefetch()
+    assert completed and got_ids == ids
+    assert m.placement == "device" and not a.host_contains(CLS, 0)
+    st_ = a.transfers.stats
+    assert st_.prefetch_enqueued == 1 and st_.prefetch_committed == 1
+    assert st_.overlapped["h2d"] == 1          # attributed to h2d...
+    assert st_.overlapped["d2h"] == 0          # ...not the d2h buffer
+    np.testing.assert_array_equal(contents(cell, m.block_ids())[0],
+                                  np.full((1, 2, 2), 4.0, np.float32))
+    m.free()
+    a.assert_quiescent()
+
+
+def test_cancelled_prefetch_releases_leases_and_holds():
+    """Satellite regression: cancelling a prefetch releases its
+    in-flight leases (and any holds) and never executes the scatter;
+    the payload stays resumable, and the vacated ids' next tenant is
+    not clobbered by a stale speculative scatter."""
+    a, cell = make_executor_arena(n=6)
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 7.0)
+    m.migrate("host")                          # d2h pending, 2 holds
+    ids = m.prefetch()                         # spec plan, fdep on d2h
+    spec_leases = list(m._spec)
+    assert all(l.in_flight for l in spec_leases)
+    free_before = a.num_free(CLS)
+    m.cancel_prefetch()
+    assert not m.prefetched
+    assert a.num_free(CLS) == free_before + len(ids)
+    assert not any(l.in_flight for l in spec_leases)    # flags cleared
+    assert not any(l.live for l in spec_leases)         # leases released
+    assert a.transfers.stats.prefetch_cancelled == 1
+    assert a.transfers.stats.completed["h2d"] == 0      # never scattered
+    # the d2h swap-out (and its holds) is untouched by the cancel
+    assert 0 in a.transfers.in_transit(CLS)
+    # a new tenant reuses the cancelled ids; draining must not replay
+    # the withdrawn scatter over it
+    m2 = a.mapping(CLS, owner=1)
+    m2.ensure_capacity(2)
+    write_blocks(a, cell, m2, 3.0)
+    a.transfers.drain()
+    np.testing.assert_array_equal(contents(cell, m2.block_ids())[0],
+                                  np.full((1, 2, 2), 3.0, np.float32))
+    # and the candidate still resumes from its intact host payload
+    m.migrate("device")
+    a.transfers.drain()
+    np.testing.assert_array_equal(contents(cell, m.block_ids())[0],
+                                  np.full((1, 2, 2), 7.0, np.float32))
+    m2.free()
+    m.free()
+    a.assert_quiescent()
+
+
+def test_metadata_only_prefetch_commit_does_not_count_overlap():
+    """Regression: a metadata-only arena completes the speculative plan
+    inline at enqueue -- committing it must not count a spurious
+    ``overlapped[h2d]`` (nothing ever launched, no compute ran)."""
+    a = Arena()
+    a.register_class("meta", num_blocks=4, block_nbytes=8)
+    m = a.mapping("meta", owner=0)
+    m.ensure_capacity(2)
+    m.migrate("host")
+    m.prefetch()
+    ids, completed = m.commit_prefetch()
+    assert completed and len(ids) == 2
+    assert a.transfers.stats.overlapped["h2d"] == 0
+    m.free()
+    a.assert_quiescent()
+
+
+def test_free_while_prefetched_cancels_speculation():
+    """Freeing a prefetched mapping withdraws the speculation and tears
+    down host residency + payload together (no leaks)."""
+    a, cell = make_executor_arena(n=6)
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 2.0)
+    m.migrate("host")
+    a.transfers.drain()
+    m.prefetch()
+    m.free()
+    a.assert_quiescent()
+
+
+# ---------------------------------------------------------------------------
 # the read barrier: unfenced reads of in-flight leases raise
 # ---------------------------------------------------------------------------
 def test_unfenced_read_of_in_flight_lease_raises():
@@ -295,9 +499,10 @@ def test_quiescence_requires_fenced_plane():
 
 
 # ---------------------------------------------------------------------------
-# ORDERING property: any interleaving == the synchronous drain() schedule
+# ORDERING property: any multi-queue interleaving (including speculative
+# prefetch and its cancellation) == the synchronous drain() schedule
 # ---------------------------------------------------------------------------
-GROW, PREEMPT, RESUME, COW, FENCE = range(5)
+GROW, PREEMPT, RESUME, COW, FENCE, PREFETCH, CANCELPF = range(7)
 
 
 def _avail(a):
@@ -340,6 +545,16 @@ def _run_schedule(ops, eager):
             fill[0] += 1
         elif code == FENCE:
             a.transfers.drain()
+        elif code == PREFETCH:
+            idle = [m for m in host if not m.prefetched and len(m) > 0]
+            if idle:
+                target = idle[arg % len(idle)]
+                if _avail(a) >= len(target):
+                    target.prefetch()
+        elif code == CANCELPF:
+            spec = [m for m in host if m.prefetched]
+            if spec:
+                spec[arg % len(spec)].cancel_prefetch()
     a.transfers.drain()
     state = {}
     for m in maps:
@@ -355,12 +570,13 @@ def _run_schedule(ops, eager):
 
 
 @settings(max_examples=20)
-@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 7)),
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 7)),
                 min_size=0, max_size=24))
 def test_any_interleaving_matches_synchronous_drain(ops):
     """Block contents and host payloads after an arbitrary mix of
-    grows, preemptions, resumes, COW barriers, device writes and fences
-    are identical between the overlapped schedule and the eager
+    grows, preemptions, resumes, COW barriers, speculative prefetches,
+    prefetch cancellations, device writes and fences are identical
+    between the overlapped multi-queue schedule and the eager
     (drain-per-enqueue) schedule."""
     deferred = _run_schedule(ops, eager=False)
     eager = _run_schedule(ops, eager=True)
