@@ -30,10 +30,23 @@ writes ``BENCH_serve.json``:
 ``--smoke`` additionally re-runs the identical workload with
 ``overlap_transfers=False`` -- the single-queue synchronous ``drain()``
 fallback (one serialized schedule, prefetch off) -- and asserts the
-multi-queue+prefetch schedule is step-, token- and demand-swap-byte-
-IDENTICAL to it: the per-engine queues and the speculation may only
-reschedule traffic, never change a decision (speculative blocks are
+multi-queue+prefetch schedule decodes PER-REQUEST-TOKEN- and
+demand-swap-byte-identical outputs: the per-engine queues and the
+speculation may only reschedule traffic, never change what any request
+decodes or how many bytes its swaps move (speculative blocks are
 credited as free at admission and cancelled first under pressure).
+The equivalence pins deliberately compare per-request tokens, never
+step counts, so the wall-clock-adaptive prefill budget (the
+``"auto"`` default) stays out of the pinned surface; the scripted
+workload itself runs with ``prefill_budget=None`` (deterministic).
+
+``--trace poisson`` (the ``--smoke`` default) additionally drives a
+fresh engine through ``Engine.serve`` over a seeded, replayable
+arrival trace -- requests ARRIVE on the engine's step clock instead of
+pre-loading the batch -- and records per-tenant p50/p99 TTFT and
+inter-token latency (``tenant_latency``), the TTFT histogram
+(``latency_histogram``) and the trace parameters (``arrival_trace``)
+in BENCH_serve.json.
 
 ``--baseline PATH`` compares tokens/s against a committed report and
 exits non-zero on a regression beyond ``--regress-frac`` (CI gate).
@@ -95,6 +108,50 @@ def drive(cfg, eng, args):
             forced = True
     eng.sync_transfers()
     return time.perf_counter() - t0
+
+
+def trace_probe(args):
+    """Live-traffic section: a seeded arrival trace through
+    ``Engine.serve`` (continuous batching -- admit/retire every step,
+    never drain the batch) with the adaptive ``"auto"`` prefill budget,
+    reporting per-tenant latency percentiles.  Replayable: the same
+    seed produces the same arrivals and token-identical decodes; only
+    the wall-clock latencies vary run to run."""
+    import argparse as _ap
+    from repro.serve.traffic import make_trace
+
+    pargs = _ap.Namespace(**{**vars(args), "prefill_budget": "auto"})
+    cfg, eng = build(pargs)
+    source = make_trace(args.trace, args.requests, cfg.vocab_size,
+                        seed=args.seed, mean_gap=args.trace_gap,
+                        tenants=args.trace_tenants, max_new=args.max_new,
+                        prompt_cap=min(24, args.max_seq // 2),
+                        shared_frac=0.25)
+    n = len(source)
+    t0 = time.perf_counter()
+    eng.serve(source, max_steps=100_000)
+    dt = time.perf_counter() - t0
+    eng.sync_transfers()
+    st = eng.stats
+    ttfts = [(r.t_first - r.t_submit) * 1e3 for r in eng.done
+             if r.t_first >= 0 and r.t_submit >= 0]
+    counts, edges = np.histogram(ttfts, bins=8) if ttfts else \
+        (np.zeros(8, int), np.zeros(9))
+    return {
+        "arrival_trace": {"kind": args.trace, "seed": args.seed,
+                          "requests": n, "tenants": args.trace_tenants,
+                          "mean_gap_steps": args.trace_gap},
+        "completed": len(eng.done),
+        "steps": eng.steps,
+        "tokens_per_s": round(st["decode_tokens"] / max(dt, 1e-9), 2),
+        "preemptions": st["preemptions"],
+        "prefix_hits": st["prefix_hits"],
+        "tenant_latency": eng.latency_report(),
+        "latency_histogram": {"metric": "ttft_ms",
+                              "edges_ms": [round(float(e), 3)
+                                           for e in edges],
+                              "counts": [int(c) for c in counts]},
+    }
 
 
 def prefetch_probe(args):
@@ -180,7 +237,25 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--watermark", type=int, default=1)
-    ap.add_argument("--prefill-budget", type=int, default=None)
+
+    def _budget(v):
+        return ("auto" if v == "auto"
+                else None if v in ("none", "None") else int(v))
+
+    # the scripted workload defaults to None (unlimited, deterministic)
+    # so its equivalence pins and the tokens/s floor stay schedule-
+    # stable; the trace section exercises the adaptive "auto" default
+    ap.add_argument("--prefill-budget", type=_budget, default=None,
+                    help="int, 'auto', or 'none' (default: none)")
+    ap.add_argument("--trace", default=None,
+                    choices=("none", "static", "poisson", "bursty",
+                             "heavytail"),
+                    help="also run a live arrival trace through "
+                         "Engine.serve and record per-tenant latency "
+                         "(--smoke defaults to poisson)")
+    ap.add_argument("--trace-tenants", type=int, default=2)
+    ap.add_argument("--trace-gap", type=float, default=2.0,
+                    help="mean inter-arrival gap in engine steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--baseline", default=None,
                     help="committed BENCH_serve.json to gate against: "
@@ -191,8 +266,12 @@ def main(argv=None):
         args.reduced = True
         args.requests = min(args.requests, 9)
         args.slots = min(args.slots, 3)
+        if args.trace is None:
+            args.trace = "poisson"
     if args.reduced is None:
         args.reduced = True
+    if args.trace in (None, "none"):
+        args.trace = None
 
     cfg, eng = build(args)
     dt = drive(cfg, eng, args)
@@ -252,8 +331,10 @@ def main(argv=None):
     if args.smoke:
         # the per-engine queues + speculation may only RESCHEDULE
         # traffic, never change a decision: the single-queue drain()
-        # fallback must take the same number of steps, move
-        # byte-identical demand swap volume and decode identical tokens
+        # fallback must move byte-identical demand swap volume and
+        # decode identical PER-REQUEST tokens.  (Step counts are no
+        # longer pinned -- the adaptive prefill budget is free to
+        # re-time admissions without changing what anyone decodes.)
         cfg2, eng2 = build(args, overlap=False)
         dt2 = drive(cfg2, eng2, args)
         st2 = eng2.stats
@@ -265,11 +346,8 @@ def main(argv=None):
         report["overlap_equivalent"] = (
             st2["swap_out_bytes"] == st["swap_out_bytes"]
             and st2["swap_in_bytes"] == st["swap_in_bytes"]
-            and eng2.steps == eng.steps
-            and [list(r.generated) for r in sorted(
-                eng2.done, key=lambda r: r.rid)]
-            == [list(r.generated) for r in sorted(
-                eng.done, key=lambda r: r.rid)])
+            and {r.rid: list(r.generated) for r in eng2.done}
+            == {r.rid: list(r.generated) for r in eng.done})
         # CI gate: the scripted forced-preemption probe must serve at
         # least one LIFO resume from a COMPLETED speculative prefetch
         probe = prefetch_probe(args)
@@ -280,16 +358,33 @@ def main(argv=None):
                             and report["overlap_equivalent"]
                             and probe["completed"] == 4
                             and probe["prefetch_hits"] > 0)
+    if args.trace:
+        # the request plane: live arrivals through Engine.serve, with
+        # per-tenant latency percentiles and the TTFT histogram
+        tp = trace_probe(args)
+        report["arrival_trace"] = tp["arrival_trace"]
+        report["tenant_latency"] = tp["tenant_latency"]
+        report["latency_histogram"] = tp["latency_histogram"]
+        report["trace_tokens_per_s"] = tp["tokens_per_s"]
+        report["trace_steps"] = tp["steps"]
+        transfers_doc["modes"]["arrival-trace"] = tp["tokens_per_s"]
+        report["all_ok"] = (report["all_ok"]
+                            and tp["completed"]
+                            == tp["arrival_trace"]["requests"]
+                            and bool(tp["tenant_latency"]))
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)
     with open(OUT_TRANSFERS, "w") as f:
         json.dump(transfers_doc, f, indent=2)
     probe_hits = report.get("prefetch_probe", {}).get("prefetch_hits", "-")
+    trace_info = (f"{args.trace}:{report['trace_tokens_per_s']}tok/s"
+                  if args.trace else "-")
     print(f"bench_serve,{dt * 1e6:.0f},tok_s={report['tokens_per_s']},"
           f"hit_rate={report['prefix_share_hit_rate']},"
           f"swapB_step={report['swap_bytes_per_step']},"
           f"overlapped={report['transfers']['overlapped']},"
           f"probe_prefetch_hits={probe_hits},"
+          f"trace={trace_info},"
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)

@@ -1,12 +1,21 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
 
-Runs the layered serving stack (scheduler policy / swap store / engine
-mechanism) over the paged pool with synthetic request traffic; reports
-throughput, pool utilization, swap traffic and prefix-share hits.
+Thin driver over the continuous-batching request plane: builds a seeded
+arrival trace (``repro.serve.traffic.make_trace``), feeds it to
+``Engine.serve`` -- requests are admitted as they ARRIVE on the
+engine's step clock and retired as they finish, the batch never drains
+between requests -- and reports throughput, pool utilization, swap
+traffic, prefix-share hits and per-tenant p50/p99 TTFT and inter-token
+latency.
 
-``--shared-frac`` controls what fraction of requests reuse one of a few
-base prompts (possibly extended), exercising COW prefix sharing the way
-parallel sampling / few-shot serving does.
+``--trace`` picks the arrival shape (poisson / bursty / heavytail /
+static), ``--tenants`` spreads requests round-robin across tenants,
+``--policy fair`` switches admission to per-tenant deficit-round-robin
+fairness, and ``--deadline-slack`` attaches SLOs that steer the
+deadline-cost preemption policy.  ``--shared-frac`` controls what
+fraction of requests reuse one of a few base prompts (possibly
+extended), exercising COW prefix sharing the way parallel sampling /
+few-shot serving does.
 """
 
 from __future__ import annotations
@@ -14,30 +23,22 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
 import jax
 
 from repro.configs.base import get_config
 from repro.models.api import build_model
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine
+from repro.serve.scheduler import FairAdmission
+from repro.serve.traffic import TRACE_KINDS, make_trace
 
 
-def make_traffic(rng, n, vocab, max_seq, shared_frac=0.0, n_bases=2):
-    """Synthetic prompts; ``shared_frac`` of them share block prefixes."""
-    cap = min(32, max_seq // 2)
-    bases = [rng.randint(2, vocab, size=int(rng.randint(cap // 2, cap)))
-             for _ in range(n_bases)]
-    prompts = []
-    for _ in range(n):
-        if rng.rand() < shared_frac:
-            b = bases[int(rng.randint(len(bases)))]
-            extra = int(rng.randint(0, 6))
-            prompts.append(np.concatenate(
-                [b, rng.randint(2, vocab, size=extra)]) if extra else b.copy())
-        else:
-            prompts.append(rng.randint(2, vocab,
-                                       size=int(rng.randint(4, cap))))
-    return prompts
+def _budget(v: str):
+    """``--prefill-budget``: a positive int, 'auto', or 'none'."""
+    if v == "auto":
+        return "auto"
+    if v in ("none", "None"):
+        return None
+    return int(v)
 
 
 def main(argv=None):
@@ -49,11 +50,26 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--num-blocks", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--trace", choices=TRACE_KINDS, default="poisson",
+                    help="arrival shape fed to Engine.serve (virtual "
+                         "step-clock arrivals; seeded and replayable)")
+    ap.add_argument("--mean-gap", type=float, default=2.0,
+                    help="mean inter-arrival gap in engine steps")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="requests assigned round-robin across tenants")
+    ap.add_argument("--policy", choices=("fcfs", "fair"), default="fcfs",
+                    help="admission order: FCFS (pinned default) or "
+                         "per-tenant deficit-round-robin fairness")
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    help="attach deadline = arrival + slack * max_new "
+                         "(steers deadline-cost preemption)")
     ap.add_argument("--watermark", type=int, default=None,
                     help="free blocks kept as growth headroom (default: "
                          "adaptive from the observed growth EWMA)")
-    ap.add_argument("--prefill-budget", type=int, default=None,
-                    help="max prompt tokens prefilled per step")
+    ap.add_argument("--prefill-budget", type=_budget, default="auto",
+                    help="max prompt tokens prefilled per step: an int, "
+                         "'auto' (adaptive from measured latency; the "
+                         "default) or 'none' (unlimited)")
     ap.add_argument("--no-overlap", action="store_true",
                     help="synchronous transfers (drain per enqueue) "
                          "instead of the double-buffered schedule")
@@ -72,18 +88,23 @@ def main(argv=None):
                  num_blocks=args.num_blocks, eos_id=-1,
                  watermark=args.watermark,
                  prefill_budget=args.prefill_budget,
+                 admission_policy=(FairAdmission() if args.policy == "fair"
+                                   else None),
                  overlap_transfers=not args.no_overlap)
-    rng = np.random.RandomState(args.seed)
-    prompts = make_traffic(rng, args.requests, cfg.vocab_size, args.max_seq,
-                           shared_frac=args.shared_frac)
-    for i, pr in enumerate(prompts):
-        eng.submit(Request(rid=i, prompt=pr, max_new=args.max_new))
+    source = make_trace(args.trace, args.requests, cfg.vocab_size,
+                        seed=args.seed, mean_gap=args.mean_gap,
+                        tenants=args.tenants, max_new=args.max_new,
+                        prompt_cap=min(32, args.max_seq // 2),
+                        shared_frac=args.shared_frac,
+                        deadline_slack=args.deadline_slack)
     t0 = time.time()
-    done = eng.run(max_steps=10_000)
+    done = eng.serve(source, max_steps=100_000)
     dt = time.time() - t0
     st = eng.stats
     toks = sum(len(r.generated) for r in done)
-    print(f"served {len(done)}/{args.requests} requests, {toks} tokens in "
+    print(f"served {len(done)}/{args.requests} requests "
+          f"({args.trace} arrivals, {args.tenants} tenants, "
+          f"{args.policy} admission), {toks} tokens in "
           f"{dt:.1f}s ({toks / max(dt, 1e-9):.1f} tok/s), "
           f"{eng.steps} engine steps, final pool util "
           f"{eng.mgr.utilization:.0%}")
@@ -97,6 +118,13 @@ def main(argv=None):
           f"{tr['overlapped']['h2d']} prefetch scatters overlapped decode "
           f"({st['prefetch_hits']} resumes served from prefetch), "
           f"effective watermark {st['watermark_effective']}")
+    for tenant, row in eng.latency_report().items():
+        def fmt(v):
+            return "n/a" if v is None else f"{v:.1f}"
+        print(f"  {tenant}: {row['requests']} requests, TTFT p50/p99 "
+              f"{fmt(row['ttft_p50_ms'])}/{fmt(row['ttft_p99_ms'])} ms, "
+              f"ITL p50/p99 {fmt(row['itl_p50_ms'])}/"
+              f"{fmt(row['itl_p99_ms'])} ms")
     return done
 
 

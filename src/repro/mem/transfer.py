@@ -618,20 +618,36 @@ class QueueSet:
         host copies to the next ``complete_dispatched``/``drain`` (the
         double-buffer half of the step loop).  ``lanes`` restricts to a
         lane subset (the step loop dispatches the background prefetch
-        lane separately, after the urgent critical path)."""
+        lane separately, after the urgent critical path).
+
+        Empty-lane fast path: when no pending plan matches the lane
+        filter there is nothing to launch, release or unblock -- skip
+        the fixpoint entirely (and the ``dispatches`` counter, so the
+        stat counts scheduling WORK, not step-loop calls: the serving
+        loop dispatches 2+ lanes every step, overwhelmingly no-ops).
+        """
+        lane_set = None if lanes is None else set(lanes)
+        if not any(lane_set is None or p.lane in lane_set
+                   for eng in self.engines.values() for p in eng._pending):
+            return
         self.stats.dispatches += 1
         self._run_dispatch(self._closure(upto), lanes)
 
     def complete_dispatched(self, upto: Optional[Dict[str, int]] = None
                             ) -> None:
-        """Fence phase: land every launched-but-uncopied d2h payload."""
+        """Fence phase: land every launched-but-uncopied d2h payload.
+        Skipped (no counter) when nothing was dispatched."""
+        if not self.engines[D2H]._dispatched:
+            return
         self.stats.fences += 1
         self._run_complete(upto)
 
     def drain(self, upto: Optional[Dict[str, int]] = None) -> None:
         """Synchronous fallback: execute everything (or the fenced
         epoch-vector prefix, expanded to its cross-queue dependency
-        closure) now."""
+        closure) now.  Skipped (no counter) when the plane is empty."""
+        if self.pending == 0:
+            return
         self.stats.drains += 1
         limits = self._closure(upto)
         self._run_dispatch(limits, None)

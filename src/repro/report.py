@@ -129,6 +129,52 @@ def fmt_transfer_table(tr: Dict) -> str:
     return "\n".join(out)
 
 
+def fmt_tenant_latency_table(doc: Dict) -> str:
+    """Render the request plane's per-tenant latency section
+    (``tenant_latency`` + ``arrival_trace`` of BENCH_serve.json).
+
+    Degrades gracefully on pre-request-plane snapshots that lack the
+    section entirely, and on tenants whose percentile values are null
+    (too few tokens to measure): both render as "n/a", never KeyError.
+    """
+    out = ["| tenant | requests | TTFT p50 (ms) | TTFT p99 (ms) | "
+           "ITL p50 (ms) | ITL p99 (ms) |",
+           "|---|---|---|---|---|---|"]
+
+    def cell(v):
+        return "n/a" if v is None else f"{v:.2f}"
+
+    tl = doc.get("tenant_latency")
+    if not tl:
+        out.append("| n/a | n/a | n/a | n/a | n/a | n/a |")
+        out.append("")
+        out.append("no per-tenant section in this snapshot "
+                   "(pre-request-plane BENCH_serve.json)")
+        return "\n".join(out)
+    for tenant in sorted(tl):
+        r = tl[tenant]
+        out.append(f"| {tenant} | {r.get('requests', 'n/a')} | "
+                   f"{cell(r.get('ttft_p50_ms'))} | "
+                   f"{cell(r.get('ttft_p99_ms'))} | "
+                   f"{cell(r.get('itl_p50_ms'))} | "
+                   f"{cell(r.get('itl_p99_ms'))} |")
+    tr = doc.get("arrival_trace") or {}
+    out.append("")
+    out.append(f"arrival trace: {tr.get('kind', 'n/a')} "
+               f"(seed {tr.get('seed', 'n/a')}, "
+               f"{tr.get('requests', 'n/a')} requests over "
+               f"{tr.get('tenants', 'n/a')} tenants, mean gap "
+               f"{tr.get('mean_gap_steps', 'n/a')} steps)")
+    hist = doc.get("latency_histogram") or {}
+    if hist.get("counts"):
+        edges, counts = hist.get("edges_ms", []), hist["counts"]
+        buckets = " ".join(
+            f"[{edges[i]:.0f},{edges[i + 1]:.0f}):{c}"
+            for i, c in enumerate(counts) if i + 1 < len(edges))
+        out.append(f"TTFT histogram (ms): {buckets}")
+    return "\n".join(out)
+
+
 def main(path: str) -> None:
     if path.endswith(".json"):
         with open(path) as f:
@@ -142,6 +188,8 @@ def main(path: str) -> None:
         if transfers:
             print("\n### Transfer plane (TransferStats)\n")
             print(fmt_transfer_table(transfers))
+        print("\n### Request plane: per-tenant latency\n")
+        print(fmt_tenant_latency_table(doc))
         return
     rows = load(path)
     print("### Single-pod (16x16 = 256 chips)\n")

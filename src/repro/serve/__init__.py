@@ -1,9 +1,14 @@
 """Layered serving stack: policy (scheduler) / host store (swap) /
-mechanism (engine).  See serve/README.md for the layering contract."""
+mechanism (engine) / arrivals (traffic).  See serve/README.md for the
+layering contract."""
 
 from repro.serve.engine import Engine
-from repro.serve.scheduler import Request, Scheduler, StepPlan
+from repro.serve.scheduler import (AdmissionPolicy, FairAdmission,
+                                   FCFSAdmission, Request, Scheduler,
+                                   StepPlan)
 from repro.serve.swap import HostBlockStore, SwapStats
+from repro.serve.traffic import RequestSource, make_trace
 
 __all__ = ["Engine", "Request", "Scheduler", "StepPlan",
-           "HostBlockStore", "SwapStats"]
+           "AdmissionPolicy", "FCFSAdmission", "FairAdmission",
+           "HostBlockStore", "SwapStats", "RequestSource", "make_trace"]

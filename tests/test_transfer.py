@@ -27,7 +27,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.mem import (Arena, BACKGROUND, D2D, D2H, H2D, IN_FLIGHT,
-                       OutOfBlocksError, UnfencedReadError)
+                       URGENT, OutOfBlocksError, UnfencedReadError)
 from _hypothesis_compat import given, settings, strategies as st
 
 REPO = Path(__file__).resolve().parents[1]
@@ -104,6 +104,47 @@ def contents(cell, ids):
 # ---------------------------------------------------------------------------
 # fences / eager mode / holds
 # ---------------------------------------------------------------------------
+def test_empty_dispatch_phases_are_skipped():
+    """Dispatch-count pin (first bite of the ROADMAP overlap gap: the
+    step loop used to run ~49 fixpoint dispatches for 2 actual
+    transfers at smoke scale).  A dispatch / fence / drain phase with
+    nothing eligible must skip the fixpoint entirely and count
+    NOTHING: the counters measure scheduling work, not step-loop
+    calls."""
+    a, cell = make_executor_arena()
+    q = a.transfers
+    # an idle step loop's worth of empty phases: all skipped
+    for _ in range(25):
+        q.dispatch()
+        q.dispatch(lanes=(URGENT,))
+        q.dispatch(lanes=(BACKGROUND,))
+        q.complete_dispatched()
+        q.drain()
+    assert (q.stats.dispatches, q.stats.fences, q.stats.drains) == (0, 0, 0)
+
+    # two real transfers cost exactly one phase each, no matter how
+    # many no-op phases the loop schedules around them
+    m = a.mapping(CLS, owner=0)
+    m.ensure_capacity(2)
+    write_blocks(a, cell, m, 5.0)      # its dispatch() is empty: skipped
+    m.migrate("host")
+    q.dispatch(lanes=(BACKGROUND,))    # wrong lane: still nothing to do
+    assert q.stats.dispatches == 0
+    q.dispatch()                       # launches the d2h gather
+    q.dispatch()                       # nothing newly pending: skipped
+    assert q.stats.dispatches == 1
+    q.complete_dispatched()            # lands the host copy
+    q.complete_dispatched()            # nothing dispatched: skipped
+    assert q.stats.fences == 1
+    assert a.host_contains(CLS, 0)
+    m.migrate("device")                # enqueues the h2d scatter
+    q.drain()
+    q.drain()                          # plane empty again: skipped
+    assert q.stats.drains == 1
+    m.free()
+    a.assert_quiescent()
+
+
 def test_fence_epochs_and_drain():
     a, cell = make_executor_arena()
     m = a.mapping(CLS, owner=0)
