@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import block_copy as _bc
 from repro.kernels import paged_attention as _pa
+from repro.kernels import paged_prefill as _pp
 from repro.kernels import tree_gather as _tg
 from repro.kernels import ref as kref
 
@@ -60,6 +61,23 @@ def paged_attention(q, k_pool, v_pool, block_tables, seq_lens,
         interpret=_use_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "window", "v_dim", "q_chunk", "interpret"))
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, kv_lens,
+                            q_starts,
+                            scale: Optional[float] = None,
+                            softcap: Optional[float] = None,
+                            window: Optional[int] = None,
+                            v_dim: Optional[int] = None,
+                            q_chunk: Optional[int] = None,
+                            interpret: Optional[bool] = None):
+    """Suffix prefill attention through the block table (COW sharing)."""
+    return _pp.paged_prefill_attention(
+        q, k_pool, v_pool, block_tables, kv_lens, q_starts, scale=scale,
+        softcap=softcap, window=window, v_dim=v_dim, q_chunk=q_chunk,
+        interpret=_use_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
 def block_copy(pool, src, dst, interpret: Optional[bool] = None):
     return _bc.block_copy(pool, src, dst,
@@ -93,3 +111,4 @@ tree_gather_ref = kref.tree_gather_ref
 tree_block_sum_ref = kref.tree_block_sum_ref
 tree_gather_rows_ref = kref.tree_gather_rows_ref
 paged_attention_ref = kref.paged_attention_ref
+paged_prefill_attention_ref = kref.paged_prefill_attention_ref

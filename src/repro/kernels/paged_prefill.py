@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: suffix prefill attention over a paged KV cache.
+
+The COW-sharing companion of ``paged_attention``: when a forked request
+aliases a cached prefix, only the un-cached *suffix* tokens are
+prefilled, and their queries attend to the whole sequence -- the shared
+prefix blocks included -- THROUGH the block table.  Prefix sharing then
+saves FLOPs, not just memory (the paper's sharing row extended from
+bytes to compute).
+
+Queries are chunked over the suffix (``q_chunk`` tokens per grid step);
+KV is gathered block-by-block through the same scalar-prefetch tables as
+the decode sweep, with causal masking offset by the cached length: the
+query at suffix index ``i`` of row ``b`` sits at absolute position
+``q_starts[b] + i`` and sees kv positions ``<= q_starts[b] + i``.  The
+suffix's own KV must already be IN the pool (the caller scatters it
+before attending -- aliased blocks already hold the parent's identical
+values), so one sweep covers prefix and suffix uniformly.
+
+Grid: ``(batch, kv_heads, num_q_chunks, max_blocks_per_seq)``; the last
+axis is the sequential flash sweep with running (m, l, acc) scratch per
+query chunk.  Blocks past ``ceil(kv_len / bt)`` and query rows past the
+suffix are fully masked (l == 0 -> output 0), matching the reference.
+
+Supports GQA/MQA, logit softcap and sliding window exactly like the
+decode kernel (window per QUERY row: ``kv_pos > q_abs - window``, the
+``flash_attention`` convention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+_NEG = -1e30
+
+
+def _paged_prefill_kernel(tables_ref, lens_ref, starts_ref, q_ref, k_ref,
+                          v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                          block_tokens: int, q_chunk: int, groups: int,
+                          scale: float, softcap: Optional[float],
+                          window: Optional[int], num_blocks_grid: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    QG = q_chunk * groups
+    q = q_ref[0, :, 0].astype(jnp.float32).reshape(QG, -1)  # (QC*G, HD)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (BT, HD)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)               # (BT, VD)
+
+    s = jax.lax.dot_general(q * scale, k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (QG, BT)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kv_pos = (j * block_tokens
+              + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    q_abs = (starts_ref[b] + i * q_chunk
+             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // groups)
+    valid = jnp.logical_and(kv_pos <= q_abs, kv_pos < lens_ref[b])
+    if window is not None:
+        valid = jnp.logical_and(valid, kv_pos > q_abs - window)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_scr[...]                          # (QG, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new) * valid               # masked rows: l stays 0
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == num_blocks_grid - 1)
+    def _fin():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(q_chunk, groups, -1).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            kv_lens: jax.Array, q_starts: jax.Array, *,
+                            scale: Optional[float] = None,
+                            softcap: Optional[float] = None,
+                            window: Optional[int] = None,
+                            v_dim: Optional[int] = None,
+                            q_chunk: Optional[int] = None,
+                            interpret: bool = False) -> jax.Array:
+    """Suffix-chunk flash attention over paged KV.
+
+    q           : (B, SQ, KVH, G, HD) suffix queries; row b's query i
+                  sits at absolute position q_starts[b] + i
+    k_pool      : (NB, BT, KVH, HD) -- suffix KV already written
+    v_pool      : (NB, BT, KVH, VD)
+    block_tables: (B, MB) int32 (NULL entries allowed past seq end)
+    kv_lens     : (B,) int32 total tokens visible (cached + suffix)
+    q_starts    : (B,) int32 cached length (first suffix position)
+    returns     : (B, SQ, KVH, G, VD)
+    """
+    B, SQ, KVH, G, HD = q.shape
+    NB, BT, KVH_k, HD_k = k_pool.shape
+    assert KVH_k == KVH and HD_k == HD, (q.shape, k_pool.shape)
+    MB = block_tables.shape[1]
+    VD = v_dim if v_dim is not None else v_pool.shape[-1]
+    if scale is None:
+        scale = HD ** -0.5
+    QC = SQ if q_chunk is None else min(q_chunk, SQ)
+    assert SQ % QC == 0, (SQ, QC)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, block_tokens=BT, q_chunk=QC, groups=G,
+        scale=float(scale), softcap=softcap, window=window,
+        num_blocks_grid=MB)
+
+    def kv_map(b, h, i, j, tbl, lens, starts):
+        return (jnp.maximum(tbl[b, j], 0), 0, h, 0)
+
+    def q_map(b, h, i, j, tbl, lens, starts):
+        return (b, i, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KVH, SQ // QC, MB),
+        in_specs=[
+            pl.BlockSpec((1, QC, 1, G, HD), q_map),
+            pl.BlockSpec((1, BT, 1, HD), kv_map),
+            pl.BlockSpec((1, BT, 1, VD), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, QC, 1, G, VD), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((QC * G, 1), jnp.float32),
+            pltpu.VMEM((QC * G, 1), jnp.float32),
+            pltpu.VMEM((QC * G, VD), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, SQ, KVH, G, VD), q.dtype),
+        interpret=interpret,
+    )(block_tables, kv_lens, q_starts, q, k_pool, v_pool)

@@ -59,3 +59,51 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_tables: jax.Array,
+                                kv_lens: jax.Array, q_starts: jax.Array, *,
+                                scale: Optional[float] = None,
+                                softcap: Optional[float] = None,
+                                window: Optional[int] = None,
+                                v_dim: Optional[int] = None) -> jax.Array:
+    """Dense-gather suffix prefill attention.
+
+    Query i of row b sits at absolute position q_starts[b] + i and
+    attends causally to kv positions <= that, bounded by kv_lens[b]
+    (window, when set, uses the flash convention kv > q - window).
+    Shapes as in kernels.paged_prefill.
+    """
+    B, SQ, KVH, G, HD = q.shape
+    NB, BT, _, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    VD = v_dim if v_dim is not None else v_pool.shape[-1]
+    if scale is None:
+        scale = HD ** -0.5
+
+    tbl = jnp.maximum(block_tables, 0)
+    k = k_pool[tbl].reshape(B, MB * BT, KVH, HD)      # (B, S, KVH, HD)
+    v = v_pool[tbl].reshape(B, MB * BT, KVH, -1)[..., :VD]
+
+    s = jnp.einsum("bqhgd,bshd->bhgqs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.arange(MB * BT)[None, None, :]        # (1, 1, S)
+    q_abs = (q_starts[:, None] + jnp.arange(SQ)[None, :])[:, :, None]
+    valid = jnp.logical_and(kv_pos <= q_abs,
+                            kv_pos < kv_lens[:, None, None])
+    if window is not None:
+        valid = jnp.logical_and(valid, kv_pos > q_abs - window)
+    vmask = valid[:, None, None, :, :]
+    s = jnp.where(vmask, s, _NEG)
+    # masked normalization (not jax.nn.softmax): a fully-masked query row
+    # -- possible for padding rows past the suffix under a tight window --
+    # yields 0, matching the kernel's l == 0 convention.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * vmask
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -174,6 +174,18 @@ class TransferPlan:                        # queue entries, not values
     _held: list = dataclasses.field(default_factory=list, repr=False)
     _flagged: list = dataclasses.field(default_factory=list, repr=False)
 
+    def __post_init__(self):
+        # conflict sets, computed ONCE here instead of per plan per
+        # dispatch round (src/dst are frozen after construction): the
+        # per-phase walk and the enqueue-time dependency scan both read
+        # these instead of rebuilding Python sets in the hot loop
+        self._src_ids = (frozenset(int(b) for b in self.src)
+                         if self.src is not None else frozenset())
+        self._dst_ids = (frozenset(int(b) for b in self.dst)
+                         if self.dst is not None else frozenset())
+        self._skey = frozenset((self.pool_class, b) for b in self._src_ids)
+        self._dkey = frozenset((self.pool_class, b) for b in self._dst_ids)
+
 
 def _zeroed() -> Dict[str, int]:
     return {d: 0 for d in DIRECTIONS}
@@ -207,21 +219,25 @@ class TransferStats:
     prefetch_completed: int = 0    # speculative plans that executed
     prefetch_committed: int = 0    # commits (mapping promoted to device)
     prefetch_cancelled: int = 0
+    #: Python-side overhead accounting (the PR 7 de-Pythonization
+    #: target): ``python_launches`` counts per-plan visits in the
+    #: dispatch walk -- the inner-loop bookkeeping the step loop pays in
+    #: the interpreter; ``dispatches_per_step`` is ``dispatches`` per
+    #: compute mark, refreshed on every ``note_compute()``.
+    python_launches: int = 0
+    dispatches_per_step: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
 
-def _ids(vec: Optional[np.ndarray]) -> Set[int]:
-    return set() if vec is None else {int(b) for b in vec}
-
-
 def _conflicts(earlier: TransferPlan, src: Set[int], dst: Set[int]) -> bool:
     """Must ``earlier`` execute before a plan reading ``src`` / writing
     ``dst`` of the same pool class?  Write-read, read-write and
-    write-write order; read-read does not."""
-    e_src, e_dst = _ids(earlier.src), _ids(earlier.dst)
-    return bool(e_dst & (src | dst)) or bool(e_src & dst)
+    write-write order; read-read does not.  Uses the conflict sets
+    precomputed at plan construction, not a fresh set walk."""
+    return (bool(earlier._dst_ids & (src | dst))
+            or bool(earlier._src_ids & dst))
 
 
 class TransferEngine:
@@ -324,6 +340,8 @@ class QueueSet:
         before this mark and completed/committed after it genuinely
         overlapped compute (the per-engine ``overlapped`` stats)."""
         self._compute_marks += 1
+        self.stats.dispatches_per_step = round(
+            self.stats.dispatches / self._compute_marks, 4)
 
     # ---------------- queries ----------------
     @property
@@ -502,7 +520,7 @@ class QueueSet:
         the FIFO plus the blocked-set scan in ``_engine_pass`` keep
         conflicting same-engine plans ordered.
         """
-        src, dst = _ids(plan.src), _ids(plan.dst)
+        src, dst = plan._src_ids, plan._dst_ids
         for d, eng in self.engines.items():
             if d == plan.direction:
                 continue
@@ -683,24 +701,40 @@ class QueueSet:
         progress.  Dependencies point backwards in enqueue time, so the
         loop terminates.  The d2h engine goes first each round so
         independent gathers launch ahead of the copies/scatters they do
-        not depend on (the reorder window)."""
+        not depend on (the reorder window).
+
+        Each pass also reports how many in-scope plans it left behind:
+        when every engine comes back empty the fixpoint is reached and
+        the loop exits WITHOUT the classic extra no-progress
+        verification round -- the common single-phase step pays exactly
+        one walk per engine (the ``python_launches`` stat counts the
+        per-plan visits those walks cost)."""
         lanes = None if lanes is None else set(lanes)
         while True:
-            progressed = False
+            progressed, remaining = False, 0
             for d in (D2H, D2D, H2D):
-                progressed |= self._engine_pass(d, limits, lanes)
-            if not progressed:
+                prog, left = self._engine_pass(d, limits, lanes)
+                progressed |= prog
+                remaining += left
+            if not remaining or not progressed:
                 break
 
     def _engine_pass(self, direction: str,
                      limits: Optional[Dict[str, int]],
-                     lanes: Optional[Set[str]]) -> bool:
+                     lanes: Optional[Set[str]]) -> Tuple[bool, int]:
         """One scheduling pass over one engine's FIFO: batch and run
         every eligible plan; skipped plans (lane-filtered, beyond the
         fence limit, or waiting on another engine) block exactly the
         later plans that conflict with them -- independent plans
         execute PAST them, which is what lets d2h gathers coalesce
-        across an intervening dependency."""
+        across an intervening dependency.
+
+        Eligibility reads the conflict keys precomputed at plan
+        construction (``_skey``/``_dkey``) -- the walk does no per-plan
+        set building.  Returns ``(progressed, remaining)`` where
+        ``remaining`` counts in-scope (lane-matched, within-limit)
+        plans still pending, so the fixpoint driver can stop the moment
+        the FIFOs are clear instead of running one more empty round."""
         eng = self.engines[direction]
         limit = None if limits is None else limits[direction]
         blocked_src: Set[Tuple[str, int]] = set()   # (pool_class, block)
@@ -709,6 +743,7 @@ class QueueSet:
         batch: List[TransferPlan] = []
         batch_dsts: Set[Tuple[str, int]] = set()
         progressed = False
+        remaining = 0
 
         def flush():
             nonlocal progressed, batch, batch_dsts
@@ -732,10 +767,10 @@ class QueueSet:
         for plan in list(eng._pending):
             if limit is not None and plan.seqno > limit:
                 break                      # FIFO is seqno-ordered
-            src, dst = _ids(plan.src), _ids(plan.dst)
-            skey = {(plan.pool_class, b) for b in src}
-            dkey = {(plan.pool_class, b) for b in dst}
-            eligible = (lanes is None or plan.lane in lanes) \
+            self.stats.python_launches += 1
+            skey, dkey = plan._skey, plan._dkey
+            in_lane = lanes is None or plan.lane in lanes
+            eligible = in_lane \
                 and not (skey & blocked_dst) \
                 and not (dkey & (blocked_dst | blocked_src)) \
                 and self._deps_settled(plan)
@@ -744,6 +779,8 @@ class QueueSet:
                 blocked_dst |= dkey
                 if skipped_min is None:
                     skipped_min = plan.seqno
+                if in_lane:
+                    remaining += 1
                 continue
             if batch and (plan.pool_class != batch[0].pool_class
                           or (skey & batch_dsts) or (dkey & batch_dsts)):
@@ -753,7 +790,7 @@ class QueueSet:
             batch.append(plan)
             batch_dsts |= dkey
         flush()
-        return progressed
+        return progressed, remaining
 
     def _deps_settled(self, plan: TransferPlan) -> bool:
         """Launch-strength deps must have left PENDING; complete-

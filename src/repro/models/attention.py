@@ -148,6 +148,107 @@ def gqa_decode(p: Params, x: jax.Array, cfg: ModelConfig,
     return y, (k_new, v_new)
 
 
+def _scatter_span(pool_l, kv, write_tables, bt: int, dp_groups: int = 1):
+    """Scatter a block-aligned token span into the pool.
+
+    kv: (B, SQ, KVH, hd) with SQ % bt == 0; write_tables: (B, SQ // bt)
+    physical block ids.  Aliased (COW-shared) and padding positions carry
+    the sink block id: those writes land in the sink block and are never
+    read back.  Group-batched when dp_groups > 1.
+    """
+    B, SQ = kv.shape[:2]
+    nb = SQ // bt
+    val = kv.astype(pool_l.dtype).reshape(B, nb, bt, *kv.shape[2:])
+    if dp_groups <= 1:
+        return pool_l.at[write_tables.reshape(B * nb)].set(
+            val.reshape(B * nb, bt, *kv.shape[2:]))
+    NBl = pool_l.shape[0] // dp_groups
+    Bl = B // dp_groups
+    pg = pool_l.reshape(dp_groups, NBl, *pool_l.shape[1:])
+    out = jax.vmap(lambda pl, tb, vv: pl.at[tb].set(vv))(
+        pg, write_tables.reshape(dp_groups, Bl * nb),
+        val.reshape(dp_groups, Bl * nb, bt, *kv.shape[2:]))
+    return out.reshape(pool_l.shape)
+
+
+def gqa_prefill_paged(p: Params, x: jax.Array, cfg: ModelConfig,
+                      k_pool: jax.Array, v_pool: jax.Array,
+                      block_tables: jax.Array, kv_lens: jax.Array,
+                      q_starts: jax.Array, write_tables: jax.Array, *,
+                      window: Optional[jax.Array] = None, rope_theta=None,
+                      dp_groups: int = 1):
+    """Suffix-only prefill against the paged pool (COW prefix sharing).
+
+    x: (B, SQ, d) hiddens of the un-cached suffix; row b's token i sits
+    at absolute position q_starts[b] + i.  The suffix's KV is scattered
+    into the pool FIRST (through ``write_tables`` -- sink where the block
+    is aliased from the parent, which already holds identical values),
+    then every suffix query attends *through the block table* to the
+    whole prefix+suffix with causal masking offset by the cached length.
+    Prefix sharing thereby saves FLOPs, not just bytes.
+
+    Returns (y (B, SQ, d), (k_pool, v_pool) updated).  On TPU the Pallas
+    ``kernels.paged_prefill`` kernel implements the same contract (tests
+    assert equality); this reference path is what the dry-run lowers.
+    """
+    B, SQ, _ = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.kv_heads, cfg.hd
+    bt = k_pool.shape[1]
+    positions = q_starts[:, None] + jnp.arange(SQ)[None, :]
+    q, k, v = _gqa_qkv(p, x, cfg, positions, rope_theta)
+    k_pool = _scatter_span(k_pool, k, write_tables, bt, dp_groups)
+    v_pool = _scatter_span(v_pool, v, write_tables, bt, dp_groups)
+    qh = q.reshape(B, SQ, KVH, H // KVH, hd)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    o = _paged_prefill_ref(qh, k_pool, v_pool, block_tables, kv_lens,
+                           positions, scale=scale, softcap=cfg.attn_softcap,
+                           window=window, dp_groups=dp_groups)
+    y = o.reshape(B, SQ, H * hd).astype(x.dtype) @ p["wo"]
+    return y, (k_pool, v_pool)
+
+
+def _paged_prefill_ref(q, k_pool, v_pool, block_tables, kv_lens, positions, *,
+                       scale: float, softcap: Optional[float],
+                       window: Optional[jax.Array],
+                       v_dim: Optional[int] = None, dp_groups: int = 1):
+    """Reference suffix-prefill attention through the block table.
+
+    q: (B, SQ, KVH, G, Dk); positions: (B, SQ) absolute query positions.
+    Same masking conventions as ``_paged_ref`` but causal per query row
+    (kv <= q) with the window anchored at each query (kv > q - window,
+    traced scalar, 0 => global).  Fully-masked rows return 0.
+    """
+    B, SQ, KVH, G, Dk = q.shape
+    NB, BT = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    Dv = v_dim if v_dim is not None else v_pool.shape[-1]
+
+    tbl = jnp.maximum(block_tables, 0)
+    k = _grouped_gather(k_pool, tbl, dp_groups).reshape(B, MB * BT, KVH, -1)
+    v = _grouped_gather(v_pool, tbl, dp_groups
+                        ).reshape(B, MB * BT, KVH, -1)[..., :Dv]
+    s = jnp.einsum("bqhgd,bshd->bhgqs", (q * scale).astype(k.dtype), k,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.arange(MB * BT)[None, None, :]
+    q_abs = positions[:, :, None]                     # (B, SQ, 1)
+    valid = jnp.logical_and(kv_pos <= q_abs,
+                            kv_pos < kv_lens[:, None, None])
+    if window is not None:
+        lo = jnp.where(window > 0, q_abs - window + 1, -1)
+        valid &= kv_pos >= lo
+    validb = valid[:, None, None, :, :]               # (B,1,1,SQ,S)
+    s = jnp.where(validb, s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    pr = jnp.exp(s - m) * validb
+    l = jnp.sum(pr, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bqhgd",
+                   (pr / jnp.maximum(l, 1e-30)).astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o
+
+
 def _grouped_gather(pool, tbl, dp_groups: int):
     """pool (NB, BT, ...), tbl (B, MB) of group-LOCAL ids when dp_groups>1.
 

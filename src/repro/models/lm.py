@@ -76,6 +76,11 @@ class DecoderLM:
         self.is_moe = cfg.moe is not None
         self.n_dense = cfg.moe.first_dense_layers if self.is_moe else 0
         self.n_scan = cfg.num_layers - self.n_dense
+        # jitted serving callables (decode_step / prefill / prefill_suffix).
+        # jax.jit's signature cache keys the traces by input shape, i.e.
+        # by (batch, padded seq, table width) bucket; the engine pads its
+        # batches so steady-state steps always hit a warm trace.
+        self._jit_cache: Dict[str, Any] = {}
 
     # ---------------- params ----------------
     def _init_layer(self, rng, moe_layer: bool):
@@ -289,9 +294,35 @@ class DecoderLM:
         return write_token_paged(pool_l, kv_new, tables, seq_lens, bt,
                                  dp_groups)
 
+    @property
+    def supports_suffix_prefill(self) -> bool:
+        """Suffix-only prefill reads prefix KV through the block table --
+        implemented for the GQA/MQA pool layout; MLA falls back to full
+        recompute."""
+        return self.cfg.attention != "mla"
+
+    def _jitted(self, name: str, fn):
+        """One jitted trace per serving entry point, shared by EVERY
+        caller (engine and reference decoders alike) so token-identity
+        comparisons never cross a jit/eager numerics boundary.  The
+        PagedKVCache argument (position 2 in all three) is donated: its
+        pool buffers are reused in place on backends that support it."""
+        j = self._jit_cache.get(name)
+        if j is None:
+            j = jax.jit(fn, donate_argnums=(2,))
+            self._jit_cache[name] = j
+        return j
+
     def decode_step(self, p: Params, tokens: jax.Array,
                     cache: PagedKVCache):
-        """tokens: (B,) -> (logits (B, V), updated cache)."""
+        """tokens: (B,) -> (logits (B, V), updated cache).  Runs the
+        cached jitted trace -- steady-state decode is one Python dispatch
+        into a warm executable."""
+        return self._jitted("decode_step", self._decode_step_impl)(
+            p, tokens, cache)
+
+    def _decode_step_impl(self, p: Params, tokens: jax.Array,
+                          cache: PagedKVCache):
         cfg = self.cfg
         bt = cache.config.block_tokens
         x = p["embed"][tokens]
@@ -390,8 +421,13 @@ class DecoderLM:
         """Run the forward pass and write the whole prompt's KV stream.
 
         batch["tokens"]: (B, S) block-aligned.  Returns (last_logits,
-        cache with seq_lens = lengths).
+        cache with seq_lens = lengths).  Jit-cached per (B, S) bucket.
         """
+        return self._jitted("prefill", self._prefill_impl)(
+            p, batch, cache, lengths)
+
+    def _prefill_impl(self, p: Params, batch: Dict[str, jax.Array],
+                      cache: PagedKVCache, lengths: jax.Array):
         cfg = self.cfg
         logits, _, kv_stack = self.forward(p, batch, collect_kv=True)
         if self.n_dense:
@@ -412,6 +448,87 @@ class DecoderLM:
         else:
             cache = cache.write_prefill(k_all, v_all, lengths)
         idx = jnp.maximum(lengths - 1, 0)
+        last = jnp.take_along_axis(
+            logits, idx[:, None, None], axis=1)[:, 0]
+        return last, cache
+
+    def prefill_suffix(self, p: Params, tokens: jax.Array,
+                       cache: PagedKVCache, lengths: jax.Array,
+                       starts: jax.Array, write_tables: jax.Array):
+        """Suffix-only prefill: run the forward pass over just the
+        un-cached tail of each prompt, attending through the block table
+        to the COW-shared prefix blocks.  Jit-cached per (B, SQ) bucket.
+
+        tokens: (B, SQ) block-aligned suffix tokens; row b's token i sits
+        at absolute position starts[b] + i (starts block-aligned).
+        lengths: (B,) full prompt lengths.  write_tables: (B, SQ // bt)
+        physical destinations for the suffix KV (sink where the block is
+        aliased from the parent).  Returns (last_logits, cache with
+        seq_lens = lengths).  Requires ``supports_suffix_prefill``.
+        """
+        return self._jitted("prefill_suffix", self._prefill_suffix_impl)(
+            p, tokens, cache, lengths, starts, write_tables)
+
+    def _prefill_suffix_impl(self, p: Params, tokens: jax.Array,
+                             cache: PagedKVCache, lengths: jax.Array,
+                             starts: jax.Array, write_tables: jax.Array):
+        cfg = self.cfg
+        assert cfg.attention != "mla", "suffix prefill is GQA/MQA-only"
+        bt = cache.config.block_tokens
+        x = p["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        x = constrain(x, "batch", None, None)
+        tables = cache.block_tables
+        dp = cache.config.dp_groups
+
+        def layer_suffix(lp, x, k_pool_l, v_pool_l, window, theta):
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps, gemma_style=True)
+            y, (k_pool_l, v_pool_l) = A.gqa_prefill_paged(
+                lp["attn"], h, cfg, k_pool_l, v_pool_l, tables, lengths,
+                starts, write_tables, window=window, rope_theta=theta,
+                dp_groups=dp)
+            if cfg.post_norms:
+                y = rmsnorm(y, lp["ln1_post"], cfg.norm_eps, gemma_style=True)
+            x = x + y
+            h = rmsnorm(x, lp["ln2"], cfg.norm_eps, gemma_style=True)
+            if self.is_moe and "router" in lp["ff"]:
+                y, _ = moe_ffn_dispatch(lp["ff"], h, cfg)
+            else:
+                y = mlp(h, lp["ff"], cfg.mlp)
+            if cfg.post_norms:
+                y = rmsnorm(y, lp["ln2_post"], cfg.norm_eps, gemma_style=True)
+            x = x + y
+            return constrain(x, "batch", None, None), k_pool_l, v_pool_l
+
+        # leading dense layers (deepseek): unscanned
+        for i in range(self.n_dense):
+            lp = jax.tree.map(lambda t: t[i], p["dense_layers"])
+            x, kp, vp = layer_suffix(lp, x, cache.k_pool[i],
+                                     cache.v_pool[i], None, None)
+            cache = dataclasses.replace(
+                cache, k_pool=cache.k_pool.at[i].set(kp),
+                v_pool=cache.v_pool.at[i].set(vp))
+
+        windows, thetas = self._layer_meta("scan")
+
+        # pools thread through the scan as xs -> ys, exactly like decode
+        def body(x, xs):
+            lp, kp, vp, window, theta = xs
+            x, kp, vp = layer_suffix(lp, x, kp, vp, window, theta)
+            return x, (kp, vp)
+
+        xs = (p["layers"], cache.k_pool[self.n_dense:],
+              cache.v_pool[self.n_dense:], windows, thetas)
+        x, pools = jax.lax.scan(body, x, xs)
+        k_new = (cache.k_pool.at[self.n_dense:].set(pools[0])
+                 if self.n_dense else pools[0])
+        v_new = (cache.v_pool.at[self.n_dense:].set(pools[1])
+                 if self.n_dense else pools[1])
+        cache = dataclasses.replace(cache, k_pool=k_new, v_pool=v_new,
+                                    seq_lens=lengths)
+        logits = self._head(p, x)
+        idx = jnp.maximum(lengths - starts - 1, 0)
         last = jnp.take_along_axis(
             logits, idx[:, None, None], axis=1)[:, 0]
         return last, cache

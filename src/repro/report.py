@@ -120,12 +120,23 @@ def fmt_transfer_table(tr: Dict) -> str:
         f"reordered past a blocked plan: {tr.get('reordered', 0)}) · "
         f"dispatches: {tr.get('dispatches', 0)} · "
         f"drains: {tr.get('drains', 0)}")
+    if "python_launches" in tr or "dispatches_per_step" in tr:
+        out.append(
+            f"step-loop overhead: {tr.get('python_launches', 0)} "
+            f"python launches · "
+            f"{tr.get('dispatches_per_step', 0.0)} dispatches/step")
     if tr.get("prefetch_enqueued"):
+        rate = tr.get("prefetch_hit_rate")
+        rate_s = "" if rate is None else f", hit rate {rate:.2f}"
         out.append(
             f"prefetch lane: {tr['prefetch_enqueued']} speculative "
             f"swap-ins ({tr.get('prefetch_completed', 0)} completed, "
             f"{tr.get('prefetch_committed', 0)} committed, "
-            f"{tr.get('prefetch_cancelled', 0)} cancelled)")
+            f"{tr.get('prefetch_cancelled', 0)} cancelled{rate_s})")
+    else:
+        # zero speculative plans ever launched: a hit rate is undefined
+        # (the old snapshots' vacuous 1.0 here was misleading)
+        out.append("prefetch lane: idle (hit rate n/a)")
     return "\n".join(out)
 
 

@@ -114,7 +114,8 @@ class Engine:
                  compact_free_frac: float = 0.5,
                  compact_frag_threshold: float = 0.5,
                  overlap_transfers: bool = True,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 suffix_prefill: bool = True):
         self.model = model
         self.params = params
         self.slots = slots
@@ -144,6 +145,8 @@ class Engine:
                                prefill_budget=prefill_budget,
                                policy=admission_policy,
                                arena=self.arena)
+        # admission/chunking bills suffix tokens only for forked children
+        self.sched.prefill_cost_fn = self._prefill_cost
         self.store = HostBlockStore(self.arena, self.mgr.pool_class)
         self.arena.set_reclaimer(self._reclaim_for_pressure)
         # the transfer plane: this engine is the executor for the KV
@@ -163,6 +166,12 @@ class Engine:
         # on the overlapped schedule -- the eager fallback would
         # serialize the speculation anyway.
         self.prefetch_enabled = prefetch and overlap_transfers
+        # suffix-only prefill for forked children (off = full recompute,
+        # the A/B baseline the bench compares against); requires model
+        # support (MLA's absorbed cache can't attend through raw blocks)
+        self.suffix_prefill = (suffix_prefill and
+                               getattr(model, "supports_suffix_prefill",
+                                       False))
         self.running: Dict[int, Request] = {}   # slot -> req
         self.done: List[Request] = []
         self.share_prefixes = share_prefixes
@@ -174,6 +183,7 @@ class Engine:
         self.cow_copies = 0
         self.preemptions = 0
         self.prefill_tokens = 0
+        self.prefill_tokens_saved = 0  # prefix tokens NOT recomputed
         self.decode_tokens = 0
         self.prefetches = 0        # speculative swap-ins launched
         self.prefetch_hits = 0     # resumes served from a COMPLETED prefetch
@@ -284,6 +294,22 @@ class Engine:
                     return rid, shared
         return None, 0
 
+    def _prefill_cost(self, req: Request) -> int:
+        """Prefill tokens this request will actually compute: the whole
+        prompt, or only the un-cached suffix when a live parent shares
+        its prefix (suffix-only prefill).  Used by the scheduler's
+        admission budget; the plan-time parent lookup predates the same
+        step's other placements, so it can only overestimate."""
+        if not self.suffix_prefill:
+            return req.tokens_held
+        parent, shared = self._find_parent(req)
+        if parent is None or shared <= 0:
+            return req.tokens_held
+        bt = self.cache.config.block_tokens
+        start = (shared if shared < req.tokens_held
+                 else ((req.tokens_held - 1) // bt) * bt)
+        return req.tokens_held - start
+
     # ---------------- admission ----------------
     def _free_slots(self) -> List[int]:
         return [s for s in range(self.slots) if s not in self.running]
@@ -314,6 +340,7 @@ class Engine:
             self._next_tok[slot] = req.pending_tok
             self._place(req, slot)
         batch: List[Tuple[int, Request, int]] = []
+        suffix: List[Tuple[int, Request, int]] = []
         for req in plan.admit:
             slot = free.pop(0)
             parent, shared = self._find_parent(req)
@@ -329,9 +356,16 @@ class Engine:
                 self.mgr.admit(req.rid, len(req.prompt))
                 shared = 0
             self._place(req, slot)
-            batch.append((slot, req, shared))
+            # forked children with a cached prefix take the suffix-only
+            # path (attend through the shared blocks, recompute nothing)
+            if shared > 0 and self.suffix_prefill:
+                suffix.append((slot, req, shared))
+            else:
+                batch.append((slot, req, shared))
         if batch:
             self._batched_prefill(batch)
+        if suffix:
+            self._suffix_prefill(suffix)
 
     def _slot_of(self, rid: int) -> int:
         for slot, req in self.running.items():
@@ -388,6 +422,72 @@ class Engine:
                 # the first token IS the prefill's argmax: TTFT ends here
                 req.t_first = t1
         self.prefill_tokens += sum(lens)
+
+    def _suffix_prefill(self, batch: List[Tuple[int, Request, int]]) -> None:
+        """ONE padded suffix-only prefill call for this step's forked
+        admissions.
+
+        Each row runs the forward pass over just its un-cached suffix
+        (block-aligned: ``_find_parent`` aliases whole blocks); queries
+        attend through the row's FULL block table, so the COW-shared
+        prefix participates in attention without being recomputed --
+        sharing saves FLOPs, not just bytes.  Suffix KV writes route
+        through a per-row write table: sink for aliased blocks (the
+        parent already holds identical values) and padding, the privately
+        owned block otherwise.  A fully-contained fork (prompt inside
+        the parent's) still runs its last block's tail as the suffix to
+        produce first-token logits.  The padded width is bucketed to a
+        power-of-two block count so repeats hit a warm jit trace.
+        """
+        cfg = self.cache.config
+        bt = cfg.block_tokens
+        lens = [req.tokens_held for _, req, _ in batch]
+        starts = [shared if shared < lens[row]
+                  else ((lens[row] - 1) // bt) * bt
+                  for row, (_, _, shared) in enumerate(batch)]
+        nblk = max(-(-(lens[r] - starts[r]) // bt) for r in range(len(batch)))
+        nblk = min(1 << (nblk - 1).bit_length(), cfg.max_blocks_per_seq)
+        S = nblk * bt
+        toks = np.zeros((len(batch), S), np.int64)
+        tables = np.full((len(batch), cfg.max_blocks_per_seq), self.sink,
+                         np.int32)
+        wtables = np.full((len(batch), nblk), self.sink, np.int32)
+        for row, (slot, req, shared) in enumerate(batch):
+            full = np.concatenate([np.asarray(req.prompt, np.int64),
+                                   np.asarray(req.generated, np.int64)])
+            toks[row, : lens[row] - starts[row]] = full[starts[row]:]
+            tbl = self.mgr.device_table(req.rid)
+            keep = tbl != NULL_BLOCK
+            tables[row, keep] = tbl[keep]
+            n_alias = -(-shared // bt)
+            for j in range(nblk):
+                a = starts[row] // bt + j
+                if (a >= n_alias and a < len(tbl) and tbl[a] != NULL_BLOCK
+                        and a * bt < lens[row]):
+                    wtables[row, j] = tbl[a]
+        view = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
+                            jnp.asarray(tables),
+                            jnp.zeros((len(batch),), jnp.int32), cfg)
+        suffix_tokens = sum(lens[r] - starts[r] for r in range(len(batch)))
+        t0 = time.perf_counter()
+        last, view = self.model.prefill_suffix(
+            self.params, jnp.asarray(toks), view,
+            jnp.asarray(lens, jnp.int32), jnp.asarray(starts, jnp.int32),
+            jnp.asarray(wtables))
+        nxt = np.asarray(jnp.argmax(last, axis=-1))   # forces completion
+        t1 = time.perf_counter()
+        # bill ONLY the suffix: the admission budget's EWMA and the
+        # token counters see the work actually done, and the skipped
+        # prefix is the headline savings metric
+        self.sched.observe_prefill(suffix_tokens, t1 - t0)
+        self.cache = dataclasses.replace(self.cache, k_pool=view.k_pool,
+                                         v_pool=view.v_pool)
+        for row, (slot, req, _) in enumerate(batch):
+            self._next_tok[slot] = nxt[row]
+            if req.t_first < 0:
+                req.t_first = t1
+        self.prefill_tokens += suffix_tokens
+        self.prefill_tokens_saved += sum(starts)
 
     # ---------------- preemption / swap-out ----------------
     def _preempt_slot(self, slot: int) -> None:
@@ -700,6 +800,7 @@ class Engine:
         return {
             "steps": self.steps,
             "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
             "decode_tokens": self.decode_tokens,
             "prefix_hits": self.prefix_hits,
             "cow_copies": self.cow_copies,
@@ -712,8 +813,10 @@ class Engine:
             "prefetches": self.prefetches,
             "prefetch_hits": self.prefetch_hits,
             "prefetch_cancels": self.prefetch_cancels,
+            # 0.0 (not a vacuous 1.0) when no speculation ever launched
             "prefetch_hit_rate": (self.prefetch_hits
-                                  / max(self.store.stats.swap_ins, 1)),
+                                  / max(self.store.stats.swap_ins, 1)
+                                  if self.prefetches else 0.0),
             "pool_utilization": self.mgr.utilization,
             "compactions": self.arena.compactions,
             "blocks_compacted": self.arena.blocks_compacted,

@@ -328,6 +328,11 @@ class Scheduler:
         #: virtual clock for deadline arithmetic -- the engine writes
         #: its step counter here; policy never reads the wall clock
         self.now = 0.0
+        #: optional hook: Request -> prefill tokens actually computed.
+        #: The engine points this at its suffix-prefill cost (a forked
+        #: child bills only its un-cached suffix against the budget);
+        #: None bills the whole prompt.
+        self.prefill_cost_fn = None
         if arena is not None:
             # scheduler scratch rides the same address space as the KV
             # pool -- NOTHING in the runtime asks for contiguous memory
@@ -465,7 +470,14 @@ class Scheduler:
                 break                    # worst-case footprint must fit
             if busy and free - need < self.watermark:
                 break                    # keep growth headroom
-            cost = 0 if from_preempted else cand.tokens_held
+            # suffix-only prefill: the cost hook bills just the tokens
+            # the engine will actually compute (a forked child's
+            # un-cached suffix).  Plan-time lookup runs BEFORE this
+            # step's other admissions register their prefixes, so the
+            # estimate can only err high -- never over-admits.
+            cost = (0 if from_preempted
+                    else self.prefill_cost_fn(cand) if self.prefill_cost_fn
+                    else cand.tokens_held)
             if busy and budget is not None and cost > budget:
                 break                    # prefill chunking
             if from_preempted:

@@ -20,6 +20,10 @@ stress software admission are:
                    sudden pile-ups (the "elephants and mice" shape).
 * ``static``    -- everything arrives at t=0 (the legacy pre-loaded
                    batch, for equivalence pins).
+* ``prefixheavy`` -- poisson arrivals where nearly every request forks
+                   a shared base prompt (chatbot system prompts /
+                   few-shot headers): the target shape for COW prefix
+                   sharing plus suffix-only prefill.
 
 Tenants are assigned round-robin; ``shared_frac`` mixes in a cohort
 that shares block-aligned base prompts (exercising COW prefix sharing
@@ -37,7 +41,7 @@ from repro.serve.scheduler import Request
 
 __all__ = ["RequestSource", "make_trace"]
 
-TRACE_KINDS = ("static", "poisson", "bursty", "heavytail")
+TRACE_KINDS = ("static", "poisson", "bursty", "heavytail", "prefixheavy")
 
 
 class RequestSource:
@@ -75,7 +79,7 @@ def _gaps(kind: str, n: int, mean_gap: float,
     """Inter-arrival gaps in virtual steps, mean roughly ``mean_gap``."""
     if kind == "static":
         return np.zeros(n)
-    if kind == "poisson":
+    if kind in ("poisson", "prefixheavy"):
         return rng.exponential(mean_gap, size=n)
     if kind == "bursty":
         # arrivals cluster: every burst lands together, then the lane
@@ -109,6 +113,10 @@ def make_trace(kind: str, n: int, vocab: int, *, seed: int = 0,
     cycles the given classes across requests.  Same seed, same trace --
     byte-for-byte.
     """
+    if kind == "prefixheavy" and shared_frac <= 0.0:
+        # nearly every request rides a shared base unless the caller
+        # pinned an explicit mix; still seeded and fully replayable
+        shared_frac = 0.85
     rng = np.random.RandomState(seed)
     gaps = _gaps(kind, n, mean_gap, rng)
     bases = [rng.randint(2, vocab, size=int(rng.randint(

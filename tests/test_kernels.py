@@ -115,6 +115,70 @@ def test_paged_attention_matches_model_decode_path(rng):
                                atol=2e-5)
 
 
+@pytest.mark.parametrize("B,SQ,KVH,G,HD,BT,MB,QC", [
+    (2, 16, 1, 8, 64, 16, 4, 8),    # MQA, chunked queries
+    (3, 8, 2, 4, 128, 8, 3, 8),     # GQA, single chunk
+    (1, 32, 4, 1, 64, 8, 8, 4),     # MHA-ish, deep sweep
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_paged_prefill_sweep(B, SQ, KVH, G, HD, BT, MB, QC, dtype, rng):
+    NB = B * MB + 2
+    q = jnp.asarray(rng.randn(B, SQ, KVH, G, HD).astype(dtype))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(dtype))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(dtype))
+    tables = jnp.asarray(rng.permutation(NB)[: B * MB].reshape(B, MB)
+                         .astype(np.int32))
+    starts = jnp.asarray(rng.randint(0, MB * BT - SQ + 1, B).astype(np.int32))
+    lens = starts + jnp.asarray(rng.randint(1, SQ + 1, B).astype(np.int32))
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, tables, lens,
+                                      starts, q_chunk=QC, interpret=True)
+    ref = ops.paged_prefill_attention_ref(q, k_pool, v_pool, tables, lens,
+                                          starts)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("softcap,window", [(None, None), (30.0, None),
+                                            (None, 12), (50.0, 7)])
+def test_paged_prefill_softcap_window(softcap, window, rng):
+    B, SQ, KVH, G, HD, BT, MB = 2, 16, 2, 2, 64, 8, 5
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, SQ, KVH, G, HD).astype(np.float32))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(np.arange(NB).reshape(B, MB).astype(np.int32))
+    starts = jnp.asarray(np.array([17, 0], np.int32))
+    lens = jnp.asarray(np.array([17 + 16, 9], np.int32))
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, tables, lens,
+                                      starts, softcap=softcap, window=window,
+                                      q_chunk=8, interpret=True)
+    ref = ops.paged_prefill_attention_ref(q, k_pool, v_pool, tables, lens,
+                                          starts, softcap=softcap,
+                                          window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_prefill_last_token_matches_decode_kernel(rng):
+    """A 1-token suffix at position len-1 is exactly a decode step: the
+    prefill kernel must agree with the decode kernel on it."""
+    B, KVH, G, HD, BT, MB = 2, 2, 4, 64, 8, 4
+    NB = B * MB
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(rng.permutation(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([29, 13], np.int32))
+    q = jnp.asarray(rng.randn(B, 1, KVH, G, HD).astype(np.float32))
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, tables, lens,
+                                      lens - 1, interpret=True)
+    dec = ops.paged_attention(q[:, 0], k_pool, v_pool, tables, lens,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(dec),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("nb,blk", [(10, (4, 8)), (6, (16,)), (12, (2, 4, 8))])
 def test_block_copy_plan(nb, blk, rng):
     """Device-side compaction/swap-in: apply a (src, dst) copy plan."""

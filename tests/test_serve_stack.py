@@ -567,3 +567,146 @@ def test_scripted_workload_token_identical(setup, rng):
         ref = greedy_reference(model, params, req.prompt, req.max_new)
         assert req.generated == ref, (req.rid, req.generated, ref)
     assert_engine_quiescent(eng)
+
+
+# ---------------------------------------------------------------------------
+# suffix-only prefill: forked children recompute only the un-cached tail,
+# attending through the COW-shared prefix blocks via the paged prefill
+# kernel -- pinned token-identical to full recompute AND the greedy
+# reference across fork depth, partial-tail aliasing, windowed/softcapped
+# layers, and preemption round-trips
+# ---------------------------------------------------------------------------
+def _run_engine(eng, reqs, max_steps=400):
+    for r in reqs:
+        eng.submit(r)
+    while (eng.sched.has_work or eng.running) and eng.steps < max_steps:
+        eng.step()
+        eng.check_consistency()
+    eng.sync_transfers()
+    return {r.rid: list(r.generated) for r in eng.done}
+
+
+def _suffix_vs_full(model, params, prompts, max_new, **eng_kw):
+    """Serve the same prompt set with suffix-only prefill on and off;
+    returns (tokens by mode, engine by mode)."""
+    toks, engines = {}, {}
+    for flag in (True, False):
+        eng = Engine(model, params, eos_id=-1, prefill_budget=None,
+                     suffix_prefill=flag, **eng_kw)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=m)
+                for i, (p, m) in enumerate(zip(prompts, max_new))]
+        toks[flag] = _run_engine(eng, reqs)
+        engines[flag] = eng
+    return toks, engines
+
+
+def test_suffix_prefill_fork_depth_token_identical(setup, rng):
+    """Fork chains two deep: the grandchild aliases blocks the child
+    itself aliased from the root.  Depth-1 saves the root's 2 blocks
+    (16 tokens), depth-2 saves the child's 3 (24): exactly 40 prefix
+    tokens never recomputed."""
+    cfg, model, params = setup
+    base = rng.randint(2, cfg.vocab_size, size=16)        # 2 full blocks
+    mid = np.concatenate([base, rng.randint(2, cfg.vocab_size, size=8)])
+    top = np.concatenate([mid, rng.randint(2, cfg.vocab_size, size=5)])
+    prompts, max_new = [base, mid, top], [10, 8, 6]
+    toks, engines = _suffix_vs_full(model, params, prompts, max_new,
+                                    slots=3, max_seq=64, num_blocks=24)
+    assert len(toks[True]) == 3
+    assert toks[True] == toks[False]
+    for rid, pr in enumerate(prompts):
+        ref = greedy_reference(model, params, pr, max_new[rid])
+        assert toks[True][rid] == ref, (rid, toks[True][rid], ref)
+    eng = engines[True]
+    assert eng.prefix_hits >= 2
+    assert eng.prefill_tokens_saved == 40
+    assert engines[False].prefill_tokens_saved == 0
+    assert eng.prefill_tokens < engines[False].prefill_tokens
+    assert_engine_quiescent(eng)
+    assert_engine_quiescent(engines[False])
+
+
+def test_suffix_prefill_partial_tail_alias(setup, rng):
+    """Partial-tail aliasing, both directions: a child fully contained
+    in the parent shares the parent's half-filled tail block (its
+    recomputed last block scatters to the sink; attention reads the
+    aliased original), and a child EXTENDING a mid-block parent has its
+    share rounded DOWN to the block boundary so its private tail is
+    recomputed, never lost."""
+    cfg, model, params = setup
+    parent = rng.randint(2, cfg.vocab_size, size=20)      # tail mid-block
+    inner = parent[:12].copy()                            # contained child
+    longer = np.concatenate([parent,
+                             rng.randint(2, cfg.vocab_size, size=6)])
+    prompts, max_new = [parent, inner, longer], [10, 6, 6]
+    toks, engines = _suffix_vs_full(model, params, prompts, max_new,
+                                    slots=3, max_seq=64, num_blocks=24)
+    assert len(toks[True]) == 3
+    assert toks[True] == toks[False]
+    for rid, pr in enumerate(prompts):
+        ref = greedy_reference(model, params, pr, max_new[rid])
+        assert toks[True][rid] == ref, (rid, toks[True][rid], ref)
+    # inner shares 12 but recomputes the aliased tail block (saves 8);
+    # longer's share of 20 rounds down to 16 (saves 16)
+    assert engines[True].prefill_tokens_saved == 8 + 16
+    assert_engine_quiescent(engines[True])
+
+
+def test_suffix_prefill_sliding_window_softcap(rng):
+    """Suffix attention through shared blocks under a sliding window
+    PLUS logit softcap (gemma2-style layers): the window crosses the
+    cached-prefix boundary, so windowed masking must be applied in
+    ABSOLUTE positions inside the paged prefill kernel."""
+    cfg = get_config("gemma2_27b").reduced()
+    assert cfg.local_window and cfg.attn_softcap    # the shape under test
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    base = rng.randint(2, cfg.vocab_size, size=24)  # > window (16) tokens
+    child = np.concatenate([base, rng.randint(2, cfg.vocab_size, size=7)])
+    prompts, max_new = [base, child], [8, 8]
+    toks, engines = _suffix_vs_full(model, params, prompts, max_new,
+                                    slots=2, max_seq=64, num_blocks=24)
+    assert len(toks[True]) == 2
+    assert toks[True] == toks[False]
+    for rid, pr in enumerate(prompts):
+        ref = greedy_reference(model, params, pr, max_new[rid])
+        assert toks[True][rid] == ref, (rid, toks[True][rid], ref)
+    assert engines[True].prefill_tokens_saved == 24
+    assert_engine_quiescent(engines[True])
+
+
+def test_suffix_prefill_cow_exhaustion_resume(setup, rng):
+    """The suffix path composes with the COW barrier under pool
+    exhaustion AND a forced preemption round-trip: the forked child is
+    swapped out mid-decode, resumed from the host tier, and still
+    decodes token-identically to the greedy reference."""
+    cfg, model, params = setup
+    parent = rng.randint(2, cfg.vocab_size, size=20)
+    prompts = [parent,
+               rng.randint(2, cfg.vocab_size, size=14),
+               parent[:12].copy()]                 # forked, suffix path
+    max_new = [4, 4, 6]
+    for flag in (True, False):
+        eng = Engine(model, params, slots=4, max_seq=32, num_blocks=10,
+                     eos_id=-1, prefill_budget=None, suffix_prefill=flag)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=m)
+                for i, (p, m) in enumerate(zip(prompts, max_new))]
+        for r in reqs:
+            eng.submit(r)
+        forced = False
+        while (eng.sched.has_work or eng.running) and eng.steps < 300:
+            eng.step()
+            eng.check_consistency()
+            if eng.steps == 2 and eng.running and not forced:
+                eng.preempt_latest()       # evict; resume via swap-in
+                forced = True
+        eng.sync_transfers()
+        assert forced and len(eng.done) == 3
+        if flag:
+            assert eng.prefix_hits >= 1
+            assert eng.prefill_tokens_saved > 0
+        for req in sorted(eng.done, key=lambda r: r.rid):
+            ref = greedy_reference(model, params, req.prompt, req.max_new,
+                                   max_seq=32)
+            assert req.generated == ref, (flag, req.rid, req.generated, ref)
+        assert_engine_quiescent(eng)

@@ -145,6 +145,43 @@ def test_empty_dispatch_phases_are_skipped():
     a.assert_quiescent()
 
 
+def test_nonempty_dispatch_is_single_walk():
+    """Extends the empty-phase pin above to NON-empty steps (the PR 7
+    de-Pythonized step loop): N independent plans dispatched in one
+    phase cost exactly N per-plan visits (``python_launches``) -- one
+    walk per engine, not one walk per plan per fixpoint round, and no
+    trailing no-progress verification round -- and
+    ``dispatches_per_step`` reports dispatch phases per compute mark."""
+    a, cell = make_executor_arena(n=16)
+    q = a.transfers
+    maps = []
+    for i in range(4):
+        m = a.mapping(CLS, owner=i)
+        m.ensure_capacity(2)
+        write_blocks(a, cell, m, float(i + 1))
+        maps.append(m)
+    base = q.stats.python_launches
+    for m in maps:
+        m.migrate("host")
+    q.dispatch()                   # one walk batches 4 independent gathers
+    assert q.stats.python_launches - base == 4
+    assert q.stats.dispatches == 1
+    q.complete_dispatched()
+    assert all(a.host_contains(CLS, i) for i in range(4))
+    # the derived per-step rate follows the compute-mark clock
+    q.note_compute()
+    q.note_compute()
+    assert q.stats.dispatches_per_step == pytest.approx(
+        q.stats.dispatches / 2)
+    assert q.stats.to_dict()["python_launches"] == q.stats.python_launches
+    for m in maps:
+        m.migrate("device")
+    q.drain()
+    for m in maps:
+        m.free()
+    a.assert_quiescent()
+
+
 def test_fence_epochs_and_drain():
     a, cell = make_executor_arena()
     m = a.mapping(CLS, owner=0)
