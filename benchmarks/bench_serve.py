@@ -55,6 +55,13 @@ per-request token identity between the modes plus
 ``prefill_tokens_saved > 0`` on the suffix run; both modes' tokens/s
 land in BENCH_transfers.json under ``modes``.
 
+``--smoke`` also runs ``mixed_arch_probe``: transformer + mamba2 +
+zamba2 served concurrently from ONE shared Arena through the
+architecture registry (``serve/arch.py``), gated on per-family token
+identity vs standalone runs, a forced preemption round-trip through
+every pool-class discipline, and arena quiescence at drain; per-family
+tokens/s and per-pool-class block stats land under ``mixed_arch``.
+
 ``--baseline PATH`` compares tokens/s against a committed report and
 exits non-zero on a regression beyond ``--regress-frac`` (CI gate).
 Emits the usual CSV rows too (see benchmarks/common.py).
@@ -255,6 +262,112 @@ def suffix_probe(args):
     return out
 
 
+def mixed_arch_probe(args):
+    """Architecture-registry section: a transformer (growing paged KV),
+    a pure SSM (constant state) and a zamba2 hybrid (both) served
+    CONCURRENTLY from ONE shared Arena -- pool classes prefix-
+    namespaced per engine -- with a forced preemption round-trip
+    through every discipline.  CI gates per-family token identity
+    against each engine's standalone (private-arena, unpreempted) run
+    and a clean ``assert_quiescent`` at drain; per-family tokens/s and
+    the shared arena's per-pool-class block stats land in
+    BENCH_serve.json under ``mixed_arch``.
+    """
+    from repro.configs.base import get_config
+    from repro.mem import Arena
+    from repro.models.api import build_model
+    from repro.serve.engine import Engine, Request
+
+    fams = (("dense", "gemma_2b", ""), ("ssm", "mamba2_370m", "m2-"),
+            ("hybrid", "zamba2_2p7b", "zb-"))
+    models = {}
+    for fam, name, prefix in fams:
+        key = ("mixed_arch", name, args.seed)
+        if key not in _MODEL_CACHE:
+            cfg = get_config(name).reduced()
+            model = build_model(cfg)
+            params, _ = model.init(jax.random.PRNGKey(args.seed))
+            _MODEL_CACHE[key] = (cfg, model, params)
+        models[fam] = (prefix,) + _MODEL_CACHE[key]
+
+    def make(fam, arena):
+        prefix, cfg, model, params = models[fam]
+        return Engine(model, params, slots=2, max_seq=64, num_blocks=24,
+                      eos_id=-1, prefill_budget=None, arena=arena,
+                      pool_prefix=prefix if arena is not None else "")
+
+    rng = np.random.RandomState(args.seed)
+    prompts = {fam: [rng.randint(2, 500, size=int(rng.randint(6, 20)))
+                     for _ in range(3)] for fam, _, _ in fams}
+
+    def submit(eng, fam):
+        for i, pr in enumerate(prompts[fam]):
+            eng.submit(Request(rid=i, prompt=pr, max_new=4))
+
+    # standalone references: private arena, no preemption
+    ref = {}
+    for fam, _, _ in fams:
+        eng = make(fam, None)
+        submit(eng, fam)
+        eng.run(400)
+        ref[fam] = {r.rid: list(r.generated) for r in eng.done}
+
+    arena = Arena()
+    engines = {fam: make(fam, arena) for fam, _, _ in fams}
+    for fam, eng in engines.items():
+        submit(eng, fam)
+    steps, forced = 0, False
+    t0 = time.perf_counter()
+    while (any(e.sched.has_work or e.running for e in engines.values())
+           and steps < 400):
+        for e in engines.values():
+            e.step()
+        steps += 1
+        if steps == 3 and not forced:
+            # one forced eviction per engine: the dense victim moves
+            # paged KV, the SSM victim ONE constant-state block, the
+            # hybrid victim both classes in one dispatch
+            for e in engines.values():
+                e.preempt_latest()
+            forced = True
+    dt = time.perf_counter() - t0
+    for e in engines.values():
+        e.sync_transfers()
+
+    ok = forced
+    families = {}
+    for fam, eng in engines.items():
+        st = eng.stats
+        got = {r.rid: list(r.generated) for r in eng.done}
+        match = got == ref[fam]
+        ok = (ok and match and st["preemptions"] >= 1
+              and st["swap_ins"] >= 1)
+        families[fam] = {
+            "strategy": type(eng.strategy).__name__,
+            "pool_classes": list(eng.strategy.pool_classes),
+            "completed": len(eng.done),
+            "decode_tokens": st["decode_tokens"],
+            "tokens_per_s": round(st["decode_tokens"] / max(dt, 1e-9), 2),
+            "preemptions": st["preemptions"],
+            "swap_outs": st["swap_outs"],
+            "swap_ins": st["swap_ins"],
+            "tokens_match": match,
+        }
+    astats = arena.stats()
+    per_class = {name: {"num_blocks": c.num_blocks,
+                        "num_used": c.num_used, "num_free": c.num_free,
+                        "pinned": c.pinned, "host_blocks": c.host_blocks}
+                 for name, c in sorted(astats.classes.items())}
+    try:
+        arena.assert_quiescent()
+        quiescent = True
+    except AssertionError:
+        quiescent = ok = False
+    return {"families": families, "per_class_blocks": per_class,
+            "steps": steps, "wall_s": round(dt, 3),
+            "arena_quiescent": quiescent, "ok": ok}
+
+
 def workload(cfg, eng, args):
     """Mixed traffic: unique prompts + a shared-prefix cohort; the pool
     is sized by the caller to force queueing (and usually swapping)."""
@@ -450,6 +563,13 @@ def main(argv=None):
         report["all_ok"] = (report["all_ok"]
                             and sp["token_identical"]
                             and sp["suffix"]["prefill_tokens_saved"] > 0)
+        # CI gate: the architecture registry must serve all three cache
+        # disciplines from one shared Arena token-identically to each
+        # family's standalone run, with a preemption round-trip through
+        # every pool class and a quiescent arena at drain
+        mx = mixed_arch_probe(args)
+        report["mixed_arch"] = mx
+        report["all_ok"] = report["all_ok"] and mx["ok"]
     if args.trace:
         # the request plane: live arrivals through Engine.serve, with
         # per-tenant latency percentiles and the TTFT histogram
@@ -478,6 +598,7 @@ def main(argv=None):
           f"probe_prefetch_hits={probe_hits},"
           f"trace={trace_info},"
           f"prefill_saved={report['prefill_tokens_saved']},"
+          f"mixed_arch_ok={report.get('mixed_arch', {}).get('ok', '-')},"
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)

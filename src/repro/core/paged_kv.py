@@ -292,13 +292,14 @@ class PagedKVManager:
     def can_admit(self, tokens: int) -> bool:
         return self.free_blocks >= self.blocks_needed(tokens)
 
-    def admit(self, seq_id: int, tokens: int) -> List[int]:
+    def admit(self, seq_id: int, tokens: int,
+              tenant: str = "default") -> List[int]:
         need = self.blocks_needed(tokens)
         if need > self.free_blocks:
             # atomic: don't leave an empty mapping behind on failure
             raise OutOfBlocksError(
                 f"requested {need} blocks, only {self.free_blocks} free")
-        m = self.arena.mapping(self.pool_class, seq_id)
+        m = self.arena.mapping(self.pool_class, seq_id, tenant=tenant)
         self._maps[seq_id] = m
         return m.ensure_capacity(need)
 
@@ -343,8 +344,8 @@ class PagedKVManager:
         return self.reserve_sink().block
 
     # -- COW prefix sharing ---------------------------------------------
-    def fork(self, parent_id: int, child_id: int,
-             shared_tokens: int) -> List[int]:
+    def fork(self, parent_id: int, child_id: int, shared_tokens: int,
+             tenant: Optional[str] = None) -> List[int]:
         """COW: child aliases EVERY parent block covering shared_tokens.
 
         A trailing partially-filled block is aliased too; the first
@@ -360,7 +361,7 @@ class PagedKVManager:
             raise ValueError(
                 f"fork of {shared_tokens} tokens needs {nshared} blocks, "
                 f"parent holds {len(parent)}")
-        child = parent.fork(child_id, nshared)
+        child = parent.fork(child_id, nshared, tenant=tenant)
         self._maps[child_id] = child
         return child.block_ids()
 

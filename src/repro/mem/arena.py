@@ -75,7 +75,7 @@ class _PoolClass:
 
     __slots__ = ("name", "num_blocks", "block_shape", "dtype",
                  "block_nbytes", "allocator", "leases", "pinned",
-                 "mappings", "dp_groups")
+                 "mappings", "dp_groups", "quota_by_tenant")
 
     def __init__(self, name: str, num_blocks: int, block_shape: Tuple,
                  dtype, block_nbytes: int, dp_groups: int = 1):
@@ -89,6 +89,10 @@ class _PoolClass:
         self.leases: Dict[int, List[Lease]] = {}
         self.pinned: List[Lease] = []
         self.mappings: List[Mapping] = []
+        #: per-tenant block ceilings enforced at ADMISSION (scheduler
+        #: policy), not at allocation -- an admitted sequence may always
+        #: grow to the footprint it was admitted under
+        self.quota_by_tenant: Dict[str, int] = {}
 
     def group_range(self, g: int) -> Tuple[int, int]:
         """Contiguous id range of dp pool group ``g`` (co-sharded with
@@ -105,6 +109,10 @@ class Arena:
     def __init__(self):
         self._classes: Dict[str, _PoolClass] = {}
         self._reclaimer: Optional[Reclaimer] = None
+        # per-pool-class reclaimers (heterogeneous serving: each
+        # engine handles pressure for ITS classes); the global
+        # reclaimer stays the single-engine default.
+        self._reclaimers: Dict[str, Reclaimer] = {}
         # host tier: residency counts (owned by Mapping.migrate) and
         # payloads (deposited/taken by the transfer plane) are separate
         # so migrate("device") can reallocate ids before the scatter.
@@ -121,14 +129,19 @@ class Arena:
     def register_class(self, name: str, *, num_blocks: int,
                        block_shape: Tuple = (), dtype=jnp.float32,
                        block_nbytes: Optional[int] = None,
-                       dp_groups: int = 1) -> str:
+                       dp_groups: int = 1,
+                       quota_by_tenant: Optional[Dict[str, int]] = None
+                       ) -> str:
         """Declare (or re-attach to) one (block_shape, dtype) pool class.
 
         Registration is idempotent for an identical spec -- many clients
         of one engine attach to the same class -- and loud on conflict.
         ``dp_groups`` partitions the id space into contiguous ranges for
         per-group accounting (``ArenaStats`` reports blocks held/free
-        per group).  Returns ``name`` so callers can chain.
+        per group).  ``quota_by_tenant`` sets per-tenant block ceilings
+        enforced at admission time; it is operator-updatable metadata,
+        not part of the conflict-checked spec (re-registering with a new
+        quota replaces it).  Returns ``name`` so callers can chain.
         """
         if block_nbytes is None:
             block_nbytes = (int(np.prod(block_shape)) if block_shape else 1
@@ -146,15 +159,19 @@ class Arena:
                     f"{tuple(block_shape)}/{dtype}/g{dp_groups} vs existing "
                     f"{st.num_blocks}x{st.block_nbytes}B "
                     f"{st.block_shape}/{st.dtype}/g{st.dp_groups}")
+            if quota_by_tenant is not None:
+                st.quota_by_tenant = dict(quota_by_tenant)
             return name
         if num_blocks <= 0:
             raise ValueError(f"num_blocks must be positive, got {num_blocks}")
         if dp_groups < 1 or dp_groups > num_blocks:
             raise ValueError(f"dp_groups must be in [1, num_blocks], "
                              f"got {dp_groups}")
-        self._classes[name] = _PoolClass(name, num_blocks, tuple(block_shape),
-                                         dtype, int(block_nbytes),
-                                         int(dp_groups))
+        st = _PoolClass(name, num_blocks, tuple(block_shape),
+                        dtype, int(block_nbytes), int(dp_groups))
+        if quota_by_tenant is not None:
+            st.quota_by_tenant = dict(quota_by_tenant)
+        self._classes[name] = st
         return name
 
     def _cls(self, name: str) -> _PoolClass:
@@ -184,6 +201,22 @@ class Arena:
     def block_nbytes(self, cls: str) -> int:
         return self._cls(cls).block_nbytes
 
+    def tenant_quota(self, cls: str, tenant: str) -> Optional[int]:
+        """The tenant's block ceiling in ``cls`` (None = unlimited)."""
+        return self._cls(cls).quota_by_tenant.get(str(tenant))
+
+    def blocks_by_tenant(self, cls: str) -> Dict[str, int]:
+        """Blocks currently charged to each tenant in ``cls``: device
+        leases plus host-tier residency of every tenant-tagged mapping.
+        Untagged allocations (pinned sinks, raw leases) are unbilled."""
+        out: collections.Counter = collections.Counter()
+        for m in self._cls(cls).mappings:
+            if m.placement == HOST:
+                out[str(m.tenant)] += int(m._host_blocks)
+            else:
+                out[str(m.tenant)] += len(m.leases)
+        return dict(out)
+
     def find_mapping(self, cls: str, owner) -> Optional[Mapping]:
         """The live mapping of ``owner`` in ``cls``, if any (used by the
         engine to adopt restored host-resident mappings)."""
@@ -199,14 +232,31 @@ class Arena:
         return self._cls(cls).allocator
 
     # ---------------- pressure protocol ----------------
-    def set_reclaimer(self, fn: Optional[Reclaimer]) -> None:
+    def set_reclaimer(self, fn: Optional[Reclaimer],
+                      pool_class: Optional[str] = None) -> None:
         """Register the pressure-time reclaim callback.
 
-        Exactly one reclaimer per arena: silently displacing an earlier
-        registrant (e.g. two engines sharing one address space) would
+        With ``pool_class`` the reclaimer handles exhaustion of THAT
+        class only -- the heterogeneous-serving shape, where each engine
+        owns pressure for its own pool classes and many engines share
+        one address space.  Without it, the callback is the arena-wide
+        default (single-engine shape).  Either way exactly one reclaimer
+        per scope: silently displacing an earlier registrant would
         reroute its pressure handling, so that conflict is loud.  Pass
-        None to clear before handing the arena to a new owner.
+        None to clear before handing the scope to a new owner.
         """
+        if pool_class is not None:
+            prev = self._reclaimers.get(pool_class)
+            if fn is not None and prev is not None and prev is not fn:
+                raise ValueError(
+                    f"pool class {pool_class!r} already has a reclaimer "
+                    f"registered; call set_reclaimer(None, "
+                    f"pool_class={pool_class!r}) first")
+            if fn is None:
+                self._reclaimers.pop(pool_class, None)
+            else:
+                self._reclaimers[pool_class] = fn
+            return
         if (fn is not None and self._reclaimer is not None
                 and self._reclaimer is not fn):
             raise ValueError(
@@ -226,6 +276,7 @@ class Arena:
         host tier; the allocation is moot, not failed).
         """
         st = self._cls(cls)
+        reclaimer = self._reclaimers.get(cls, self._reclaimer)
         while True:
             if st.allocator.num_free >= n:
                 return [st.allocator.alloc() for _ in range(n)]
@@ -236,11 +287,11 @@ class Arena:
                 # never degenerates to the synchronous schedule
                 self.transfers.dispatch()
                 continue
-            if not pressure or self._reclaimer is None:
+            if not pressure or reclaimer is None:
                 raise OutOfBlocksError(
                     f"pool class {cls!r}: requested {n} blocks, "
                     f"only {st.allocator.num_free} free")
-            victim = self._reclaimer(requester)
+            victim = reclaimer(requester)
             if victim is None:
                 raise OutOfBlocksError(
                     f"pool class {cls!r}: exhausted and nothing left "
@@ -305,8 +356,9 @@ class Arena:
         self.release(lease)
 
     # ---------------- mappings ----------------
-    def mapping(self, cls: str, owner, kind: str = FLAT) -> Mapping:
-        m = Mapping(self, cls, owner, kind=kind)
+    def mapping(self, cls: str, owner, kind: str = FLAT,
+                tenant: str = "default") -> Mapping:
+        m = Mapping(self, cls, owner, kind=kind, tenant=tenant)
         self._cls(cls).mappings.append(m)
         return m
 
@@ -466,6 +518,8 @@ class Arena:
                 held=st.allocator.num_held,
                 held_by_engine=st.allocator.held_by_engine(),
                 groups=groups,
+                quota_by_tenant=dict(st.quota_by_tenant),
+                blocks_by_tenant=self.blocks_by_tenant(name),
             )
         return ArenaStats(classes=classes, compactions=self.compactions,
                           blocks_compacted=self.blocks_compacted,

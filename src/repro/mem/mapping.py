@@ -56,18 +56,20 @@ HOST = "host"
 class Mapping:
     """Ordered leases for one logical object (see module docstring)."""
 
-    __slots__ = ("arena", "pool_class", "owner", "kind", "leases",
-                 "placement", "_host_blocks", "freed", "_spec",
+    __slots__ = ("arena", "pool_class", "owner", "kind", "tenant",
+                 "leases", "placement", "_host_blocks", "freed", "_spec",
                  "_spec_plan")
 
     def __init__(self, arena: "Arena", pool_class: str, owner,
-                 kind: str = FLAT):
+                 kind: str = FLAT, tenant: str = "default"):
         if kind not in (FLAT, RADIX):
             raise ValueError(f"unknown mapping kind {kind!r}")
         self.arena = arena
         self.pool_class = pool_class
         self.owner = owner
         self.kind = kind
+        #: quota-accounting tag: whose budget this object's blocks bill
+        self.tenant = tenant
         self.leases: List[Lease] = []
         self.placement = DEVICE
         self._host_blocks = 0
@@ -142,18 +144,23 @@ class Mapping:
         self.leases.pop().release()
 
     # -- the three mutation verbs ---------------------------------------
-    def fork(self, owner, nblocks: int) -> "Mapping":
+    def fork(self, owner, nblocks: int,
+             tenant: Optional[str] = None) -> "Mapping":
         """COW: a new mapping aliasing this one's first ``nblocks`` blocks.
 
         Pure refcount traffic -- no allocation, so it cannot hit pool
         pressure; the deferred cost surfaces later at the write barrier.
+        The child bills ``tenant`` (default: the parent's) -- shared
+        blocks are double-billed by design, like refcounts.
         """
         if self.placement != DEVICE:
             raise ValueError("fork of a host-resident mapping")
         if nblocks > len(self.leases):
             raise ValueError(
                 f"fork of {nblocks} blocks, parent holds {len(self.leases)}")
-        child = self.arena.mapping(self.pool_class, owner, kind=self.kind)
+        child = self.arena.mapping(self.pool_class, owner, kind=self.kind,
+                                   tenant=self.tenant if tenant is None
+                                   else tenant)
         for l in self.leases[:nblocks]:
             child.leases.append(l.share(owner))
         return child

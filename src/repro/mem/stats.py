@@ -53,6 +53,10 @@ class PoolClassStats:
     #: responsible for them -- which queue is pinning vacated blocks
     held_by_engine: Dict[str, int] = dataclasses.field(default_factory=dict)
     groups: List[Dict[str, int]] = dataclasses.field(default_factory=list)
+    #: admission-enforced per-tenant block ceilings (empty = unlimited)
+    quota_by_tenant: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: device + host blocks currently charged to each tenant
+    blocks_by_tenant: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def host_blocks(self) -> int:

@@ -21,6 +21,7 @@ from repro.configs.base import ModelConfig, get_config
 from repro.configs.shapes import InputShape
 from repro.core.paged_kv import PagedKVCache
 from repro.models.lm import DecoderLM
+from repro.models.mamba2_lm import Mamba2LM
 from repro.models.rwkv_lm import RWKVLM
 from repro.models.whisper import WhisperModel
 from repro.models.zamba2 import Zamba2LM
@@ -33,6 +34,8 @@ def build_model(cfg: ModelConfig, max_positions: int = 4096):
         return Zamba2LM(cfg)
     if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
         return RWKVLM(cfg)
+    if cfg.ssm is not None and cfg.ssm.kind == "mamba2":
+        return Mamba2LM(cfg)
     return DecoderLM(cfg)
 
 
@@ -65,16 +68,11 @@ def decode_specs(cfg: ModelConfig, shape: InputShape,
     sds = jax.ShapeDtypeStruct
     B, S = shape.global_batch, shape.seq_len
     tokens = sds((B,), jnp.int32)
-    if isinstance(model, RWKVLM):
-        state = model.state_specs(B)
-    elif isinstance(model, (Zamba2LM, WhisperModel)):
-        state = jax.eval_shape(
-            lambda: model.init_state(B, S, num_blocks=_nb(cfg, S, B),
-                                     dp_groups=dp_groups))
-    else:
-        kvcfg = model.kv_config(max_seq=S, num_blocks=_nb(cfg, S, B),
-                                batch=B, dp_groups=dp_groups)
-        state = PagedKVCache.specs(kvcfg, B)
+    # every model describes its own decode state (no isinstance
+    # dispatch: the strategy registry in serve/arch.py relies on the
+    # same per-model surface)
+    state = model.decode_state_specs(B, S, num_blocks=_nb(cfg, S, B),
+                                     dp_groups=dp_groups)
     return tokens, state
 
 

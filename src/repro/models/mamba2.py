@@ -68,27 +68,48 @@ def _split_proj(p, x, cfg):
     return z, xBC, dt
 
 
-def _conv(p, xBC, conv_state):
-    """Causal conv1d over (B, S, conv_dim) given (B, W-1, conv_dim) state."""
+def _conv(p, xBC, conv_state, lengths=None):
+    """Causal conv1d over (B, S, conv_dim) given (B, W-1, conv_dim) state.
+
+    With ``lengths``, the returned state is the window ending at each
+    row's LAST VALID token (padded tail excluded); ``lengths[b] == S``
+    reduces exactly to the unmasked tail window.
+    """
     W = p["conv_w"].shape[0]
     full = jnp.concatenate([conv_state, xBC.astype(jnp.float32)], axis=1)
     out = sum(full[:, i: full.shape[1] - (W - 1 - i)] * p["conv_w"][i]
               for i in range(W))
-    return jax.nn.silu(out + p["conv_b"]), full[:, -(W - 1):]
+    if lengths is None:
+        state = full[:, -(W - 1):]
+    else:
+        idx = lengths[:, None] + jnp.arange(W - 1)[None, :]      # (B, W-1)
+        state = jnp.take_along_axis(full, idx[:, :, None], axis=1)
+    return jax.nn.silu(out + p["conv_b"]), state
 
 
 def mamba2_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
                conv_state: Optional[jax.Array] = None,
-               ssd_state: Optional[jax.Array] = None):
-    """x: (B, S, d) -> (y, (conv_state, ssd_state))."""
+               ssd_state: Optional[jax.Array] = None,
+               lengths: Optional[jax.Array] = None):
+    """x: (B, S, d) -> (y, (conv_state, ssd_state)).
+
+    ``lengths`` (B,) masks a right-padded batch EXACTLY: padded
+    positions get dt = 0, so their decay is exp(0) = 1 and their state
+    contribution 0 -- the scan carries each row's state past its tail
+    unchanged, and the conv state is read at the last valid token.
+    Outputs at padded positions are garbage; callers index by length.
+    """
     B, S, d = x.shape
     d_inner, H, P, N, W = _dims(cfg)
     C_len = min(cfg.ssm.chunk, S)
     assert S % C_len == 0
     z, xBC, dt = _split_proj(p, x, cfg)
+    if lengths is not None:
+        valid = jnp.arange(S)[None, :] < lengths[:, None]        # (B, S)
+        dt = dt * valid[..., None]
     if conv_state is None:
         conv_state = jnp.zeros((B, W - 1, d_inner + 2 * N), jnp.float32)
-    xBC, conv_out_state = _conv(p, xBC, conv_state)
+    xBC, conv_out_state = _conv(p, xBC, conv_state, lengths=lengths)
     xs = xBC[..., :d_inner].reshape(B, S, H, P)
     Bm = xBC[..., d_inner: d_inner + N]                      # (B,S,N)
     Cm = xBC[..., d_inner + N:]                              # (B,S,N)

@@ -140,6 +140,11 @@ class RWKVLM:
     def state_specs(self, batch: int) -> RWKVState:
         return jax.eval_shape(lambda: self.init_state(batch))
 
+    def decode_state_specs(self, batch: int, max_seq: int = 0,
+                           num_blocks=None, dp_groups: int = 1):
+        """Shape specs of the decode-time state (dry-run surface)."""
+        return self.state_specs(batch)
+
     def prefill(self, p, batch, state: RWKVState, lengths=None):
         logits, _, states = self.forward(p, batch, state=state)
         return logits[:, -1], states

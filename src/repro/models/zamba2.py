@@ -137,7 +137,8 @@ class Zamba2LM:
     # ---------------- forward ----------------
     def forward_hidden(self, p: Params, batch: Dict[str, jax.Array], *,
                        remat: bool = False, state: Optional[ZambaState] = None,
-                       collect_kv: bool = False, **_):
+                       collect_kv: bool = False,
+                       lengths: Optional[jax.Array] = None, **_):
         cfg = self.cfg
         x = p["embed"][batch["tokens"]]
         x = constrain(x, "batch", None, None)
@@ -153,7 +154,11 @@ class Zamba2LM:
             else:
                 lp, cs, ss = xs
             h = rmsnorm(x, lp["ln"], cfg.norm_eps, gemma_style=True)
-            y, (cs_o, ss_o) = M2.mamba2_fwd(lp["mamba"], h, cfg, cs, ss)
+            # lengths masks right padding out of the SSM scan (padded
+            # attention outputs are already causal-safe; the recurrent
+            # state is what padding would otherwise pollute)
+            y, (cs_o, ss_o) = M2.mamba2_fwd(lp["mamba"], h, cfg, cs, ss,
+                                            lengths=lengths)
             return constrain(x + y, "batch", "seq", None), (cs_o, ss_o)
 
         def group_body(x, xs):
@@ -204,25 +209,70 @@ class Zamba2LM:
             max_blocks_per_seq=mbs, dtype=jnp.dtype(cfg.dtype),
             dp_groups=dp_groups)
 
-    def init_state(self, batch: int, max_seq: int,
-                   num_blocks: Optional[int] = None,
-                   dp_groups: int = 1) -> ZambaState:
+    def init_recurrent(self, batch: int):
+        """Zero (conv, ssd) recurrent state WITHOUT allocating a KV
+        pool -- serving composes these with an externally owned
+        ``PagedKVCache`` view (serve/arch.CompositeStrategy)."""
         cfg = self.cfg
         d_inner, H, P, N, W = M2._dims(cfg)
         conv = jnp.zeros((self.groups, self.per, batch, W - 1,
                           d_inner + 2 * N), jnp.float32)
         ssd = jnp.zeros((self.groups, self.per, batch, H, P, N), jnp.float32)
+        return conv, ssd
+
+    def init_state(self, batch: int, max_seq: int,
+                   num_blocks: Optional[int] = None,
+                   dp_groups: int = 1) -> ZambaState:
+        conv, ssd = self.init_recurrent(batch)
         kv = PagedKVCache.create(
             self.kv_config(max_seq, num_blocks, batch, dp_groups), batch)
         return ZambaState(conv, ssd, kv)
 
     def prefill(self, p, batch, state: ZambaState, lengths):
         logits, _, (states, kvs) = self.forward(p, batch, state=state,
-                                                collect_kv=True)
+                                                collect_kv=True,
+                                                lengths=lengths)
         kv = state.kv.write_prefill(kvs[0], kvs[1], lengths)
         idx = jnp.maximum(lengths - 1, 0)
         last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
         return last, ZambaState(states[0], states[1], kv)
+
+    # -- constant-state pool glue (serve/arch.ConstantStateStrategy) --
+    @property
+    def state_elems(self) -> int:
+        """Float32 elements of ONE sequence's recurrent state -- the
+        constant-state pool's (exact) block quantum."""
+        d_inner, H, P, N, W = M2._dims(self.cfg)
+        per_layer = (W - 1) * (d_inner + 2 * N) + H * P * N
+        return self.groups * self.per * per_layer
+
+    def state_to_rows(self, conv: jax.Array, ssd: jax.Array) -> jax.Array:
+        """Flatten (G, per, B, ...) recurrent state to per-sequence
+        (B, state_elems) rows -- one pool block per sequence."""
+        B = conv.shape[2]
+        c = jnp.moveaxis(conv, 2, 0).reshape(B, -1)
+        s = jnp.moveaxis(ssd, 2, 0).reshape(B, -1)
+        return jnp.concatenate([c, s], axis=1).astype(jnp.float32)
+
+    def rows_to_state(self, rows: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Inverse of ``state_to_rows``."""
+        d_inner, H, P, N, W = M2._dims(self.cfg)
+        G, per = self.groups, self.per
+        B = rows.shape[0]
+        cd = d_inner + 2 * N
+        csize = G * per * (W - 1) * cd
+        conv = jnp.moveaxis(
+            rows[:, :csize].reshape(B, G, per, W - 1, cd), 0, 2)
+        ssd = jnp.moveaxis(
+            rows[:, csize:].reshape(B, G, per, H, P, N), 0, 2)
+        return conv, ssd
+
+    def decode_state_specs(self, batch: int, max_seq: int,
+                           num_blocks: Optional[int] = None,
+                           dp_groups: int = 1):
+        """Shape specs of the decode-time state (dry-run surface)."""
+        return jax.eval_shape(
+            lambda: self.init_state(batch, max_seq, num_blocks, dp_groups))
 
     def decode_step(self, p: Params, tokens: jax.Array, state: ZambaState):
         cfg = self.cfg

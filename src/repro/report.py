@@ -71,20 +71,33 @@ def fmt_arena_table(arena: Dict) -> str:
     pool class with placement split, sharing, locality metrics, and
     blocks used/free per dp pool group when the class is partitioned."""
     out = ["| pool class | blocks | used | free | pinned | host tier | "
-           "COW-shared | frag | table locality | owners | dp groups |",
-           "|---|---|---|---|---|---|---|---|---|---|---|"]
+           "COW-shared | frag | table locality | owners | dp groups | "
+           "tenant used/quota |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for name in sorted(arena.get("classes", {})):
         c = arena["classes"][name]
         hist = c.get("refcount_histogram", [])
         shared = sum(hist[2:]) if len(hist) > 2 else 0
         groups = " ".join(f"g{g['group']} {g['used']}/{g['free']}"
                           for g in c.get("groups", [])) or "—"
+        # pre-quota snapshots lack both tenant dicts: render "n/a",
+        # never KeyError (same degradation contract as the tenant
+        # latency table)
+        quotas = c.get("quota_by_tenant")
+        if quotas is None:
+            quota_cell = "n/a"
+        elif not quotas:
+            quota_cell = "—"
+        else:
+            used = c.get("blocks_by_tenant", {})
+            quota_cell = " ".join(f"{t}:{used.get(t, 0)}/{q}"
+                                  for t, q in sorted(quotas.items()))
         out.append(
             f"| {name} | {c['num_blocks']} | {c['num_used']} | "
             f"{c['num_free']} | {c['pinned']} | {c['host_blocks']} | "
             f"{shared} | {c['fragmentation']:.3f} | "
             f"{c['table_locality']:.3f} | {len(c['blocks_by_owner'])} | "
-            f"{groups} |")
+            f"{groups} | {quota_cell} |")
     out.append("")
     out.append(f"compactions: {arena.get('compactions', 0)} "
                f"(blocks moved: {arena.get('blocks_compacted', 0)})")
@@ -186,6 +199,43 @@ def fmt_tenant_latency_table(doc: Dict) -> str:
     return "\n".join(out)
 
 
+def fmt_family_table(doc: Dict) -> str:
+    """Render the ``mixed_arch`` section of BENCH_serve.json: one row
+    per model family served from the shared arena, with its registry
+    strategy, pool classes and throughput.
+
+    Degrades gracefully on pre-architecture-registry snapshots that
+    lack the section entirely: renders an "n/a" row and says why,
+    never KeyError (same contract as the tenant latency table).
+    """
+    out = ["| family | strategy | pool classes | decode tokens | "
+           "tokens/s | preemptions | swap out/in | tokens match |",
+           "|---|---|---|---|---|---|---|---|"]
+    ma = doc.get("mixed_arch")
+    if not ma or not ma.get("families"):
+        out.append("| n/a | n/a | n/a | n/a | n/a | n/a | n/a | n/a |")
+        out.append("")
+        out.append("no mixed-architecture section in this snapshot "
+                   "(pre-architecture-registry BENCH_serve.json)")
+        return "\n".join(out)
+
+    def cell(v, fmt="{}"):
+        return "n/a" if v is None else fmt.format(v)
+
+    for fam in sorted(ma["families"]):
+        r = ma["families"][fam]
+        tps = r.get("tokens_per_s")
+        out.append(
+            f"| {fam} | {r.get('strategy', 'n/a')} | "
+            f"{' '.join(r.get('pool_classes', [])) or 'n/a'} | "
+            f"{cell(r.get('decode_tokens'))} | "
+            f"{'n/a' if tps is None else f'{tps:.1f}'} | "
+            f"{cell(r.get('preemptions'))} | "
+            f"{cell(r.get('swap_outs'))}/{cell(r.get('swap_ins'))} | "
+            f"{r.get('tokens_match', 'n/a')} |")
+    return "\n".join(out)
+
+
 def main(path: str) -> None:
     if path.endswith(".json"):
         with open(path) as f:
@@ -201,6 +251,8 @@ def main(path: str) -> None:
             print(fmt_transfer_table(transfers))
         print("\n### Request plane: per-tenant latency\n")
         print(fmt_tenant_latency_table(doc))
+        print("\n### Architecture registry: per-family serving\n")
+        print(fmt_family_table(doc))
         return
     rows = load(path)
     print("### Single-pod (16x16 = 256 chips)\n")

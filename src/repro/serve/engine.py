@@ -1,104 +1,90 @@
 """Serving mechanism layer: executes scheduler decisions on the device.
 
-The serving stack is three layers over one address space
+The serving stack is four layers over one address space
 (see ``serve/README.md`` and ``src/repro/mem/README.md``):
 
   * ``scheduler.py`` -- POLICY: pluggable admission order (FCFS with
-    priority classes pinned default; per-tenant deficit round-robin
-    fairness) negotiated against the Arena's grantable leases
-    (``free_blocks``), deadline-cost victim choice falling back to
-    LIFO, per-step prefill budgeting, an adaptive free-block watermark
-    fed by observed growth, dp-pool-group fork gating.  No jax.
+    priority classes and earliest-deadline-first within a class pinned
+    default; per-tenant deficit round-robin fairness) negotiated
+    against the strategy's per-pool-class grantable leases, per-tenant
+    block quotas, deadline-cost victim choice falling back to LIFO,
+    per-step prefill budgeting, an adaptive free-block watermark fed by
+    observed growth (growing classes only), dp-pool-group fork gating.
+    No jax.
+  * ``arch.py`` -- DISCIPLINE: the architecture registry.  What a
+    model family's decode-time state IS (growing paged KV, a constant
+    recurrent state block, or both) and which Arena pool classes back
+    it.  The engine holds exactly ONE ``CacheStrategy`` and never
+    inspects the model; ``resolve(model)`` is the only dispatch point.
   * ``swap.py`` -- LEDGER: the byte ledger and residency views over the
     transfer plane; swap cost scales with blocks held, never pool size.
   * ``repro.mem`` -- ADDRESS SPACE + TRANSFER PLANE: allocation,
     refcounts, the COW write barrier, pressure-time reclaim (this
-    engine registers its LIFO preemption as the Arena's reclaimer),
-    ``compact()``, and the ``TransferQueue`` every payload move rides
-    (``mem/transfer.py`` is the only module that touches the
-    block-copy kernels).
+    engine registers its LIFO preemption as the reclaimer for each of
+    its strategy's pool classes), ``compact()``, and the
+    ``TransferQueue`` every payload move rides (``mem/transfer.py`` is
+    the only module that touches the block-copy kernels).
   * this module -- MECHANISM: one decode step for a fixed slot count B
     (padding empty slots, how a TPU serving binary keeps one compiled
     shape), ONE padded batched prefill for all of a step's admissions,
-    COW prefix sharing, and the SCHEDULE of the per-engine transfer
-    queues: the step loop fences step N-1's d2h host copies, produces
-    this step's plans (compaction, swap-in, growth preemptions, COW),
-    dispatches every engine's URGENT lane, then speculatively
-    prefetches the scheduler's LIFO resume candidate on the BACKGROUND
-    h2d lane, then decodes -- so swap-out host copies AND the prefetch
-    scatter overlap the decode (dispatch at N, fence at N+1).  A
-    prefetched resume commits bookkeeping instead of swapping in
-    synchronously; pressure cancels speculation before preempting
-    anyone, which keeps every scheduling decision identical to the
-    non-speculative schedule.  ``overlap_transfers=False`` selects the
-    synchronous ``drain()`` fallback (prefetch off), which is
-    token-identical and byte-identical by construction (pinned in
-    tests and ``bench_serve --smoke``).
+    COW prefix sharing (when the strategy supports it), and the
+    SCHEDULE of the per-engine transfer queues: the step loop fences
+    step N-1's d2h host copies, produces this step's plans (compaction,
+    swap-in, growth preemptions, COW), dispatches every engine's URGENT
+    lane, then speculatively prefetches the scheduler's LIFO resume
+    candidate on the BACKGROUND h2d lane, then decodes -- so swap-out
+    host copies AND the prefetch scatter overlap the decode (dispatch
+    at N, fence at N+1).  A prefetched resume commits bookkeeping
+    instead of swapping in synchronously; pressure cancels speculation
+    before preempting anyone, which keeps every scheduling decision
+    identical to the non-speculative schedule.
+    ``overlap_transfers=False`` selects the synchronous ``drain()``
+    fallback (prefetch off), which is token-identical and
+    byte-identical by construction (pinned in tests and
+    ``bench_serve --smoke``).
 
-COW prefix sharing end-to-end: every admitted prompt registers its
-block-aligned prefixes in a hash map; a later prompt that matches forks
-(`PagedKVManager.fork``) instead of re-allocating, aliasing whole blocks
--- including a partially-filled tail block when the new prompt is an
-exact prefix of (or equal to) the parent's.  The first divergent write
-into a shared block hits the ``ensure_writable`` barrier, which fulfils
-the copy (``fork_for_write`` + one device block copy).  Relocation,
+COW prefix sharing end-to-end (paged strategies): every admitted prompt
+registers its block-aligned prefixes in a hash map; a later prompt that
+matches forks instead of re-allocating, aliasing whole blocks --
+including a partially-filled tail block when the new prompt is an exact
+prefix of (or equal to) the parent's.  The first divergent write into a
+shared block hits the ``ensure_writable`` barrier, which fulfils the
+copy (``fork_for_write`` + one device block copy).  Relocation,
 swapping and COW are exactly the paper's Table 1 rows, re-created in
-software over a paged pool.
+software over a paged pool -- and the constant-state discipline shows
+the same verbs serving a state no virtual-memory design anticipated.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paged_kv import PagedKVCache, PagedKVManager
-from repro.mem import BACKGROUND, NULL_BLOCK, URGENT, Arena, \
-    LeaseRevokedError
+from repro.mem import BACKGROUND, URGENT, Arena, LeaseRevokedError
+from repro.serve.arch import build_strategy
 from repro.serve.scheduler import Request, Scheduler
-from repro.serve.swap import HostBlockStore
 
 __all__ = ["Engine", "Request"]
 
 
-class _SpecCreditView:
-    """Admission view crediting speculative (prefetch) blocks as free.
-
-    Uncommitted prefetches cancel instantly under pressure (no byte
-    moves -- the host payload is still authoritative), so the scheduler
-    must see them as grantable headroom: admission decisions are then
-    IDENTICAL with and without speculation, which is what keeps the
-    multi-queue+prefetch schedule token- and step-identical to the
-    ``drain()`` fallback.
-    """
-
-    def __init__(self, mgr: PagedKVManager):
-        self._mgr = mgr
-
-    @property
-    def free_blocks(self) -> int:
-        return self._mgr.free_blocks + self._mgr.speculative_blocks
-
-    def blocks_needed(self, tokens: int) -> int:
-        return self._mgr.blocks_needed(tokens)
-
-
 class Engine:
-    """Slot-based continuous batching over the paged KV pool.
+    """Slot-based continuous batching over one cache strategy.
 
-    model must expose prefill(params, batch, cache, lengths) and
-    decode_step(params, tokens, cache); cache is a PagedKVCache (plain
-    decoder LMs).  Greedy sampling.
+    The model's family selects the discipline through the architecture
+    registry (``serve/arch.py``): plain decoder LMs expose
+    prefill/decode_step over a ``PagedKVCache``; SSMs over a recurrent
+    state with ``state_to_rows``/``rows_to_state`` glue; hybrids over
+    both.  Greedy sampling.
 
-    All block bookkeeping lives in ONE ``repro.mem.Arena`` shared by the
-    KV manager, the scheduler's runtime structures and the host swap
-    tier.  The engine registers itself as the arena's *reclaimer*: when
-    any allocation (table growth, COW copy target) exhausts the pool,
-    the Arena calls back into LIFO preemption instead of failing -- the
-    fallback loop that used to live inline here is Arena policy now, and
+    All block bookkeeping lives in ONE ``repro.mem.Arena`` -- possibly
+    SHARED between engines of different families (``pool_prefix``
+    namespaces each engine's classes).  The engine registers itself as
+    the reclaimer for its strategy's pool classes: when any allocation
+    (table growth, COW copy target, state admission) exhausts a pool,
+    the Arena calls back into LIFO preemption instead of failing --
     ``LeaseRevokedError`` surfaces only when the requester itself was
     the victim.
     """
@@ -115,7 +101,9 @@ class Engine:
                  compact_frag_threshold: float = 0.5,
                  overlap_transfers: bool = True,
                  prefetch: bool = True,
-                 suffix_prefill: bool = True):
+                 suffix_prefill: bool = True,
+                 pool_prefix: str = "",
+                 state_blocks: Optional[int] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -132,31 +120,28 @@ class Engine:
             raise NotImplementedError(
                 "dp_groups > 1 serving needs group-partitioned block "
                 "allocation; refusing to run with group-oblivious ids")
-        kvcfg = model.kv_config(max_seq=max_seq, num_blocks=num_blocks,
-                                batch=slots, dp_groups=dp_groups)
         self.arena = arena if arena is not None else Arena()
-        self.cache = PagedKVCache.create(kvcfg, slots)
-        self.mgr = PagedKVManager(kvcfg, arena=self.arena)
-        # write sink: masked prefill-table entries (padded rows, COW-
-        # aliased prefixes) scatter here instead of into live blocks.
-        # Held as a pinned Lease -- compaction may relocate it.
-        self._sink = self.mgr.reserve_sink()
+        # the registry hands back the model family's cache discipline;
+        # the strategy owns pool classes, device streams, managers and
+        # transfer-plane executors.  pool_prefix namespaces the classes
+        # so engines of DIFFERENT geometries can share one arena.
+        self.strategy = build_strategy(
+            model, arena=self.arena, slots=slots, max_seq=max_seq,
+            num_blocks=num_blocks, dp_groups=dp_groups,
+            pool_prefix=pool_prefix, state_blocks=state_blocks)
         self.sched = Scheduler(watermark=watermark,
                                prefill_budget=prefill_budget,
                                policy=admission_policy,
                                arena=self.arena)
         # admission/chunking bills suffix tokens only for forked children
         self.sched.prefill_cost_fn = self._prefill_cost
-        self.store = HostBlockStore(self.arena, self.mgr.pool_class)
-        self.arena.set_reclaimer(self._reclaim_for_pressure)
-        # the transfer plane: this engine is the executor for the KV
-        # pool class (streams = the cache's functional k/v pools) and
-        # the scheduler of dispatch/fence phases in the step loop.
+        # pressure ownership is per pool class: on a shared arena each
+        # engine reclaims only for the classes it serves
+        for cls in self.strategy.pool_classes:
+            self.arena.set_reclaimer(self._reclaim_for_pressure,
+                                     pool_class=cls)
         self.transfers = self.arena.transfers
         self.transfers.eager = not overlap_transfers
-        self.transfers.register_executor(self.mgr.pool_class,
-                                     self._transfer_streams,
-                                     self._set_transfer_streams)
         self.auto_compact = auto_compact
         self.compact_free_frac = compact_free_frac
         self.compact_frag_threshold = compact_frag_threshold
@@ -166,15 +151,15 @@ class Engine:
         # on the overlapped schedule -- the eager fallback would
         # serialize the speculation anyway.
         self.prefetch_enabled = prefetch and overlap_transfers
-        # suffix-only prefill for forked children (off = full recompute,
-        # the A/B baseline the bench compares against); requires model
-        # support (MLA's absorbed cache can't attend through raw blocks)
-        self.suffix_prefill = (suffix_prefill and
-                               getattr(model, "supports_suffix_prefill",
-                                       False))
+        # prefix sharing and suffix-only prefill require the strategy's
+        # consent: a recurrent state depends on the ENTIRE prefix, so
+        # constant/composite disciplines refuse both
+        self.share_prefixes = (share_prefixes
+                               and self.strategy.supports_prefix_sharing)
+        self.suffix_prefill = (suffix_prefill
+                               and self.strategy.supports_suffix_prefill)
         self.running: Dict[int, Request] = {}   # slot -> req
         self.done: List[Request] = []
-        self.share_prefixes = share_prefixes
         self._prefix_map: Dict[Tuple[int, bytes], List[int]] = {}
         self._live_prompts: Dict[int, np.ndarray] = {}
         self._next_tok = np.zeros(slots, np.int64)
@@ -182,6 +167,7 @@ class Engine:
         self.prefix_hits = 0
         self.cow_copies = 0
         self.preemptions = 0
+        self.rejections = 0        # over-quota admissions refused
         self.prefill_tokens = 0
         self.prefill_tokens_saved = 0  # prefix tokens NOT recomputed
         self.decode_tokens = 0
@@ -189,21 +175,32 @@ class Engine:
         self.prefetch_hits = 0     # resumes served from a COMPLETED prefetch
         self.prefetch_cancels = 0  # speculations withdrawn (pressure/free)
 
+    # ---------------- strategy views (compat surface) ----------------
+    @property
+    def mgr(self):
+        """The strategy's primary block manager (paged KV for
+        transformers and hybrids, the constant-state manager for SSMs).
+        """
+        return self.strategy.mgr
+
+    @property
+    def cache(self):
+        """The paged KV device cache, when the discipline has one."""
+        return getattr(self.strategy, "cache", None)
+
+    @cache.setter
+    def cache(self, value) -> None:
+        self.strategy.cache = value
+
+    @property
+    def store(self):
+        """Primary pool class's host-tier swap ledger."""
+        return self.strategy.store
+
     @property
     def sink(self) -> int:
         """Current physical id of the pinned write-sink block."""
-        return self._sink.block
-
-    # ---------------- transfer-plane executor ----------------
-    def _transfer_streams(self):
-        """Current device streams of the KV pool class (functional)."""
-        c = self.cache
-        return [c.k_pool] + ([c.v_pool] if c.v_pool is not None else [])
-
-    def _set_transfer_streams(self, streams) -> None:
-        k, *rest = streams
-        self.cache = dataclasses.replace(
-            self.cache, k_pool=k, v_pool=rest[0] if rest else None)
+        return self.strategy.sink
 
     def sync_transfers(self) -> None:
         """Fence everything: drain the transfer plane to completion
@@ -215,15 +212,15 @@ class Engine:
         """Detach this engine from a SHARED arena so the arena stops
         retaining it (executor/observer closures hold the engine, and
         with it params and the device pools).  Drains outstanding
-        plans, then unbinds reclaimer, executor and swap ledger; the
+        plans, then unbinds reclaimers, executors and swap ledgers; the
         arena can be handed to a new engine afterwards.  Engines owning
         a private arena never need this -- both die together.
         """
         self.transfers.drain()
-        if self.arena._reclaimer == self._reclaim_for_pressure:
-            self.arena.set_reclaimer(None)
-        self.transfers.unregister_executor(self.mgr.pool_class)
-        self.transfers.remove_observer(f"swap-ledger:{self.mgr.pool_class}")
+        for cls in self.strategy.pool_classes:
+            if self.arena._reclaimers.get(cls) is self._reclaim_for_pressure:
+                self.arena.set_reclaimer(None, pool_class=cls)
+        self.strategy.release_arena()
 
     # ---------------- intake / compat views ----------------
     def submit(self, req: Request) -> None:
@@ -244,7 +241,7 @@ class Engine:
         if not self.share_prefixes:
             return
         pr = np.ascontiguousarray(np.asarray(req.prompt, np.int64))
-        bt = self.cache.config.block_tokens
+        bt = self.strategy.block_tokens
         for k in range(1, len(pr) // bt + 1):
             rids = self._prefix_map.setdefault((k, pr[: k * bt].tobytes()),
                                                [])
@@ -256,7 +253,7 @@ class Engine:
         pr = self._live_prompts.pop(req.rid, None)
         if pr is None:
             return
-        bt = self.cache.config.block_tokens
+        bt = self.strategy.block_tokens
         for k in range(1, len(pr) // bt + 1):      # only this rid's keys
             key = (k, pr[: k * bt].tobytes())
             rids = self._prefix_map.get(key)
@@ -278,10 +275,10 @@ class Engine:
         if not self.share_prefixes:
             return None, 0
         pr = np.ascontiguousarray(np.asarray(req.prompt, np.int64))
-        bt = self.cache.config.block_tokens
+        bt = self.strategy.block_tokens
         for k in range(len(pr) // bt, 0, -1):
             for rid in self._prefix_map.get((k, pr[: k * bt].tobytes()), []):
-                if rid == req.rid or not self.mgr.has_seq(rid) \
+                if rid == req.rid or not self.strategy.has_seq(rid) \
                         or rid not in self._live_prompts:
                     continue
                 parent = self._live_prompts[rid]
@@ -305,7 +302,7 @@ class Engine:
         parent, shared = self._find_parent(req)
         if parent is None or shared <= 0:
             return req.tokens_held
-        bt = self.cache.config.block_tokens
+        bt = self.strategy.block_tokens
         start = (shared if shared < req.tokens_held
                  else ((req.tokens_held - 1) // bt) * bt)
         return req.tokens_held - start
@@ -316,12 +313,22 @@ class Engine:
 
     def _admit(self) -> None:
         free = self._free_slots()
-        plan = self.sched.plan_admissions(len(free),
-                                          _SpecCreditView(self.mgr),
+        # the strategy IS the admission view: per-pool-class footprints,
+        # grantable leases (speculative blocks credited as free, so the
+        # prefetch schedule stays decision-identical to drain()),
+        # growing classes for the watermark, per-tenant quota headroom
+        plan = self.sched.plan_admissions(len(free), self.strategy,
                                           num_running=len(self.running))
+        for req in plan.reject:
+            # over-quota: refused outright, not re-queued -- the tenant
+            # must release blocks (or its quota must be raised) first
+            req.state = "rejected"
+            req.t_done = time.perf_counter()
+            self.done.append(req)
+            self.rejections += 1
         for req in plan.resume:
             slot = free.pop(0)
-            if self.mgr.is_prefetched(req.rid):
+            if self.strategy.is_prefetched(req.rid):
                 # the background h2d lane already reallocated (and maybe
                 # scattered) this candidate: committing skips the
                 # synchronous swap-in entirely.  A completed prefetch is
@@ -329,14 +336,14 @@ class Engine:
                 # one is promoted to the urgent lane and rides this
                 # step's normal dispatch.  The byte ledger syncs through
                 # the queue's commit re-notification, not engine glue.
-                _, completed = self.mgr.commit_prefetch(req.rid)
+                _, completed = self.strategy.commit_prefetch(req.rid)
                 if completed:
                     self.prefetch_hits += 1
             else:
                 # migrate("device") reallocates AND enqueues the h2d
                 # scatter plan; the payload lands when the step loop
                 # dispatches the queue (before any decode read)
-                self.mgr.swap_in(req.rid)
+                self.strategy.swap_in(req.rid)
             self._next_tok[slot] = req.pending_tok
             self._place(req, slot)
         batch: List[Tuple[int, Request, int]] = []
@@ -349,11 +356,11 @@ class Engine:
                 # own group -- fail loudly, never corrupt tables
                 self.sched.validate_fork(self._slot_of(parent), slot,
                                          self.slots, self.dp_groups)
-                self.mgr.fork(parent, req.rid, shared)
-                self.mgr.extend(req.rid, len(req.prompt))
+                self.strategy.fork(parent, req.rid, shared, req.tenant)
+                self.strategy.extend(req.rid, len(req.prompt))
                 self.prefix_hits += 1
             else:
-                self.mgr.admit(req.rid, len(req.prompt))
+                self.strategy.admit(req.rid, len(req.prompt), req.tenant)
                 shared = 0
             self._place(req, slot)
             # forked children with a cached prefix take the suffix-only
@@ -382,112 +389,37 @@ class Engine:
     def _batched_prefill(self, batch: List[Tuple[int, Request, int]]) -> None:
         """ONE padded prefill call for all of this step's admissions.
 
-        Rows are padded to the longest (block-aligned) prompt.  Each
-        row's prefill table redirects to the sink block both (a) entries
-        beyond the row's own blocks (padding) and (b) COW-aliased prefix
-        blocks, whose KV already exists in the parent's blocks -- so the
-        compute runs full-width but writes land only in blocks the row
-        privately owns.
-        """
-        cfg = self.cache.config
-        bt = cfg.block_tokens
-        lens = [req.tokens_held for _, req, _ in batch]
-        S = -(-max(lens) // bt) * bt
-        toks = np.zeros((len(batch), S), np.int64)
-        tables = np.full((len(batch), cfg.max_blocks_per_seq), self.sink,
-                         np.int32)
-        for row, (slot, req, shared) in enumerate(batch):
-            toks[row, : lens[row]] = np.concatenate(
-                [np.asarray(req.prompt, np.int64),
-                 np.asarray(req.generated, np.int64)])
-            tbl = self.mgr.device_table(req.rid)
-            keep = tbl != NULL_BLOCK
-            keep[: -(-shared // bt) if shared else 0] = False
-            tables[row, keep] = tbl[keep]
-        view = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
-                            jnp.asarray(tables),
-                            jnp.zeros((len(batch),), jnp.int32), cfg)
+        The strategy owns padding, table/row construction and the KV or
+        state writes; the engine owns the clock and the billing: the
+        scheduler's admission budget EWMA sees the tokens the strategy
+        actually computed, and TTFT ends at the prefill's argmax."""
         t0 = time.perf_counter()
-        last, view = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, view,
-            jnp.asarray(lens, jnp.int32))
-        nxt = np.asarray(jnp.argmax(last, axis=-1))   # forces completion
+        nxt, billed = self.strategy.prefill(self.params, batch)
         t1 = time.perf_counter()
-        self.sched.observe_prefill(sum(lens), t1 - t0)
-        self.cache = dataclasses.replace(self.cache, k_pool=view.k_pool,
-                                         v_pool=view.v_pool)
+        self.sched.observe_prefill(billed, t1 - t0)
         for row, (slot, req, _) in enumerate(batch):
             self._next_tok[slot] = nxt[row]
             if req.t_first < 0:
                 # the first token IS the prefill's argmax: TTFT ends here
                 req.t_first = t1
-        self.prefill_tokens += sum(lens)
+        self.prefill_tokens += billed
 
     def _suffix_prefill(self, batch: List[Tuple[int, Request, int]]) -> None:
         """ONE padded suffix-only prefill call for this step's forked
-        admissions.
-
-        Each row runs the forward pass over just its un-cached suffix
-        (block-aligned: ``_find_parent`` aliases whole blocks); queries
-        attend through the row's FULL block table, so the COW-shared
-        prefix participates in attention without being recomputed --
-        sharing saves FLOPs, not just bytes.  Suffix KV writes route
-        through a per-row write table: sink for aliased blocks (the
-        parent already holds identical values) and padding, the privately
-        owned block otherwise.  A fully-contained fork (prompt inside
-        the parent's) still runs its last block's tail as the suffix to
-        produce first-token logits.  The padded width is bucketed to a
-        power-of-two block count so repeats hit a warm jit trace.
-        """
-        cfg = self.cache.config
-        bt = cfg.block_tokens
-        lens = [req.tokens_held for _, req, _ in batch]
-        starts = [shared if shared < lens[row]
-                  else ((lens[row] - 1) // bt) * bt
-                  for row, (_, _, shared) in enumerate(batch)]
-        nblk = max(-(-(lens[r] - starts[r]) // bt) for r in range(len(batch)))
-        nblk = min(1 << (nblk - 1).bit_length(), cfg.max_blocks_per_seq)
-        S = nblk * bt
-        toks = np.zeros((len(batch), S), np.int64)
-        tables = np.full((len(batch), cfg.max_blocks_per_seq), self.sink,
-                         np.int32)
-        wtables = np.full((len(batch), nblk), self.sink, np.int32)
-        for row, (slot, req, shared) in enumerate(batch):
-            full = np.concatenate([np.asarray(req.prompt, np.int64),
-                                   np.asarray(req.generated, np.int64)])
-            toks[row, : lens[row] - starts[row]] = full[starts[row]:]
-            tbl = self.mgr.device_table(req.rid)
-            keep = tbl != NULL_BLOCK
-            tables[row, keep] = tbl[keep]
-            n_alias = -(-shared // bt)
-            for j in range(nblk):
-                a = starts[row] // bt + j
-                if (a >= n_alias and a < len(tbl) and tbl[a] != NULL_BLOCK
-                        and a * bt < lens[row]):
-                    wtables[row, j] = tbl[a]
-        view = PagedKVCache(self.cache.k_pool, self.cache.v_pool,
-                            jnp.asarray(tables),
-                            jnp.zeros((len(batch),), jnp.int32), cfg)
-        suffix_tokens = sum(lens[r] - starts[r] for r in range(len(batch)))
+        admissions.  Bills ONLY the suffix: the admission budget's EWMA
+        and the token counters see the work actually done, and the
+        skipped prefix is the headline savings metric."""
         t0 = time.perf_counter()
-        last, view = self.model.prefill_suffix(
-            self.params, jnp.asarray(toks), view,
-            jnp.asarray(lens, jnp.int32), jnp.asarray(starts, jnp.int32),
-            jnp.asarray(wtables))
-        nxt = np.asarray(jnp.argmax(last, axis=-1))   # forces completion
+        nxt, suffix_tokens, saved = self.strategy.prefill_suffix(
+            self.params, batch)
         t1 = time.perf_counter()
-        # bill ONLY the suffix: the admission budget's EWMA and the
-        # token counters see the work actually done, and the skipped
-        # prefix is the headline savings metric
         self.sched.observe_prefill(suffix_tokens, t1 - t0)
-        self.cache = dataclasses.replace(self.cache, k_pool=view.k_pool,
-                                         v_pool=view.v_pool)
         for row, (slot, req, _) in enumerate(batch):
             self._next_tok[slot] = nxt[row]
             if req.t_first < 0:
                 req.t_first = t1
         self.prefill_tokens += suffix_tokens
-        self.prefill_tokens_saved += sum(starts)
+        self.prefill_tokens_saved += saved
 
     # ---------------- preemption / swap-out ----------------
     def _preempt_slot(self, slot: int) -> None:
@@ -496,8 +428,9 @@ class Engine:
         # migrate("host") frees the ids and enqueues the d2h plan; the
         # allocator HOLDS the vacated ids until the gather is
         # dispatched, so reuse cannot clobber the payload mid-flight,
-        # and the host copy overlaps the next decode (fence at N+1)
-        self.mgr.swap_out(req.rid)
+        # and the host copy overlaps the next decode (fence at N+1).
+        # Composite strategies move EVERY pool class here in one call.
+        self.strategy.swap_out(req.rid)
         self._deregister_prefix(req)
         req.slot = -1
         self.sched.on_preempt(req)
@@ -532,8 +465,8 @@ class Engine:
         schedule would have had, so pressure behavior stays
         decision-identical to the ``drain()`` fallback.
         """
-        for rid in self.mgr.prefetched_ids():
-            self.mgr.cancel_prefetch(rid)
+        for rid in self.strategy.prefetched_ids():
+            self.strategy.cancel_prefetch(rid)
             self.prefetch_cancels += 1
             return rid
         if not self.running:
@@ -545,28 +478,13 @@ class Engine:
 
     # ---------------- device-state sync ----------------
     def _sync_device_state(self) -> None:
-        """Derive device tables AND seq_lens from host truth each step.
-
-        Empty slots map to the SINK block, not NULL: jax scatter WRAPS
-        negative indices, so a NULL (-1) entry would silently clobber
-        the pool's last block on every padded decode write.
-
-        This is the READ BARRIER: the decode gathers every table entry,
-        so every running mapping must be settled (no lease still the
-        target of an unfenced transfer) -- ``assert_settled`` raises
-        ``UnfencedReadError`` if the dispatch phase was skipped.
-        """
-        cfg = self.cache.config
-        tables = np.full((self.slots, cfg.max_blocks_per_seq), self.sink,
-                         np.int32)
-        lens = np.zeros(self.slots, np.int32)
-        for slot, req in self.running.items():
-            self.mgr.mapping(req.rid).assert_settled()
-            tables[slot] = self.mgr.device_table(req.rid)
-            lens[slot] = req.tokens_held
-        self.cache = dataclasses.replace(
-            self.cache, block_tables=jnp.asarray(tables),
-            seq_lens=jnp.asarray(lens))
+        """Derive the strategy's device tables/rows from host truth each
+        step.  This is the READ BARRIER: the decode gathers every table
+        or row entry, so every running mapping must be settled (no lease
+        still the target of an unfenced transfer) -- the strategy's
+        ``assert_settled`` raises ``UnfencedReadError`` if the dispatch
+        phase was skipped."""
+        self.strategy.sync_device_state(self.running)
 
     # ---------------- main loop ----------------
     def _grow_for_next_token(self) -> int:
@@ -577,7 +495,8 @@ class Engine:
         registered reclaimer (LIFO preemption) inside the Arena; only
         when the writer ITSELF was the victim does ``LeaseRevokedError``
         surface here, and then the write is moot -- its blocks are
-        already on the host tier.
+        already on the host tier.  Constant-state disciplines return []
+        unconditionally: their footprint never grows.
         """
         grown = 0
         for slot in sorted(self.running):
@@ -585,7 +504,8 @@ class Engine:
                 continue
             req = self.running[slot]
             try:
-                grown += len(self.mgr.extend(req.rid, req.tokens_held + 1))
+                grown += len(self.strategy.extend(req.rid,
+                                                  req.tokens_held + 1))
             except LeaseRevokedError:
                 continue
         return grown
@@ -601,7 +521,8 @@ class Engine:
         pressure, falling back to LIFO preemption inside the Arena, and
         ENQUEUES the fulfilment copy on the transfer plane); the queue
         preserves enqueue order, so a preemption gather later in the
-        same pass reads settled blocks once dispatched.
+        same pass reads settled blocks once dispatched.  Disciplines
+        that never share return None unconditionally.
         """
         copies = 0
         for slot in sorted(self.running):
@@ -609,7 +530,8 @@ class Engine:
                 continue
             req = self.running[slot]
             try:
-                plan = self.mgr.ensure_writable(req.rid, req.tokens_held)
+                plan = self.strategy.ensure_writable(req.rid,
+                                                     req.tokens_held)
             except LeaseRevokedError:
                 continue            # the writer itself was reclaimed
             if plan is not None:
@@ -619,23 +541,23 @@ class Engine:
 
     # ---------------- compaction (Arena defrag) ----------------
     def compact_now(self) -> int:
-        """One Arena ``compact()`` cycle: move live blocks to the dense
-        prefix; the copy plan rides the transfer plane and is
-        dispatched IMMEDIATELY (it would launch before the decode
-        anyway, and its holds on the vacated sources must not leak into
-        this step's admission arithmetic -- the eager fallback releases
-        them inside the enqueue's drain, so the overlapped schedule
-        must match or the two diverge on marginal admissions).
+        """One Arena ``compact()`` cycle over every pool class the
+        strategy serves: move live blocks to the dense prefix; the copy
+        plans ride the transfer plane and are dispatched IMMEDIATELY
+        (they would launch before the decode anyway, and their holds on
+        the vacated sources must not leak into this step's admission
+        arithmetic -- the eager fallback releases them inside the
+        enqueue's drain, so the overlapped schedule must match or the
+        two diverge on marginal admissions).
 
         Safe between steps (no writes in flight); every table built
-        afterwards (``_sync_device_state``, prefill tables) reads the
-        rewritten leases, so decoding is token-identical across the
-        relocation -- the paper's 'Relocation / Migration' row.  Returns
-        the number of blocks moved.
+        afterwards reads the rewritten leases, so decoding is
+        token-identical across the relocation -- the paper's
+        'Relocation / Migration' row.  Returns blocks moved.
         """
-        src, _ = self.arena.compact(self.mgr.pool_class)
+        moved = self.strategy.compact_now()
         self.transfers.dispatch(lanes=(URGENT,))
-        return len(src)
+        return moved
 
     def _maybe_compact(self) -> None:
         """ROADMAP defrag pass: run when free blocks are plentiful but
@@ -644,8 +566,7 @@ class Engine:
         group ranges."""
         if not self.auto_compact or self.dp_groups > 1:
             return
-        if self.arena.should_compact(
-                self.mgr.pool_class,
+        if self.strategy.should_compact(
                 min_free_frac=self.compact_free_frac,
                 frag_threshold=self.compact_frag_threshold):
             self.compact_now()
@@ -656,32 +577,20 @@ class Engine:
         scatter overlaps it -- the candidate's next resume then commits
         bookkeeping instead of waiting on a synchronous swap-in.
 
-        Guards keep the speculation free of side effects: never while
-        the candidate's swap-out is still in transit (completing it
-        early would un-overlap the d2h double buffer), never under
-        pressure (headroom must cover the watermark plus a block per
-        runner -- and the reclaimer cancels speculation FIRST anyway),
-        never twice for the same candidate.
+        The strategy guards viability (never while the candidate's
+        swap-out is still in transit, never under pressure -- headroom
+        must cover the watermark, and the reclaimer cancels speculation
+        FIRST anyway -- never twice for the same candidate, and never
+        at all for composite disciplines, where a half-arrived sequence
+        is unusable).
         """
         if not self.prefetch_enabled:
             return
         for req in self.sched.resume_candidates():
-            rid = req.rid
-            if self.mgr.is_prefetched(rid) or rid not in self.mgr.swapped:
+            if not self.strategy.prefetch_viable(req.rid,
+                                                 self.sched.watermark):
                 continue
-            if self.store.in_transit(rid):
-                continue                 # wait for the fence at N+1
-            need = self.mgr.swapped[rid]
-            if need == 0:
-                continue
-            # same headroom the resume itself would be held to, but
-            # against CURRENT blocks rather than the worst case -- the
-            # window in between is exactly where speculation pays.  A
-            # wrong guess is free: pressure cancels the speculation
-            # before anything else moves.
-            if self.mgr.free_blocks - need < self.sched.watermark:
-                continue
-            self.mgr.prefetch(rid)
+            self.strategy.prefetch(req.rid)
             self.prefetches += 1
 
     def step(self) -> None:
@@ -727,8 +636,7 @@ class Engine:
         self._sync_device_state()
         tokens = jnp.asarray(self._next_tok)
         t0 = time.perf_counter()
-        logits, self.cache = self.model.decode_step(self.params, tokens,
-                                                    self.cache)
+        logits = self.strategy.decode(self.params, tokens)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))  # forces completion
         self.sched.observe_decode(time.perf_counter() - t0)
         # compute mark: any dispatched host copy that completes -- or
@@ -743,7 +651,7 @@ class Engine:
                 req.state = "done"
                 req.t_done = time.perf_counter()
                 self.done.append(req)
-                self.mgr.release(req.rid)
+                self.strategy.release(req.rid)
                 self._deregister_prefix(req)
                 del self.running[slot]
 
@@ -779,18 +687,13 @@ class Engine:
         """Re-adopt a preempted request after ``Arena.restore``.
 
         The arena snapshot carries the sequence's host-tier payload and
-        mapping; the caller re-creates the ``Request`` (rid, prompt,
-        generated, pending_tok are serving-layer state) and this hooks
-        both back together: the manager adopts the restored mapping and
-        the scheduler queues the request for resume.
+        mapping (every pool class of a composite); the caller re-creates
+        the ``Request`` (rid, prompt, generated, pending_tok are
+        serving-layer state) and this hooks both back together: the
+        strategy adopts the restored mappings and the scheduler queues
+        the request for resume.
         """
-        m = self.arena.find_mapping(self.mgr.pool_class, req.rid)
-        if m is None or m.placement != "host":
-            raise ValueError(
-                f"no restored host-resident mapping for rid {req.rid}; "
-                f"run Arena.restore first (device-resident sequences do "
-                f"not survive a restart -- re-submit them)")
-        self.mgr.adopt(req.rid, m)
+        self.strategy.adopt_restored(req.rid)
         self.sched.on_preempt(req)
 
     # ---------------- introspection ----------------
@@ -805,6 +708,7 @@ class Engine:
             "prefix_hits": self.prefix_hits,
             "cow_copies": self.cow_copies,
             "preemptions": self.preemptions,
+            "rejections": self.rejections,
             "swap_outs": st.swap_outs,
             "swap_ins": st.swap_ins,
             "swap_out_bytes": st.swap_out_bytes,
@@ -817,7 +721,7 @@ class Engine:
             "prefetch_hit_rate": (self.prefetch_hits
                                   / max(self.store.stats.swap_ins, 1)
                                   if self.prefetches else 0.0),
-            "pool_utilization": self.mgr.utilization,
+            "pool_utilization": self.strategy.utilization,
             "compactions": self.arena.compactions,
             "blocks_compacted": self.arena.blocks_compacted,
             "watermark_effective": self.sched.watermark,
@@ -862,45 +766,10 @@ class Engine:
                 for tenant, d in sorted(samples.items())}
 
     def check_consistency(self) -> None:
-        """Invariant audit (used by tests after every step)."""
-        alloc = self.mgr.allocator
-        assert (alloc.num_used + alloc.num_free + alloc.num_held
-                == alloc.num_blocks)
-        assert alloc.refcount(self.sink) == 1
-        bt = self.cache.config.block_tokens
-        lens = np.asarray(self.cache.seq_lens)
+        """Invariant audit (used by tests after every step): engine-
+        level slot bookkeeping here, pool/ledger/lease invariants
+        delegated to the strategy (which checks EVERY class it serves).
+        """
         for slot, req in self.running.items():
             assert req.state == "running" and req.slot == slot
-            tbl = self.mgr.block_ids(req.rid)
-            assert len(tbl) * bt >= req.tokens_held
-            assert all(alloc.is_allocated(b) for b in tbl)
-            assert lens[slot] == req.tokens_held, (slot, lens[slot],
-                                                   req.tokens_held)
-        # transfer-plane accounting: every swapped sequence's payload is
-        # either deposited on the host tier or IN TRANSIT (its d2h plan
-        # enqueued/dispatched but not fenced) -- never both, never lost
-        transit = set(self.transfers.in_transit(self.mgr.pool_class))
-        assert len(self.store) + len(transit) == len(self.mgr.swapped)
-        for rid in self.mgr.swapped:
-            assert rid in self.store or rid in transit
-        # in-flight leases must exactly mirror pending-plan destinations
-        # (speculative prefetch leases included: their background-lane
-        # scatter counts as a pending plan like any other)
-        pending_dst = self.transfers.in_flight_blocks(self.mgr.pool_class)
-        for rid in self.mgr.tables:
-            for lease in self.mgr.mapping(rid).leases:
-                if lease.in_flight:
-                    assert lease.block in pending_dst, (
-                        f"rid {rid}: lease {lease!r} flagged in-flight "
-                        f"but no pending plan targets it")
-        for rid in self.mgr.prefetched_ids():
-            m = self.mgr.mapping(rid)
-            assert rid in self.store, (
-                f"rid {rid}: prefetched but its host payload is gone")
-            for lease in m._spec:
-                if lease.in_flight:
-                    assert lease.block in pending_dst, (
-                        f"rid {rid}: speculative lease {lease!r} flagged "
-                        f"in-flight but no pending plan targets it")
-        # lease registry mirrors allocator refcounts exactly
-        self.arena.check_registry(self.mgr.pool_class)
+        self.strategy.check_consistency(self.running)

@@ -178,11 +178,20 @@ class FCFSAdmission(AdmissionPolicy):
     def push(self, req: Request) -> None:
         self._queue.append(req)
 
+    @staticmethod
+    def _key(req: Request, i: int) -> Tuple:
+        # EDF within each priority class: (class, deadline, submission
+        # index).  A request without a deadline sorts at +inf, so an
+        # all-best-effort queue reduces EXACTLY to (class, index) -- the
+        # pre-EDF order, and with all-zero classes to index 0, the
+        # original queue[0].
+        return (req.priority_class,
+                req.deadline if req.deadline is not None else float("inf"),
+                i)
+
     def _head_idx(self) -> int:
-        # stable min over (class, submission index): all-zero classes
-        # reduce to index 0, the old queue[0]
         return min(range(len(self._queue)),
-                   key=lambda i: (self._queue[i].priority_class, i))
+                   key=lambda i: self._key(self._queue[i], i))
 
     def peek(self) -> Optional[Request]:
         return self._queue[self._head_idx()] if self._queue else None
@@ -195,7 +204,7 @@ class FCFSAdmission(AdmissionPolicy):
 
     def snapshot(self) -> List[Request]:
         idx = sorted(range(len(self._queue)),
-                     key=lambda i: (self._queue[i].priority_class, i))
+                     key=lambda i: self._key(self._queue[i], i))
         return [self._queue[i] for i in idx]
 
 
@@ -277,6 +286,9 @@ class StepPlan:
     """One step's admission decisions, in execution order."""
     resume: List[Request] = dataclasses.field(default_factory=list)
     admit: List[Request] = dataclasses.field(default_factory=list)
+    #: popped candidates whose tenant is over its block quota -- never
+    #: admitted; the engine finishes them with state="rejected"
+    reject: List[Request] = dataclasses.field(default_factory=list)
 
     def __bool__(self) -> bool:
         return bool(self.resume or self.admit)
@@ -452,7 +464,18 @@ class Scheduler:
         then the FCFS queue head); the first one that does not fit ends
         admission -- no queue jumping, so admission order equals
         completion-pressure order.
+
+        A strategy view exposing ``footprint(req)`` (per-pool-class
+        block dict) takes the VECTOR path instead: the same loop over a
+        dict of per-class free counts, the watermark applied only to
+        classes the strategy declares growing (a constant-state class's
+        footprint is exact, so no headroom is reserved for it), plus
+        per-tenant quota enforcement -- over-quota candidates are popped
+        onto ``StepPlan.reject`` instead of blocking the head of line.
         """
+        if hasattr(mem, "footprint"):
+            return self._plan_admissions_vector(free_slots, mem,
+                                                num_running)
         plan = StepPlan()
         free = getattr(mem, "free_blocks", None)
         if free is None:                     # legacy accounting stubs
@@ -487,6 +510,60 @@ class Scheduler:
                 self.policy.pop()
                 plan.admit.append(self._stamp(cand))
             free -= need
+            if budget is not None:
+                budget = max(0, budget - cost)
+            free_slots -= 1
+        return plan
+
+    def _plan_admissions_vector(self, free_slots: int, mem,
+                                num_running: int) -> StepPlan:
+        """Per-pool-class admission against a strategy view (see
+        ``plan_admissions``).  Byte-for-byte the scalar loop when the
+        strategy has one growing class and no quotas."""
+        plan = StepPlan()
+        free = {c: int(n) for c, n in mem.free_by_class().items()}
+        growing = frozenset(getattr(mem, "growing_classes", free))
+        budget = self.prefill_budget
+        planned: Dict[Tuple[str, str], int] = {}
+        while free_slots > 0:
+            from_preempted = len(self.preempted) > 0
+            cand: Request = (self.preempted.peek() if from_preempted
+                             else self.policy.peek())
+            if cand is None:
+                break
+            need = mem.footprint(cand)
+            if not from_preempted and hasattr(mem, "quota_headroom"):
+                room = mem.quota_headroom(cand.tenant)
+                if any(room.get(c, float("inf"))
+                       - planned.get((cand.tenant, c), 0) < n
+                       for c, n in need.items()):
+                    # over-quota: reject rather than stall the queue --
+                    # a quota violation never resolves by waiting
+                    self.policy.pop()
+                    plan.reject.append(cand)
+                    continue
+            busy = num_running > 0 or bool(plan)
+            if any(n > free.get(c, 0) for c, n in need.items()):
+                break                    # worst-case footprint must fit
+            if busy and any(c in growing
+                            and free.get(c, 0) - n < self.watermark
+                            for c, n in need.items()):
+                break                    # growth headroom (growing only)
+            cost = (0 if from_preempted
+                    else self.prefill_cost_fn(cand) if self.prefill_cost_fn
+                    else cand.tokens_held)
+            if busy and budget is not None and cost > budget:
+                break                    # prefill chunking
+            if from_preempted:
+                self.preempted.pop()
+                plan.resume.append(self._stamp(cand))
+            else:
+                self.policy.pop()
+                plan.admit.append(self._stamp(cand))
+            for c, n in need.items():
+                free[c] = free.get(c, 0) - n
+                key = (cand.tenant, c)
+                planned[key] = planned.get(key, 0) + n
             if budget is not None:
                 budget = max(0, budget - cost)
             free_slots -= 1

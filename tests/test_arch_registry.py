@@ -1,0 +1,344 @@
+"""Architecture registry: heterogeneous cache disciplines, one Arena.
+
+Acceptance centerpiece: a scripted mixed workload serving a transformer
+(growing paged KV), a pure SSM (constant state) and a zamba2 hybrid
+(both) CONCURRENTLY from one shared Arena, token-identical per family
+to standalone runs, with forced preemption/resume cycles hitting all
+three pool-class disciplines -- including a constant-state block round-
+tripping through the host tier -- and ``assert_quiescent`` clean at
+drain.
+
+Satellites pinned here: registry resolution (family -> strategy -> pool
+classes, unservable rows loud), EDF admission ordering and its exact
+degradation to the pre-EDF FIFO, per-tenant block quotas rejecting
+over-quota admissions, the read-only segment's share/refuse-write
+contract, and a property test interleaving alloc/free across two pool
+classes of one arena.
+"""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import get_config
+from repro.mem import Arena
+from repro.models.api import build_model
+from repro.serve.arch import (ARCHITECTURES, CompositeStrategy,
+                              ConstantStateStrategy, PagedKVStrategy,
+                              ReadOnlySegment, build_strategy, resolve)
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import FCFSAdmission
+from conftest import assert_engine_quiescent
+from _hypothesis_compat import given, settings, strategies as st
+
+
+@pytest.fixture(scope="module")
+def families():
+    """One tiny model per discipline: paged / constant / composite."""
+    out = {}
+    for key, name in (("dense", "gemma_2b"), ("ssm", "mamba2_370m"),
+                      ("hybrid", "zamba2_2p7b")):
+        cfg = get_config(name).reduced()
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(hash(key) % 2**31))
+        out[key] = (model, params)
+    return out
+
+
+def _prompts(rng, n, lo=6, hi=20):
+    return [rng.randint(2, 500, size=rng.randint(lo, hi)) for _ in range(n)]
+
+
+def _make_engine(model, params, *, arena, prefix, num_blocks):
+    return Engine(model, params, slots=2, max_seq=64,
+                  num_blocks=num_blocks, eos_id=-1, prefill_budget=None,
+                  arena=arena, pool_prefix=prefix)
+
+
+# ---------------------------------------------------------------------------
+# registry resolution
+# ---------------------------------------------------------------------------
+def test_resolve_maps_families_to_disciplines(families):
+    assert resolve(families["dense"][0]).strategy is PagedKVStrategy
+    assert resolve(families["ssm"][0]).strategy is ConstantStateStrategy
+    assert resolve(families["hybrid"][0]).strategy is CompositeStrategy
+
+
+def test_registered_but_unservable_rows_raise():
+    """whisper (read-only cross-attention segment) and rwkv6 (prefill
+    does not mask lengths) are REGISTERED -- the table documents the
+    discipline -- but building them for serving is loudly refused."""
+    rows = {r.key: r for r in ARCHITECTURES}
+    assert not rows["audio"].served and not rows["rwkv6"].served
+    for name in ("whisper_tiny", "rwkv6_7b"):
+        model = build_model(get_config(name).reduced())
+        with pytest.raises(NotImplementedError):
+            build_strategy(model, arena=Arena(), slots=2, max_seq=64,
+                           num_blocks=16)
+
+
+def test_engine_pool_classes_match_registry(families):
+    """The engine's strategy registers exactly the registry row's pool
+    classes (prefix-namespaced) and the constant class never grows."""
+    arena = Arena()
+    eng = _make_engine(*families["hybrid"], arena=arena, prefix="zb-",
+                       num_blocks=24)
+    assert eng.strategy.pool_classes == ["zb-kv", "zb-state"]
+    assert eng.strategy.growing_classes == frozenset(["zb-kv"])
+    assert not eng.share_prefixes and not eng.suffix_prefill
+    eng.release_arena()
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance test: three disciplines, one Arena
+# ---------------------------------------------------------------------------
+def _drive(engines, *, preempt_at=(), max_steps=200):
+    """Round-robin step loop over engines sharing one arena; at each
+    step index in ``preempt_at``, force-preempt every engine's LIFO
+    victim (swap-out -> host tier -> later resume)."""
+    for step in range(max_steps):
+        if all(not (e.sched.has_work or e.running) for e in engines):
+            break
+        if step in preempt_at:
+            for e in engines:
+                e.preempt_latest()
+        for e in engines:
+            e.step()
+    for e in engines:
+        e.transfers.drain()
+    return {id(e): {r.rid: list(r.generated) for r in e.done}
+            for e in engines}
+
+
+def test_mixed_disciplines_share_one_arena(families):
+    """transformer + mamba2 + zamba2 served concurrently from ONE
+    Arena: per-family tokens identical to each engine running alone in
+    a private arena, despite forced preemption/resume through all three
+    disciplines' pool classes mid-run."""
+    rng = np.random.RandomState(11)
+    prompts = {k: _prompts(np.random.RandomState(100 + i), 3)
+               for i, k in enumerate(("dense", "ssm", "hybrid"))}
+
+    # standalone references: private arena, no preemption
+    ref = {}
+    for key in prompts:
+        model, params = families[key]
+        eng = _make_engine(model, params, arena=None, prefix="",
+                           num_blocks=24)
+        for i, pr in enumerate(prompts[key]):
+            eng.submit(Request(rid=i, prompt=pr, max_new=5))
+        eng.run(200)
+        ref[key] = {r.rid: list(r.generated) for r in eng.done}
+        assert_engine_quiescent(eng)
+
+    # mixed: one arena, prefix-namespaced pool classes, forced churn
+    arena = Arena()
+    engines = {}
+    for key, prefix in (("dense", ""), ("ssm", "m2-"), ("hybrid", "zb-")):
+        model, params = families[key]
+        engines[key] = _make_engine(model, params, arena=arena,
+                                    prefix=prefix, num_blocks=24)
+        for i, pr in enumerate(prompts[key]):
+            engines[key].submit(Request(rid=i, prompt=pr, max_new=5))
+
+    # warm up until everything admitted at least once, then preempt
+    for _ in range(3):
+        for e in engines.values():
+            e.step()
+    for e in engines.values():
+        e.preempt_latest()
+    # the preemption swap-out reached every discipline's pool class:
+    # the SSM engine's victim moved its CONSTANT-STATE block to the
+    # host tier, the hybrid's victim moved kv AND state
+    for e in engines.values():
+        e.sync_transfers()
+    assert len(engines["ssm"].mgr.swapped) >= 1
+    assert len(engines["ssm"].store) >= 1          # state payload on host
+    assert len(engines["hybrid"].mgr.swapped) >= 1
+    assert len(engines["hybrid"].strategy.state_mgr.swapped) >= 1
+    assert len(engines["dense"].mgr.swapped) >= 1
+
+    _drive(list(engines.values()), preempt_at=(2,), max_steps=200)
+
+    for key, eng in engines.items():
+        assert eng.preemptions >= 1
+        got = {r.rid: list(r.generated) for r in eng.done}
+        assert got == ref[key], f"family {key} diverged under sharing"
+        assert eng.stats["swap_outs"] >= 1 and eng.stats["swap_ins"] >= 1
+
+    # per-pool-class accounting is visible in the shared ArenaStats
+    stats = arena.stats()
+    for cls in ("kv", "m2-state", "zb-kv", "zb-state"):
+        assert cls in stats.classes
+        assert stats[cls].num_used == stats[cls].pinned  # only sinks left
+
+    # one address space, fully quiescent at drain
+    for eng in engines.values():
+        assert_engine_quiescent(eng)
+    arena.assert_quiescent()
+
+
+def test_constant_state_preempt_resume_is_exact(families):
+    """One SSM sequence, preempted mid-generation: the resumed run's
+    tokens equal the uninterrupted run's -- the whole recurrent state
+    rode ONE host block round-trip."""
+    model, params = families["ssm"]
+    rng = np.random.RandomState(5)
+    pr = rng.randint(2, 500, size=9)
+
+    eng = _make_engine(model, params, arena=None, prefix="", num_blocks=4)
+    eng.submit(Request(rid=0, prompt=pr, max_new=8))
+    eng.run(100)
+    ref = list(eng.done[0].generated)
+    assert_engine_quiescent(eng)
+
+    eng = _make_engine(model, params, arena=None, prefix="", num_blocks=4)
+    eng.submit(Request(rid=0, prompt=pr, max_new=8))
+    for _ in range(3):
+        eng.step()
+    eng.preempt_latest()
+    eng.sync_transfers()
+    assert eng.mgr.swapped == {0: 1}       # exactly one block moved
+    assert 0 in eng.store
+    eng.run(100)
+    assert list(eng.done[0].generated) == ref
+    assert eng.stats["swap_ins"] == 1
+    assert_engine_quiescent(eng)
+
+
+# ---------------------------------------------------------------------------
+# EDF admission (satellite)
+# ---------------------------------------------------------------------------
+def _req(rid, *, pc=0, deadline=None):
+    return Request(rid=rid, prompt=np.asarray([2, 3]), max_new=2,
+                   priority_class=pc, deadline=deadline)
+
+
+def test_edf_orders_within_priority_class():
+    pol = FCFSAdmission()
+    for r in (_req(0, deadline=50.0), _req(1, deadline=10.0),
+              _req(2),                      # best effort -> +inf, last
+              _req(3, pc=-1, deadline=99.0),  # higher class wins anyway
+              _req(4, deadline=10.0)):        # ties break on submission
+        pol.push(r)
+    assert [pol.pop().rid for _ in range(5)] == [3, 1, 4, 0, 2]
+
+
+def test_edf_degrades_exactly_to_fifo_without_deadlines():
+    """All-best-effort queues sort (class, +inf, index): EXACTLY the
+    pre-EDF priority-bucketed FIFO -- pinned so the default workload's
+    schedule is bit-identical across the EDF change."""
+    pol = FCFSAdmission()
+    for r in (_req(0, pc=1), _req(1), _req(2, pc=1), _req(3)):
+        pol.push(r)
+    assert [pol.pop().rid for _ in range(4)] == [1, 3, 0, 2]
+
+
+# ---------------------------------------------------------------------------
+# per-tenant quotas (satellite)
+# ---------------------------------------------------------------------------
+def test_over_quota_tenant_is_rejected_not_stalled(families):
+    model, params = families["dense"]
+    eng = Engine(model, params, slots=4, max_seq=64, num_blocks=32,
+                 eos_id=-1, prefill_budget=None, share_prefixes=False)
+    cfg = eng.cache.config
+    # idempotent re-registration updates the quota on the live class
+    eng.arena.register_class("kv", num_blocks=cfg.num_blocks,
+                             block_nbytes=cfg.swap_nbytes_per_block(),
+                             dp_groups=cfg.dp_groups,
+                             quota_by_tenant={"capped": 2})
+    rng = np.random.RandomState(3)
+    pr = rng.randint(2, 500, size=14)
+    # worst case 14 + 10 = 24 tokens = 3 blocks > the 2-block quota
+    eng.submit(Request(rid=0, prompt=pr, max_new=10, tenant="capped"))
+    eng.submit(Request(rid=1, prompt=pr, max_new=4))
+    done = eng.run(100)
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].state == "rejected" and not by_rid[0].generated
+    assert by_rid[1].state == "done" and len(by_rid[1].generated) == 4
+    assert eng.rejections == 1 and eng.stats["rejections"] == 1
+    # the quota and the per-tenant charge surface in ArenaStats
+    assert eng.arena.stats()["kv"].quota_by_tenant == {"capped": 2}
+    assert_engine_quiescent(eng)
+
+
+def test_within_quota_tenant_is_admitted(families):
+    model, params = families["ssm"]
+    eng = Engine(model, params, slots=2, max_seq=64, num_blocks=4,
+                 eos_id=-1, prefill_budget=None)
+    eng.arena.register_class("state", num_blocks=4,
+                             block_shape=(model.state_elems,),
+                             dtype=np.float32,
+                             quota_by_tenant={"t": 1})
+    pr = np.random.RandomState(4).randint(2, 500, size=8)
+    eng.submit(Request(rid=0, prompt=pr, max_new=3, tenant="t"))
+    done = eng.run(50)
+    assert done[0].state == "done" and len(done[0].generated) == 3
+    assert eng.rejections == 0
+    assert_engine_quiescent(eng)
+
+
+# ---------------------------------------------------------------------------
+# read-only segment (whisper's cross-attention discipline)
+# ---------------------------------------------------------------------------
+def test_readonly_segment_shares_and_refuses_writes():
+    a = Arena()
+    a.register_class("xattn", num_blocks=8, block_nbytes=64)
+    seg = ReadOnlySegment(a, "xattn")
+    ids = seg.deposit("enc", 3)            # encode writes once
+    assert len(ids) == 3
+    for beam in ("b0", "b1", "b2"):
+        assert seg.share("enc", beam) == ids   # pure aliasing
+    alloc = a.allocator("xattn")
+    for b in ids:
+        assert alloc.refcount(b) == 4      # segment + 3 beams, 0 copies
+    with pytest.raises(TypeError):
+        seg.ensure_writable("enc", 0)      # read-only IS the contract
+    for beam in ("b0", "b1", "b2"):
+        seg.drop_reader(beam)
+    for b in ids:
+        assert alloc.refcount(b) == 1
+    seg.release("enc")
+    a.assert_quiescent()
+
+
+# ---------------------------------------------------------------------------
+# property: alloc/free interleaved across two pool classes
+# ---------------------------------------------------------------------------
+@given(st.lists(st.sampled_from(
+    ["grow-kv", "admit-state", "free-kv", "free-state"]), max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_two_pool_classes_never_interfere(ops):
+    """Any interleaving of growth in a paged-style class and admit/
+    release in a constant-style class keeps both allocators' accounting
+    exact and independent -- one arena, two disciplines, no bleed."""
+    a = Arena()
+    a.register_class("kv", num_blocks=12, block_nbytes=32)
+    a.register_class("state", num_blocks=5, block_nbytes=64)
+    kv = a.mapping("kv", "seq")
+    states = {}
+    next_sid, kv_blocks = 0, 0
+    for op in ops:
+        if op == "grow-kv" and kv_blocks < 12:
+            kv.append_blocks(1)
+            kv_blocks += 1
+        elif op == "admit-state" and len(states) < 5:
+            m = a.mapping("state", f"s{next_sid}")
+            m.ensure_capacity(1)
+            states[next_sid] = m
+            next_sid += 1
+        elif op == "free-kv" and kv_blocks:
+            kv.pop_block()
+            kv_blocks -= 1
+        elif op == "free-state" and states:
+            sid, m = next(iter(states.items()))
+            m.free()
+            del states[sid]
+        assert a.num_used("kv") == kv_blocks
+        assert a.num_used("state") == len(states)
+        assert a.num_free("kv") == 12 - kv_blocks
+        assert a.num_free("state") == 5 - len(states)
+    kv.free()
+    for m in states.values():
+        m.free()
+    a.assert_quiescent()

@@ -43,7 +43,7 @@ def test_no_direct_transfer_calls_outside_transfer_plane():
     kernel_call = re.compile(
         r"\b(?:gather_blocks|scatter_blocks|copy_pool_blocks|block_copy)"
         r"\s*\(")
-    host_verb = re.compile(r"\bhost_(?:deposit|take)\s*\(")
+    host_verb = re.compile(r"\bhost_(?:deposit|take|peek|discard)\s*\(")
     kernels_dir = REPO / "src" / "repro" / "kernels"
     mem_dir = REPO / "src" / "repro" / "mem"
     offenders = []
