@@ -62,6 +62,14 @@ identity vs standalone runs, a forced preemption round-trip through
 every pool-class discipline, and arena quiescence at drain; per-family
 tokens/s and per-pool-class block stats land under ``mixed_arch``.
 
+``--smoke`` also runs ``migrate_probe``: the scripted workload migrated
+MID-DECODE to a fresh engine (incremental pre-copy + stop-and-copy via
+``serve/disagg.migrate_live``), gated on token identity with an
+unmigrated control and a stop-and-copy tail strictly smaller than the
+first pre-copy round, plus a prefill/decode disaggregation run gated
+token-identical to the monolithic engine; the section lands standalone
+in ``BENCH_migrate.json``.
+
 ``--baseline PATH`` compares tokens/s against a committed report and
 exits non-zero on a regression beyond ``--regress-frac`` (CI gate).
 Emits the usual CSV rows too (see benchmarks/common.py).
@@ -78,6 +86,7 @@ import jax
 
 OUT_JSON = "BENCH_serve.json"
 OUT_TRANSFERS = "BENCH_transfers.json"
+OUT_MIGRATE = "BENCH_migrate.json"
 
 
 # model/params reused between the overlapped and drain() runs of
@@ -368,6 +377,88 @@ def mixed_arch_probe(args):
             "arena_quiescent": quiescent, "ok": ok}
 
 
+def migrate_probe(args):
+    """Cross-process section: (1) a serving engine migrated MID-DECODE
+    -- pre-copy rounds overlapping decode, dirty-set convergence, a
+    stop-and-copy tail strictly smaller than the first round's full
+    copy -- must resume on a fresh engine token-identical to an
+    unmigrated control, across a forced preemption; (2) prefill/decode
+    disaggregation (prefill worker -> BlockBundle handoff -> decode
+    adoption) must be token-identical to the monolithic engine.  The
+    whole section lands in ``BENCH_migrate.json`` and gates ``all_ok``.
+    """
+    import argparse as _ap
+    import os
+    import tempfile
+    from repro.serve.disagg import (DisaggregatedEngine, PrefillWorker,
+                                    migrate_live)
+    from repro.serve.engine import Request
+
+    pargs = _ap.Namespace(**{**vars(args), "slots": 2, "num_blocks": 24,
+                             "prefill_budget": None})
+    cfg, control = build(pargs)
+    rng = np.random.RandomState(args.seed)
+    prompts = [rng.randint(2, cfg.vocab_size,
+                           size=int(rng.randint(6, 20))) for _ in range(5)]
+
+    def drive_pre(eng):
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr.copy(),
+                               max_new=args.max_new))
+        for s in range(3):
+            eng.step()
+            if s == 1 and eng.running:
+                eng.preempt_latest()
+
+    drive_pre(control)
+    control.run(600)
+    want = {r.rid: list(r.generated) for r in control.done}
+
+    _, src = build(pargs)
+    drive_pre(src)
+    path = os.path.join(tempfile.mkdtemp(prefix="bench_migrate_"),
+                        "arena.npz")
+    t0 = time.perf_counter()
+    dst, sess = migrate_live(src, lambda: build(pargs)[1], path)
+    mig_wall = time.perf_counter() - t0
+    dst.run(600)
+    rep = sess.migration_report()
+    got = {r.rid: list(r.generated) for r in dst.done}
+    migration = {
+        **rep,
+        "completed": len(dst.done),
+        "token_identical": got == want,
+        "migrate_wall_s": round(mig_wall, 3),
+        "snapshot_bytes": os.path.getsize(path),
+    }
+
+    mono_want = {}
+    _, mono = build(pargs)
+    for i, pr in enumerate(prompts[:4]):
+        mono.submit(Request(rid=i, prompt=pr.copy(), max_new=args.max_new))
+    mono.run(600)
+    mono_want = {r.rid: list(r.generated) for r in mono.done}
+    pre = PrefillWorker(mono.model, mono.params, max_seq=args.max_seq,
+                        num_blocks=24, eos_id=-1, prefill_budget=None)
+    dis = DisaggregatedEngine(pre, build(pargs)[1])
+    for i, pr in enumerate(prompts[:4]):
+        dis.submit(Request(rid=i, prompt=pr.copy(), max_new=args.max_new))
+    dis.run(600)
+    disagg = {
+        "handoffs": dis.handoffs,
+        "handoff_bytes": dis.handoff_bytes,
+        "completed": len(dis.done),
+        "token_identical": ({r.rid: list(r.generated) for r in dis.done}
+                            == mono_want),
+    }
+    ok = (migration["token_identical"]
+          and rep["finalized"] and rep["rounds"] >= 2
+          and 0 < rep["stop_copy_blocks"] < rep["blocks_per_round"][0]
+          and rep["pause_steps"] == 1
+          and disagg["token_identical"] and disagg["handoffs"] == 4)
+    return {"migration": migration, "disagg": disagg, "ok": ok}
+
+
 def workload(cfg, eng, args):
     """Mixed traffic: unique prompts + a shared-prefix cohort; the pool
     is sized by the caller to force queueing (and usually swapping)."""
@@ -570,6 +661,16 @@ def main(argv=None):
         mx = mixed_arch_probe(args)
         report["mixed_arch"] = mx
         report["all_ok"] = report["all_ok"] and mx["ok"]
+        # CI gate: mid-decode live migration must resume token-identical
+        # to an unmigrated control with a stop-and-copy tail strictly
+        # smaller than the first pre-copy round, and disaggregated
+        # prefill must match the monolithic engine; the section also
+        # lands standalone in BENCH_migrate.json
+        mg = migrate_probe(args)
+        report["migrate"] = mg
+        report["all_ok"] = report["all_ok"] and mg["ok"]
+        with open(OUT_MIGRATE, "w") as f:
+            json.dump(mg, f, indent=2)
     if args.trace:
         # the request plane: live arrivals through Engine.serve, with
         # per-tenant latency percentiles and the TTFT histogram
@@ -599,6 +700,7 @@ def main(argv=None):
           f"trace={trace_info},"
           f"prefill_saved={report['prefill_tokens_saved']},"
           f"mixed_arch_ok={report.get('mixed_arch', {}).get('ok', '-')},"
+          f"migrate_ok={report.get('migrate', {}).get('ok', '-')},"
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)

@@ -328,6 +328,13 @@ class PagedKVManager:
             raise ValueError(f"sequence {seq_id} already tracked")
         self._maps[seq_id] = mapping
 
+    def disown(self, seq_id: int) -> Mapping:
+        """Stop tracking ``seq_id`` WITHOUT freeing its mapping -- the
+        inverse of ``adopt``.  The disaggregation handoff: a prefill
+        worker disowns the finished sequence so ``export_mapping`` can
+        gather its blocks into a bundle and release them."""
+        return self._maps.pop(seq_id)
+
     def reserve_sink(self):
         """Pin one block (never handed to a sequence).
 

@@ -16,6 +16,8 @@ from repro.mem.blockpool import (NULL_BLOCK, BlockAllocator, BlockPool,
                                  OutOfBlocksError)
 from repro.mem.lease import COW_SHARED, EXCLUSIVE, IN_FLIGHT, PINNED, Lease
 from repro.mem.mapping import DEVICE, FLAT, HOST, RADIX, Mapping
+from repro.mem.migrate import (BlockBundle, MigrationSession,
+                               adopt_payload, export_mapping)
 from repro.mem.stats import ArenaStats, PoolClassStats
 from repro.mem.transfer import (BACKGROUND, D2D, D2H, DIRECTIONS, H2D,
                                 LANES, URGENT, Fence, QueueSet,
@@ -28,6 +30,7 @@ __all__ = [
     "BlockAllocator", "BlockPool", "NULL_BLOCK", "OutOfBlocksError",
     "Lease", "EXCLUSIVE", "COW_SHARED", "PINNED", "IN_FLIGHT",
     "Mapping", "FLAT", "RADIX", "DEVICE", "HOST",
+    "MigrationSession", "BlockBundle", "export_mapping", "adopt_payload",
     "ArenaStats", "PoolClassStats",
     "QueueSet", "TransferEngine", "TransferQueue", "TransferPlan",
     "TransferStats", "Fence", "UnfencedReadError",

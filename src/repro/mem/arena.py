@@ -566,6 +566,52 @@ class Arena:
         assert not self._host_payload, (
             f"host tier payload leaked: {list(self._host_payload)}")
 
+    def check_consistency(self) -> None:
+        """Cross-layer invariants over the device registry AND the host
+        tier -- the post-``restore()`` health check (every allocated
+        block's refcount equals its lease count, the lease registry's
+        total mass matches the refcount histogram, host-resident
+        mappings agree with registered residency, and landed payloads
+        cover exactly the blocks they claim).  Cheap enough to run after
+        every snapshot/restore roundtrip; raises ``AssertionError`` on
+        the first drifted counter."""
+        for name, st in self._classes.items():
+            self.check_registry(name)
+            total_leases = sum(len(v) for v in st.leases.values())
+            hist = st.allocator.refcount_histogram()
+            mass = int(sum(r * int(c) for r, c in enumerate(hist)))
+            assert total_leases == mass, (
+                f"pool class {name!r}: {total_leases} leases vs refcount "
+                f"mass {mass}")
+            for m in st.mappings:
+                if m.placement != HOST:
+                    continue
+                key = (name, m.owner)
+                assert self._host_counts.get(key) == m._host_blocks, (
+                    f"host mapping {m.owner!r} in {name!r}: "
+                    f"{m._host_blocks} blocks vs registered "
+                    f"{self._host_counts.get(key)}")
+        for (cls, owner), n in self._host_counts.items():
+            entry = self._host_payload.get((cls, owner))
+            if entry is None:
+                # residency without a landed payload is only legal while
+                # the swap-out is still in transit on the d2h queue (or
+                # for metadata-only classes, which never carry payloads)
+                assert (not self.transfers.has_executor(cls)
+                        or owner in self.transfers.in_transit(cls)), (
+                    f"host residency of {owner!r} in {cls!r} has no "
+                    f"payload and no in-transit swap-out")
+                continue
+            if self.transfers.has_executor(cls):
+                layered = self.transfers.is_layered(cls)
+                for s in entry[0]:
+                    if s is None:
+                        continue
+                    saved = s.shape[1] if layered else s.shape[0]
+                    assert saved == n, (
+                        f"host payload of {owner!r} in {cls!r} covers "
+                        f"{saved} blocks, residency says {n}")
+
     # ---------------- checkpoint (host tier + mappings) ----------------
     @staticmethod
     def _tag_owner(owner) -> str:
@@ -592,22 +638,76 @@ class Arena:
             # extension dtypes (bfloat16) resolve through jax
             return np.dtype(getattr(jnp, name))
 
-    def snapshot(self, path: str) -> None:
+    def gather_device_payload(self, cls: str, *, lane=None,
+                              kind: str = "migrate-out"):
+        """Gather ALL live mapped device blocks of ``cls`` to the host in
+        one transfer-plane pass; returns ``(ids, streams, gens)`` or None
+        when the class has no device-resident mapping (or no executor --
+        metadata-only classes carry no payload).
+
+        The gather is a pure read: live blocks (refcount > 0) take no
+        allocator holds, so decode can keep running against them -- the
+        building block of both one-shot device snapshots and the
+        migration pre-copy rounds (which pass ``lane=BACKGROUND``).
+        """
+        from repro.mem.transfer import URGENT
+        st = self._cls(cls)
+        if not self.transfers.has_executor(cls):
+            return None
+        ids: List[int] = []
+        seen = set()
+        for m in st.mappings:
+            if m.placement != DEVICE:
+                continue
+            for b in m.block_ids():
+                if b not in seen:
+                    seen.add(b)
+                    ids.append(b)
+        if not ids:
+            return None
+        gens = [st.allocator.write_gen(b) for b in ids]
+        owner = f"__snapshot__/{cls}"
+        self.transfers.enqueue_swap_out(
+            cls, owner, ids, kind=kind,
+            lane=URGENT if lane is None else lane)
+        self.transfers.drain()
+        streams = self.host_take(cls, owner)
+        return ids, streams, gens
+
+    def snapshot(self, path: str, *, include_device: bool = False,
+                 device_payloads: Optional[Dict[str, tuple]] = None
+                 ) -> None:
         """Checkpoint the arena's survivable state to one ``.npz``:
         pool-class specs, host-tier residency + payloads (the swapped
         sequences' KV), and every mapping's table.
 
         The transfer plane is drained first (in-flight payloads land).
-        Device pool CONTENTS are deliberately not captured -- a restart
+        By default device pool CONTENTS are not captured -- a restart
         loses device memory by definition; the swap tier is exactly the
-        state that survives, which is why checkpoint lives on the arena.
+        state that survives.  ``include_device=True`` is the migration
+        path: every executor-backed class's live mapped blocks are
+        gathered through the transfer plane and stored alongside the
+        mapping tables, preserving COW aliasing exactly (restore
+        re-leases one physical block per distinct saved id and re-shares
+        it across every mapping that named it).  ``device_payloads``
+        lets a ``MigrationSession`` hand over pre-copied payloads
+        (``{cls: (ids, streams, gens)}``) so the stop-and-copy pause
+        only re-gathers the dirty tail, not the whole pool.
         """
         self.transfers.drain()
+        device: Dict[str, tuple] = dict(device_payloads or {})
+        if include_device:
+            for name in self._classes:
+                if name not in device:
+                    got = self.gather_device_payload(name)
+                    if got is not None:
+                        device[name] = got
         # host-tier residency is NOT serialized separately: each
         # host-resident mapping entry carries its block count, and
         # restore() rebuilds _host_counts from those -- one source of
         # truth in the checkpoint.
-        meta: dict = {"classes": {}, "mappings": [], "payloads": []}
+        meta: dict = {"classes": {}, "mappings": [], "payloads": [],
+                      "device": {}}
         arrays: Dict[str, np.ndarray] = {}
         for name, st in self._classes.items():
             meta["classes"][name] = {
@@ -622,9 +722,24 @@ class Arena:
                 meta["mappings"].append({
                     "cls": name, "owner": self._tag_owner(m.owner),
                     "kind": m.kind, "placement": m.placement,
+                    "tenant": self._tag_owner(m.tenant),
                     "blocks": (m.block_ids() if m.placement == DEVICE
                                else int(m._host_blocks)),
                 })
+        for name, (ids, streams, gens) in device.items():
+            entry = {"blocks": [int(b) for b in ids],
+                     "gens": [int(g) for g in gens], "streams": []}
+            for j, arr in enumerate(streams):
+                if arr is None:
+                    entry["streams"].append(None)
+                    continue
+                key = f"device_{name}_{j}"
+                arr = np.ascontiguousarray(arr)
+                arrays[key] = np.frombuffer(arr.tobytes(), np.uint8)
+                entry["streams"].append({"key": key,
+                                         "shape": list(arr.shape),
+                                         "dtype": str(arr.dtype)})
+            meta["device"][name] = entry
         for i, ((cls, owner), (payload, nbytes)) in enumerate(
                 self._host_payload.items()):
             streams = []
@@ -646,15 +761,20 @@ class Arena:
         np.savez(path, **arrays)
 
     def restore(self, path: str) -> Dict[Tuple[str, object], Mapping]:
-        """Rebuild host-tier residency, payloads and host-resident
-        mappings from a ``snapshot()``.
+        """Rebuild host-tier residency, payloads and mappings from a
+        ``snapshot()``.
 
         Pool classes are re-registered when absent (idempotent-or-loud
         when present, so restoring into an engine-built arena verifies
-        the specs match).  Only HOST-resident mappings come back -- a
-        restarted process has lost device memory, so device-resident
-        entries in the snapshot are unrecoverable by design (re-submit
-        those requests).  Returns ``{(pool_class, owner): Mapping}`` for
+        the specs match).  HOST-resident mappings always come back.
+        DEVICE-resident mappings come back when the snapshot carries
+        device payloads (``include_device=True`` / a migration
+        finalize): each distinct saved block id gets one fresh lease and
+        every further mapping that named it re-shares that lease, so
+        refcounts and COW aliasing survive the roundtrip exactly; the
+        payload is then scattered through the transfer plane onto the
+        (relocated) fresh ids -- block tables absorb the move, as
+        everywhere else.  Returns ``{(pool_class, owner): Mapping}`` for
         the caller to re-adopt (``PagedKVManager.adopt``).
         """
         with np.load(path) as z:
@@ -666,17 +786,69 @@ class Arena:
                     dtype=jnp.dtype(spec["dtype"]),
                     block_nbytes=spec["block_nbytes"],
                     dp_groups=spec["dp_groups"])
+            device_meta = meta.get("device", {})
             restored: Dict[Tuple[str, object], Mapping] = {}
+            # old physical id -> the first lease re-materializing it (the
+            # COW alias anchor); later mappings share it instead of
+            # allocating
+            alias: Dict[Tuple[str, int], Lease] = {}
             for entry in meta["mappings"]:
-                if entry["placement"] != HOST:
-                    continue
                 cls = entry["cls"]
                 owner = self._untag_owner(entry["owner"])
-                m = self.mapping(cls, owner, kind=entry["kind"])
-                m.placement = HOST
-                m._host_blocks = int(entry["blocks"])
-                self._host_register(cls, owner, m._host_blocks)
+                tenant = (self._untag_owner(entry["tenant"])
+                          if "tenant" in entry else "default")
+                if entry["placement"] == HOST:
+                    m = self.mapping(cls, owner, kind=entry["kind"],
+                                     tenant=tenant)
+                    m.placement = HOST
+                    m._host_blocks = int(entry["blocks"])
+                    self._host_register(cls, owner, m._host_blocks)
+                    restored[(cls, owner)] = m
+                    continue
+                if cls not in device_meta:
+                    # no device payload in the snapshot: a restarted
+                    # process lost device memory by definition --
+                    # re-submit those requests
+                    continue
+                if not self.transfers.has_executor(cls):
+                    raise RuntimeError(
+                        f"snapshot carries device payload for pool class "
+                        f"{cls!r} but the restoring arena has no "
+                        f"executor; restore into an engine-built arena")
+                m = self.mapping(cls, owner, kind=entry["kind"],
+                                 tenant=tenant)
+                for old in entry["blocks"]:
+                    key = (cls, int(old))
+                    if key in alias:
+                        m.leases.append(self.share(alias[key], owner))
+                    else:
+                        [lease] = self.lease_blocks(cls, owner, 1)
+                        m.leases.append(lease)
+                        alias[key] = lease
                 restored[(cls, owner)] = m
+            # scatter the device payloads onto the fresh ids, in the
+            # saved gather order
+            for cls, dev in device_meta.items():
+                dst = []
+                for old in dev["blocks"]:
+                    lease = alias.get((cls, int(old)))
+                    if lease is None:
+                        raise RuntimeError(
+                            f"device payload of {cls!r} names block "
+                            f"{old} that no snapshotted mapping holds")
+                    dst.append(lease.block)
+                streams = tuple(
+                    None if s is None else np.frombuffer(
+                        z[s["key"]].tobytes(),
+                        self._np_dtype(s["dtype"])).reshape(s["shape"])
+                    for s in dev["streams"])
+                owner = f"__snapshot__/{cls}"
+                nbytes = int(sum(s.nbytes for s in streams
+                                 if s is not None))
+                self.host_deposit(cls, owner, streams, nbytes)
+                self.transfers.enqueue_swap_in(cls, owner, dst,
+                                               kind="migrate-in")
+                self.transfers.drain()
             for p in meta["payloads"]:
                 cls, owner = p["cls"], self._untag_owner(p["owner"])
                 streams = tuple(

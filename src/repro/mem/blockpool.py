@@ -51,6 +51,12 @@ class BlockAllocator:
         # per-engine discipline lets the transfer plane release one
         # engine's holds without fencing the others
         self._held: Dict[int, str] = {}
+        # monotone per-block write-generation counter: every writer of a
+        # block's payload (COW fulfilment copies, swap-in scatters,
+        # append_token decode writes via the strategy barrier) bumps it.
+        # Live migration diffs generations between pre-copy rounds to
+        # find the dirty set -- the software analogue of dirty-page bits.
+        self._write_gen = np.zeros(num_blocks, dtype=np.int64)
 
     # -- queries ---------------------------------------------------------
     @property
@@ -75,12 +81,31 @@ class BlockAllocator:
     def is_allocated(self, block: int) -> bool:
         return self._refcount[block] > 0
 
+    # -- write generations (dirty tracking for live migration) ----------
+    def note_write(self, blocks: Sequence[int]) -> None:
+        """Record that the payload of ``blocks`` was (or is about to be)
+        written.  Conservative pre-write bumps are fine: an extra copy in
+        the next migration round is cheap; a missed one is corruption."""
+        for b in blocks:
+            if b != NULL_BLOCK:
+                self._write_gen[b] += 1
+
+    def write_gen(self, block: int) -> int:
+        return int(self._write_gen[block])
+
+    def write_gens(self, blocks: Sequence[int]) -> np.ndarray:
+        return self._write_gen[np.asarray(blocks, dtype=np.int64)]
+
     # -- allocation ------------------------------------------------------
     def alloc(self) -> int:
         if not self._free:
             raise OutOfBlocksError("block pool exhausted")
         b = self._free.pop()
         self._refcount[b] = 1
+        # a fresh allocation is about to be written (prefill scatter,
+        # growth, copy target): bump conservatively so a migration that
+        # copied this id under a previous tenant re-copies it
+        self._write_gen[b] += 1
         return b
 
     def alloc_many(self, n: int) -> List[int]:
@@ -194,6 +219,9 @@ class BlockAllocator:
                 raise ValueError(f"relocate into live block {d}")
             self._refcount[d] = self._refcount[s]
             self._refcount[s] = 0
+            # generations travel with the payload; the d2d copy that
+            # fulfils the plan bumps the destination when it executes.
+            self._write_gen[d] = self._write_gen[s]
         self._free = [b for b in range(self.num_blocks - 1, -1, -1)
                       if self._refcount[b] == 0 and b not in self._held]
 

@@ -192,6 +192,9 @@ class Mapping:
         lease.release()
         self.arena.transfers.enqueue_copy(self.pool_class, [lease.block],
                                           [fresh.block], kind="cow")
+        # dirty tracking: the divergent write that motivated this barrier
+        # lands in the fresh block right after the copy
+        self.arena.allocator(self.pool_class).note_write([fresh.block])
         return lease.block, fresh.block
 
     def migrate(self, to: str) -> List[int]:

@@ -310,6 +310,17 @@ class QueueSet:
         """
         self._executors[pool_class] = (get_streams, set_streams, layered)
 
+    def has_executor(self, pool_class: str) -> bool:
+        """Whether a device payload exists for this pool class (classes
+        without an executor complete plans as residency-only moves --
+        snapshot/migration can carry no bytes for them)."""
+        return pool_class in self._executors
+
+    def is_layered(self, pool_class: str) -> bool:
+        """Stream layout of the class's executor: layered streams are
+        ``(L, NB, *block)``, flat streams ``(NB, *block)``."""
+        return self._executors[pool_class][2]
+
     def add_observer(self, fn: Callable[[TransferPlan], None],
                      key: Optional[str] = None) -> None:
         """Called once per completed plan (byte ledgers, e.g.
@@ -441,14 +452,20 @@ class QueueSet:
                                           src=src, dst=dst, nbytes=nbytes))
 
     def enqueue_swap_out(self, pool_class: str, owner, src,
-                         kind: str = "swap-out") -> Fence:
+                         kind: str = "swap-out",
+                         lane: str = URGENT) -> Fence:
         """d2h: gather ``src`` on device, deposit the compact payload in
-        the arena host tier under ``owner`` at the fence."""
+        the arena host tier under ``owner`` at the fence.
+
+        ``lane=BACKGROUND`` is the live-migration pre-copy path: gathers
+        of LIVE blocks (refcount > 0) take no holds -- they are pure
+        reads that ride behind the urgent traffic while decode runs.
+        """
         src = np.asarray(src, np.int32).reshape(-1)
         if src.size == 0:
             return self._done_fence()
         return self._enqueue(TransferPlan(D2H, pool_class, kind,
-                                          src=src, owner=owner))
+                                          src=src, owner=owner, lane=lane))
 
     def enqueue_swap_in(self, pool_class: str, owner, dst,
                         kind: str = "swap-in",
@@ -823,6 +840,8 @@ class QueueSet:
         set_([copy(s, src, dst) for s in streams])
         self.stats.launches += 1
         self.stats.coalesced += len(batch) - 1
+        self.arena.allocator(batch[0].pool_class).note_write(
+            [int(b) for b in np.asarray(dst)])
         for plan in batch:
             self._release_holds(plan)
             self._clear_flags(plan)
@@ -912,6 +931,8 @@ class QueueSet:
                else s.at[idx].set(jnp.asarray(h))
                for s, h in zip(streams, payload)]
         set_(out)
+        self.arena.allocator(cls).note_write(
+            [int(b) for b in np.asarray(plan.dst)])
         plan.nbytes = int(sum(h.nbytes for h in payload if h is not None))
         self._clear_flags(plan)
         plan.state = DONE

@@ -91,11 +91,17 @@ def _heads(x, H):
 
 def rwkv6_mix_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
                   prev_x: Optional[jax.Array] = None,
-                  state_in: Optional[jax.Array] = None):
+                  state_in: Optional[jax.Array] = None,
+                  lengths: Optional[jax.Array] = None):
     """Full-sequence chunked time mixing.
 
     x: (B, S, d).  Returns (y, (last_x, S_out)) so training can stream
-    and decode can continue.  state_in: (B, H, dk, dv).
+    and decode can continue.  state_in: (B, H, dk, dv).  ``lengths``
+    (B,) masks right padding out of the recurrence EXACTLY: padded
+    positions contribute nothing to the state (k = 0 kills the rank-1
+    update, log w = 0 freezes the decay at 1), so S_out and last_x
+    equal a per-sequence unpadded run -- the length-masked prefill the
+    serving engine's padded batched prefill relies on.
     """
     B, S, d = x.shape
     H = cfg.num_heads
@@ -111,6 +117,11 @@ def rwkv6_mix_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
     v = _heads(xv @ p["wv"], H).astype(jnp.float32)
     g = jax.nn.silu(xg @ p["wg"])
     logw = _heads(_decay(p, xw), H)                          # (B,S,H,dk)
+    if lengths is not None:
+        valid = (jnp.arange(S)[None, :]
+                 < lengths[:, None])[:, :, None, None]       # (B,S,1,1)
+        k = jnp.where(valid, k, 0.0)
+        logw = jnp.where(valid, logw, 0.0)
     u = p["u"].reshape(H, dk)
 
     # chunk: (B, nc, C, H, dk) -> scan over nc
@@ -170,7 +181,12 @@ def rwkv6_mix_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
     o = oc.transpose(1, 0, 3, 2, 4).reshape(B, S, d)
     o = rmsnorm(o.astype(x.dtype), p["ln_x"], cfg.norm_eps) * g
     y = o @ p["wo"]
-    return y, (x[:, -1], S_fin)
+    if lengths is not None:
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        last_x = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    else:
+        last_x = x[:, -1]
+    return y, (last_x, S_fin)
 
 
 def rwkv6_mix_step(p: Params, x: jax.Array, cfg: ModelConfig,

@@ -75,25 +75,34 @@ class RWKVLM:
         return eval_shape_with_aux(lambda rr: self.init(rr),
                                    jax.random.PRNGKey(0))
 
-    def _layer(self, lp, x, state=None):
-        """state: None (train from zeros) or (mix_x, ffn_x, wkv)."""
+    def _layer(self, lp, x, state=None, lengths=None):
+        """state: None (train from zeros) or (mix_x, ffn_x, wkv);
+        ``lengths`` masks right padding out of the recurrence and picks
+        the shift vectors at each row's true last position."""
         cfg = self.cfg
         mix_x = state.mix_x if state else None
         wkv = state.wkv if state else None
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps, gemma_style=True)
         y, (last_x, wkv_out) = R.rwkv6_mix_fwd(lp["mix"], h, cfg,
-                                               prev_x=mix_x, state_in=wkv)
+                                               prev_x=mix_x, state_in=wkv,
+                                               lengths=lengths)
         x = constrain(x + y, "batch", "seq", None)
         h = rmsnorm(x, lp["ln2"], cfg.norm_eps, gemma_style=True)
         prev = (state.ffn_x[:, None] if state
                 else jnp.zeros_like(h[:, :1]))
         hh = jnp.concatenate([prev, h[:, :-1]], axis=1)
         x = constrain(x + R.rwkv6_ffn(lp["ffn"], h, hh), "batch", "seq", None)
-        new_state = RWKVState(last_x, h[:, -1], wkv_out)
+        if lengths is not None:
+            idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+            last_h = jnp.take_along_axis(h, idx, axis=1)[:, 0]
+        else:
+            last_h = h[:, -1]
+        new_state = RWKVState(last_x, last_h, wkv_out)
         return x, new_state
 
     def forward_hidden(self, p: Params, batch: Dict[str, jax.Array], *,
-                       remat: bool = False, state: "RWKVState" = None, **_):
+                       remat: bool = False, state: "RWKVState" = None,
+                       lengths=None, **_):
         cfg = self.cfg
         x = rmsnorm(p["embed"][batch["tokens"]], p["ln_in"], cfg.norm_eps,
                     gemma_style=True)
@@ -105,7 +114,7 @@ class RWKVLM:
                 st = None
             else:
                 lp, st = xs
-            x, new_st = self._layer(lp, x, st)
+            x, new_st = self._layer(lp, x, st, lengths=lengths)
             return x, new_st
 
         body_fn = jax.checkpoint(body) if remat else body
@@ -145,9 +154,46 @@ class RWKVLM:
         """Shape specs of the decode-time state (dry-run surface)."""
         return self.state_specs(batch)
 
+    # -- constant-state pool glue (ConstantStateStrategy surface) --
+    @property
+    def state_elems(self) -> int:
+        """Float32 elements of ONE sequence's decode state -- the
+        constant-state pool's (exact) block quantum: two shift vectors
+        and the per-head wkv matrix state, per layer."""
+        cfg = self.cfg
+        d, H = cfg.d_model, cfg.num_heads
+        dk = d // H
+        return cfg.num_layers * (2 * d + H * dk * dk)
+
+    def state_to_rows(self, state: RWKVState) -> jax.Array:
+        """Flatten the (L, B, ...) state to (B, state_elems) rows."""
+        B = state.mix_x.shape[1]
+        m = jnp.moveaxis(state.mix_x, 1, 0).reshape(B, -1)
+        f = jnp.moveaxis(state.ffn_x, 1, 0).reshape(B, -1)
+        w = jnp.moveaxis(state.wkv, 1, 0).reshape(B, -1)
+        return jnp.concatenate([m, f, w], axis=1).astype(jnp.float32)
+
+    def rows_to_state(self, rows: jax.Array) -> RWKVState:
+        """Inverse of ``state_to_rows`` (shift vectors back in the
+        compute dtype; the wkv state stays float32)."""
+        cfg = self.cfg
+        L, d, H = cfg.num_layers, cfg.d_model, cfg.num_heads
+        dk = d // H
+        B = rows.shape[0]
+        m = jnp.moveaxis(rows[:, : L * d].reshape(B, L, d), 0, 1
+                         ).astype(cfg.jdtype)
+        f = jnp.moveaxis(rows[:, L * d: 2 * L * d].reshape(B, L, d), 0, 1
+                         ).astype(cfg.jdtype)
+        w = jnp.moveaxis(rows[:, 2 * L * d:].reshape(B, L, H, dk, dk), 0, 1)
+        return RWKVState(m, f, w)
+
     def prefill(self, p, batch, state: RWKVState, lengths=None):
-        logits, _, states = self.forward(p, batch, state=state)
-        return logits[:, -1], states
+        logits, _, states = self.forward(p, batch, state=state,
+                                         lengths=lengths)
+        if lengths is None:
+            return logits[:, -1], states
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        return jnp.take_along_axis(logits, idx, axis=1)[:, 0], states
 
     def decode_step(self, p: Params, tokens: jax.Array, state: RWKVState):
         cfg = self.cfg

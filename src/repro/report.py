@@ -3,6 +3,7 @@ and ArenaStats snapshots (BENCH_serve.json) into the address-space table.
 
     PYTHONPATH=src python -m repro.report dryrun_report.jsonl
     PYTHONPATH=src python -m repro.report BENCH_serve.json   # ArenaStats
+    PYTHONPATH=src python -m repro.report BENCH_migrate.json # migration
 """
 
 from __future__ import annotations
@@ -236,10 +237,63 @@ def fmt_family_table(doc: Dict) -> str:
     return "\n".join(out)
 
 
+def fmt_migrate_table(doc: Dict) -> str:
+    """Render the cross-process section (``migrate`` of
+    BENCH_serve.json, or a standalone BENCH_migrate.json): the live
+    migration's pre-copy/stop-and-copy breakdown and the
+    prefill/decode-disaggregation handoff line.
+
+    Degrades gracefully on pre-migration snapshots that lack the
+    section: renders an "n/a" row and says why, never KeyError (same
+    contract as the tenant latency and family tables).
+    """
+    out = ["| phase | rounds | blocks | bytes | pause steps | "
+           "token identical |",
+           "|---|---|---|---|---|---|"]
+    mg = doc.get("migrate", doc if "migration" in doc else None)
+    if not mg or not mg.get("migration"):
+        out.append("| n/a | n/a | n/a | n/a | n/a | n/a |")
+        out.append("")
+        out.append("no cross-process section in this snapshot "
+                   "(pre-migration BENCH_serve.json)")
+        return "\n".join(out)
+    m = mg["migration"]
+
+    def cell(v):
+        return "n/a" if v is None else v
+
+    out.append(
+        f"| pre-copy | {cell(m.get('rounds'))} | "
+        f"{cell(m.get('precopy_blocks'))} | "
+        f"{cell(m.get('precopy_bytes'))} | — | — |")
+    out.append(
+        f"| stop-and-copy | — | {cell(m.get('stop_copy_blocks'))} | "
+        f"{cell(m.get('stop_copy_bytes'))} | "
+        f"{cell(m.get('pause_steps'))} | "
+        f"{m.get('token_identical', 'n/a')} |")
+    per_round = m.get("blocks_per_round")
+    if per_round:
+        out.append("")
+        out.append("blocks per pre-copy round: "
+                   + " -> ".join(str(b) for b in per_round)
+                   + f" (stop-copy tail {m.get('stop_copy_blocks', 'n/a')})")
+    d = mg.get("disagg")
+    if d:
+        out.append(
+            f"prefill/decode handoff: {d.get('handoffs', 'n/a')} bundles, "
+            f"{d.get('handoff_bytes', 'n/a')} bytes, token identical: "
+            f"{d.get('token_identical', 'n/a')}")
+    return "\n".join(out)
+
+
 def main(path: str) -> None:
     if path.endswith(".json"):
         with open(path) as f:
             doc = json.load(f)
+        if "migration" in doc:        # standalone BENCH_migrate.json
+            print("### Cross-process: live migration + disaggregation\n")
+            print(fmt_migrate_table(doc))
+            return
         arena = doc.get("arena", doc if "classes" in doc else None)
         if arena is None:
             raise SystemExit(f"{path}: no ArenaStats ('arena' key) found")
@@ -253,6 +307,8 @@ def main(path: str) -> None:
         print(fmt_tenant_latency_table(doc))
         print("\n### Architecture registry: per-family serving\n")
         print(fmt_family_table(doc))
+        print("\n### Cross-process: live migration + disaggregation\n")
+        print(fmt_migrate_table(doc))
         return
     rows = load(path)
     print("### Single-pod (16x16 = 256 chips)\n")

@@ -150,6 +150,11 @@ class ConstantStateManager:
             raise ValueError(f"sequence {seq_id} already tracked")
         self._maps[seq_id] = mapping
 
+    def disown(self, seq_id: int) -> Mapping:
+        """Inverse of ``adopt``: stop tracking without freeing (the
+        disaggregation handoff's export side)."""
+        return self._maps.pop(seq_id)
+
     def reserve_sink(self):
         """Pin one row as the scatter target for empty decode slots."""
         return self.arena.pin(self.pool_class, owner="sink")
@@ -371,6 +376,14 @@ class CacheStrategy:
     def adopt_restored(self, rid: int) -> None:
         raise NotImplementedError
 
+    def adopt_device(self, rid: int) -> None:
+        """Adopt a DEVICE-resident mapping restored from a live-migration
+        snapshot (``Arena.restore`` with device payloads) or scattered by
+        ``adopt_payload`` -- the sequence resumes decoding with zero
+        swap-in traffic.  ``adopt_restored`` stays the host-resident
+        restart path."""
+        raise NotImplementedError
+
     def release_arena(self) -> None:
         raise NotImplementedError
 
@@ -498,13 +511,20 @@ class PagedKVStrategy(CacheStrategy):
         WRAPS negative indices, so a NULL (-1) entry would clobber the
         pool's last block on every padded decode write."""
         cfg = self.cache.config
+        bt = cfg.block_tokens
         tables = np.full((self.slots, cfg.max_blocks_per_seq), self.sink,
                          np.int32)
         lens = np.zeros(self.slots, np.int32)
+        writes = []
         for slot, req in running.items():
             self.mgr.mapping(req.rid).assert_settled()
-            tables[slot] = self.mgr.device_table(req.rid)
+            tbl = self.mgr.device_table(req.rid)
+            tables[slot] = tbl
             lens[slot] = req.tokens_held
+            # the coming decode appends this slot's KV at token position
+            # tokens_held -- dirty its tail block for live migration
+            writes.append(int(tbl[req.tokens_held // bt]))
+        self.mgr.allocator.note_write(writes)
         self.cache = dataclasses.replace(
             self.cache, block_tables=jnp.asarray(tables),
             seq_lens=jnp.asarray(lens))
@@ -598,6 +618,15 @@ class PagedKVStrategy(CacheStrategy):
                 f"no restored host-resident mapping for rid {rid}; "
                 f"run Arena.restore first (device-resident sequences do "
                 f"not survive a restart -- re-submit them)")
+        self.mgr.adopt(rid, m)
+
+    def adopt_device(self, rid) -> None:
+        m = self.arena.find_mapping(self.mgr.pool_class, rid)
+        if m is None or m.placement != "device":
+            raise ValueError(
+                f"no device-resident mapping for rid {rid}; restore a "
+                f"device snapshot (live migration) or adopt_payload a "
+                f"handoff bundle first")
         self.mgr.adopt(rid, m)
 
     def release_arena(self) -> None:
@@ -750,6 +779,10 @@ class ConstantStateStrategy(CacheStrategy):
         for slot, req in running.items():
             self.mgr.mapping(req.rid).assert_settled()
             rows[slot] = self.mgr.row(req.rid)
+        # every decode scatters fresh state into every running row --
+        # dirty them all for live migration
+        self.mgr.allocator.note_write(
+            [int(r) for r in rows if r != self.sink])
         self._rows = rows
 
     def decode(self, params, tokens):
@@ -792,6 +825,15 @@ class ConstantStateStrategy(CacheStrategy):
                 f"no restored host-resident mapping for rid {rid}; "
                 f"run Arena.restore first (device-resident sequences do "
                 f"not survive a restart -- re-submit them)")
+        self.mgr.adopt(rid, m)
+
+    def adopt_device(self, rid) -> None:
+        m = self.arena.find_mapping(self.mgr.pool_class, rid)
+        if m is None or m.placement != "device":
+            raise ValueError(
+                f"no device-resident mapping for rid {rid}; restore a "
+                f"device snapshot (live migration) or adopt_payload a "
+                f"handoff bundle first")
         self.mgr.adopt(rid, m)
 
     def release_arena(self) -> None:
@@ -935,12 +977,21 @@ class CompositeStrategy(CacheStrategy):
                          np.int32)
         lens = np.zeros(self.slots, np.int32)
         rows = np.full(self.slots, self.state_sink, np.int32)
+        bt = cfg.block_tokens
+        kv_writes = []
         for slot, req in running.items():
             self.mgr.mapping(req.rid).assert_settled()
             self.state_mgr.mapping(req.rid).assert_settled()
-            tables[slot] = self.mgr.device_table(req.rid)
+            tbl = self.mgr.device_table(req.rid)
+            tables[slot] = tbl
             lens[slot] = req.tokens_held
             rows[slot] = self.state_mgr.row(req.rid)
+            kv_writes.append(int(tbl[req.tokens_held // bt]))
+        # dirty the decode write targets for live migration: the KV
+        # tail block AND the state row of every running sequence
+        self.mgr.allocator.note_write(kv_writes)
+        self.state_mgr.allocator.note_write(
+            [int(r) for r in rows if r != self.state_sink])
         self.cache = dataclasses.replace(
             self.cache, block_tables=jnp.asarray(tables),
             seq_lens=jnp.asarray(lens))
@@ -1007,6 +1058,18 @@ class CompositeStrategy(CacheStrategy):
         self.state_mgr.adopt(
             rid, self.arena.find_mapping(self.state_mgr.pool_class, rid))
 
+    def adopt_device(self, rid) -> None:
+        for mgr in (self.mgr, self.state_mgr):
+            m = self.arena.find_mapping(mgr.pool_class, rid)
+            if m is None or m.placement != "device":
+                raise ValueError(
+                    f"no device-resident {mgr.pool_class!r} mapping for "
+                    f"rid {rid}; restore a device snapshot first")
+        self.mgr.adopt(rid, self.arena.find_mapping(self.mgr.pool_class,
+                                                    rid))
+        self.state_mgr.adopt(
+            rid, self.arena.find_mapping(self.state_mgr.pool_class, rid))
+
     def release_arena(self) -> None:
         for cls in self.pool_classes:
             self.arena.transfers.unregister_executor(cls)
@@ -1067,8 +1130,8 @@ ARCHITECTURES: Tuple[SupportedArchitecture, ...] = (
         served=False),
     SupportedArchitecture(
         "rwkv6", ConstantStateStrategy, ("state",),
-        "RWKV6: constant state discipline fits, but the model's padded "
-        "prefill does not mask lengths yet", served=False),
+        "RWKV6: one constant state block per sequence (shift vectors + "
+        "wkv matrix state), length-masked padded prefill"),
 )
 
 

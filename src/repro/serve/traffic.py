@@ -33,13 +33,14 @@ the deadline-cost preemption policy.
 
 from __future__ import annotations
 
+import threading
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.serve.scheduler import Request
 
-__all__ = ["RequestSource", "make_trace"]
+__all__ = ["RequestSource", "ThreadedRequestSource", "make_trace"]
 
 TRACE_KINDS = ("static", "poisson", "bursty", "heavytail", "prefixheavy")
 
@@ -72,6 +73,55 @@ class RequestSource:
             out.append(self._trace[self._idx])
             self._idx += 1
         return out
+
+
+class ThreadedRequestSource:
+    """Thread-fed async arrival source for ``Engine.serve``.
+
+    A producer thread calls ``submit()`` while the engine's step loop
+    polls from its own thread: the submit side is the only shared
+    state, guarded by one lock, so arrivals can be generated online
+    (an RPC front-end, a replay thread pacing wall-clock arrivals)
+    instead of from a pre-built trace.  Requests whose
+    ``arrival_time`` is in the future are held back until the engine's
+    virtual clock reaches them; everything else is due at the next
+    poll, in ``(arrival_time, rid)`` order for determinism.
+
+    ``has_more`` stays True until ``close()`` -- an open source keeps
+    ``serve()`` ticking idle steps while it waits for the producer, so
+    the producer MUST ``close()`` (or the loop runs to ``max_steps``).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending: List[Request] = []
+        self._closed = False
+
+    def submit(self, req: Request) -> None:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit() after close()")
+            self._pending.append(req)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+
+    @property
+    def has_more(self) -> bool:
+        with self._lock:
+            return bool(self._pending) or not self._closed
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def poll(self, now: float) -> List[Request]:
+        with self._lock:
+            due = [r for r in self._pending if r.arrival_time <= now]
+            self._pending = [r for r in self._pending
+                             if r.arrival_time > now]
+        return sorted(due, key=lambda r: (r.arrival_time, r.rid))
 
 
 def _gaps(kind: str, n: int, mean_gap: float,

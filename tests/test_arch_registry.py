@@ -65,16 +65,17 @@ def test_resolve_maps_families_to_disciplines(families):
 
 
 def test_registered_but_unservable_rows_raise():
-    """whisper (read-only cross-attention segment) and rwkv6 (prefill
-    does not mask lengths) are REGISTERED -- the table documents the
-    discipline -- but building them for serving is loudly refused."""
+    """whisper (read-only cross-attention segment) is REGISTERED -- the
+    table documents the discipline -- but building it for serving is
+    loudly refused.  rwkv6 graduated to served once its padded prefill
+    learned to mask lengths."""
     rows = {r.key: r for r in ARCHITECTURES}
-    assert not rows["audio"].served and not rows["rwkv6"].served
-    for name in ("whisper_tiny", "rwkv6_7b"):
-        model = build_model(get_config(name).reduced())
-        with pytest.raises(NotImplementedError):
-            build_strategy(model, arena=Arena(), slots=2, max_seq=64,
-                           num_blocks=16)
+    assert not rows["audio"].served
+    assert rows["rwkv6"].served
+    model = build_model(get_config("whisper_tiny").reduced())
+    with pytest.raises(NotImplementedError):
+        build_strategy(model, arena=Arena(), slots=2, max_seq=64,
+                       num_blocks=16)
 
 
 def test_engine_pool_classes_match_registry(families):

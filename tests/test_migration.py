@@ -1,0 +1,335 @@
+"""Cross-process Arena: live migration + prefill/decode disaggregation.
+
+Acceptance centerpieces (ISSUE PR 9): (1) a serving engine migrated
+MID-DECODE -- pre-copy rounds overlapping decode steps, dirty-set
+convergence to the running working set, a bounded stop-and-copy pause --
+decodes token-identical to an unmigrated control, across forced
+preemption and COW-forked prefixes; (2) a prefill worker handing
+finished sequences to a decode engine as ``BlockBundle``s is
+token-identical to the monolithic engine.
+
+Satellites pinned here: the allocator's write-generation dirty bit,
+snapshot/restore carrying device payloads with COW aliasing + tenant
+tags intact, the thread-fed async ``ThreadedRequestSource``, and the
+rwkv6 registry row graduating to served on length-masked prefill.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.mem import Arena
+from repro.mem.migrate import MigrationSession
+from repro.models.api import build_model
+from repro.serve.disagg import (DisaggregatedEngine, PrefillWorker,
+                                migrate_live)
+from repro.serve.engine import Engine, Request
+from repro.serve.traffic import ThreadedRequestSource
+from conftest import assert_engine_quiescent
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma_2b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("num_blocks", 24)
+    return Engine(model, params, eos_id=-1, prefill_budget=None, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the software dirty bit
+# ---------------------------------------------------------------------------
+def test_write_generation_counter():
+    """Fresh allocations count as writes; ``note_write`` is monotonic
+    per block and leaves neighbours untouched."""
+    a = Arena()
+    a.register_class("kv", num_blocks=8, block_shape=(4,),
+                     dtype=jnp.float32)
+    alloc = a.allocator("kv")
+    l1, l2 = a.lease_blocks("kv", "o", 2)
+    g1, g2 = alloc.write_gen(l1.block), alloc.write_gen(l2.block)
+    assert g1 > 0 and g2 > 0          # alloc itself dirties the block
+    alloc.note_write([l1.block])
+    assert alloc.write_gen(l1.block) == g1 + 1
+    assert alloc.write_gen(l2.block) == g2      # neighbour untouched
+    alloc.note_write([l1.block, l1.block])      # idempotent per call site
+    assert alloc.write_gen(l1.block) > g1 + 1
+    got = alloc.write_gens([l1.block, l2.block])
+    assert list(got) == [alloc.write_gen(l1.block), g2]
+
+
+def test_dirty_set_converges_to_working_set(gemma, tmp_path):
+    """Pre-copy rounds shrink the dirty set down to the decode working
+    set (one tail block per running sequence); the stop-and-copy tail is
+    bounded by that residue, NOT the pool size."""
+    _, model, params = gemma
+    eng = _engine(model, params)
+    rng = np.random.RandomState(3)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=rng.randint(2, 500, size=12),
+                           max_new=16))
+    for _ in range(3):
+        eng.step()
+    sess = MigrationSession(eng.arena, max_rounds=8)
+    while not sess.converged():
+        sess.begin_round()
+        eng.step()
+        sess.collect_round()
+    stop = sess.finalize(str(tmp_path / "mig.npz"))
+    rep = sess.migration_report()
+    assert rep["finalized"] and rep["rounds"] >= 2
+    # round 1 copies the whole mapped set; later rounds only re-copy
+    # what decode dirtied since
+    assert rep["blocks_per_round"][-1] < rep["blocks_per_round"][0]
+    # the residue (and hence the pause) is bounded by the running set:
+    # each running sequence dirties exactly its append-target tail block
+    assert 0 < stop["blocks"] <= len(eng.running)
+    assert stop["bytes"] == stop["blocks"] * eng.arena.block_nbytes(
+        eng.strategy.mgr.pool_class)
+    assert rep["pause_steps"] == 1
+    eng.release_arena()
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restore with device payloads: aliasing + tenants survive
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_preserves_cow_aliases_and_tenants(gemma, tmp_path):
+    _, model, params = gemma
+    eng = _engine(model, params, slots=3)
+    rng = np.random.RandomState(11)
+    base = rng.randint(2, 500, size=16)           # two full blocks
+    eng.submit(Request(rid=0, prompt=base.copy(), max_new=12, tenant="a"))
+    eng.step()
+    eng.submit(Request(                            # forks rid=0's prefix
+        rid=1, prompt=np.concatenate([base, rng.randint(2, 500, size=5)]),
+        max_new=12, tenant="b"))
+    eng.submit(Request(rid=2, prompt=rng.randint(2, 500, size=9),
+                       max_new=12, tenant="a"))
+    for _ in range(3):
+        eng.step()
+    eng.preempt_latest()       # host-tier resident; snapshot before the
+    eng.transfers.drain()      # next step would LIFO-resume it
+    assert eng.prefix_hits >= 1
+    cls = eng.strategy.mgr.pool_class
+    src_blocks = {rid: eng.arena.find_mapping(cls, rid).block_ids()
+                  for rid in (0, 1)}
+    shared = set(src_blocks[0]) & set(src_blocks[1])
+    assert shared                                  # COW aliases are live
+    preempted = [rid for rid in (0, 1, 2)
+                 if eng.arena.find_mapping(cls, rid).placement == "host"]
+    assert preempted
+    path = str(tmp_path / "snap.npz")
+    eng.arena.snapshot(path, include_device=True)
+
+    dst = _engine(model, params, slots=3)          # fresh engine-built arena
+    restored = dst.arena.restore(path)
+    dst.arena.check_consistency()
+    for rid in (0, 1):
+        if rid in preempted:
+            continue
+        m0, m1 = restored[(cls, 0)], restored[(cls, 1)]
+        # aliasing pattern survives exactly: positions that shared a
+        # physical block still do, with the refcount to match
+        for i, (a, b) in enumerate(zip(src_blocks[0], src_blocks[1])):
+            if a == b:
+                assert m0.block_ids()[i] == m1.block_ids()[i]
+                assert dst.arena.refcount(cls, m0.block_ids()[i]) == 2
+    # tenant tags ride the mapping table through the roundtrip
+    by_tenant = dst.arena.blocks_by_tenant(cls)
+    assert by_tenant == eng.arena.blocks_by_tenant(cls)
+    for rid in preempted:
+        m = restored[(cls, rid)]
+        assert m.placement == "host"
+        assert dst.arena.host_contains(cls, rid)
+    eng.release_arena()
+    dst.release_arena()
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance test: live migration mid-decode, token-identical
+# ---------------------------------------------------------------------------
+def _interleaved_requests(seed):
+    """Seeded mix: plain prompts + a COW-forked pair riding a
+    block-aligned shared base."""
+    rng = np.random.RandomState(seed)
+    base = rng.randint(2, 500, size=16)
+    reqs = []
+    for i in range(5):
+        if i in (1, 3):
+            extra = rng.randint(2, 500, size=int(rng.randint(1, 6)))
+            prompt = np.concatenate([base, extra])
+        else:
+            prompt = rng.randint(2, 500, size=int(rng.randint(6, 20)))
+        reqs.append(Request(rid=i, prompt=prompt.copy(),
+                            max_new=int(rng.randint(4, 9)),
+                            tenant=f"t{i % 2}"))
+    return reqs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_live_migration_token_identity(gemma, tmp_path, seed):
+    """Grow/fork/preempt interleaved with migration: the destination
+    engine resumes every in-flight request (running, queued AND
+    preempted) and decodes byte-identically to an unmigrated control."""
+    _, model, params = gemma
+    rng = np.random.RandomState(100 + seed)
+    pre_steps = int(rng.randint(2, 5))
+    preempt_at = int(rng.randint(1, pre_steps + 1))
+
+    def drive(eng):
+        for req in _interleaved_requests(seed):
+            eng.submit(req)
+        for s in range(pre_steps):
+            if s == preempt_at and eng.running:
+                eng.preempt_latest()
+            eng.step()
+
+    control = _engine(model, params)
+    drive(control)
+    control.run(max_steps=400)
+    want = {r.rid: list(r.generated) for r in control.done}
+    assert len(want) == 5
+    assert_engine_quiescent(control)
+
+    src = _engine(model, params)
+    drive(src)
+
+    def build_dst():
+        return _engine(model, params)
+
+    dst, sess = migrate_live(src, build_dst, str(tmp_path / "live.npz"))
+    rep = sess.migration_report()
+    assert rep["finalized"]
+    # bounded pause: the stop-and-copy tail re-copies only what the
+    # final overlapped step dirtied -- strictly less than the full
+    # mapped set the first pre-copy round moved (a stop-everything
+    # copy would move all of round 0 again, inside the pause)
+    assert 0 < rep["stop_copy_blocks"] < rep["blocks_per_round"][0]
+    assert rep["pause_steps"] == 1
+    dst.run(max_steps=400)
+    got = {r.rid: list(r.generated) for r in dst.done}
+    assert got == want
+    dst.check_consistency()
+    dst.arena.check_consistency()
+    assert_engine_quiescent(dst)
+    src.release_arena()
+    dst.release_arena()
+
+
+# ---------------------------------------------------------------------------
+# prefill/decode disaggregation: handoff == monolithic
+# ---------------------------------------------------------------------------
+def test_disaggregated_prefill_token_identity(gemma):
+    _, model, params = gemma
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(2, 500, size=int(rng.randint(5, 18)))
+               for _ in range(4)]
+
+    mono = _engine(model, params)
+    for i, p in enumerate(prompts):
+        mono.submit(Request(rid=i, prompt=p.copy(), max_new=6))
+    mono.run(max_steps=300)
+    want = {r.rid: list(r.generated) for r in mono.done}
+    assert_engine_quiescent(mono)
+
+    pre = PrefillWorker(model, params, max_seq=64, num_blocks=24,
+                        eos_id=-1, prefill_budget=None)
+    disagg = DisaggregatedEngine(pre, _engine(model, params))
+    for i, p in enumerate(prompts):
+        disagg.submit(Request(rid=i, prompt=p.copy(), max_new=6))
+    disagg.run(max_steps=300)
+    got = {r.rid: list(r.generated) for r in disagg.done}
+    assert got == want
+    assert disagg.handoffs == 4 and disagg.handoff_bytes > 0
+    assert pre.prefills == 4
+    # the prefill worker's pool drains fully on every export
+    assert pre.engine.arena.num_used(pre.engine.strategy.mgr.pool_class) == 1
+    disagg.engine.check_consistency()
+    for r in disagg.done:
+        assert r.t_first >= 0          # TTFT stamped at the prefill argmax
+    assert_engine_quiescent(disagg.engine)
+    pre.engine.release_arena()
+    disagg.engine.release_arena()
+
+
+# ---------------------------------------------------------------------------
+# thread-fed arrivals
+# ---------------------------------------------------------------------------
+def test_threaded_request_source_feeds_serve(gemma):
+    _, model, params = gemma
+    eng = _engine(model, params)
+    rng = np.random.RandomState(9)
+    prompts = [rng.randint(2, 500, size=int(rng.randint(5, 14)))
+               for _ in range(4)]
+    source = ThreadedRequestSource()
+
+    def producer():
+        for i, p in enumerate(prompts):
+            source.submit(Request(rid=i, prompt=p, max_new=4,
+                                  arrival_time=float(2 * i)))
+        source.close()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    done = eng.serve(source, max_steps=300)
+    t.join()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    # future arrivals were held back to their virtual due times
+    assert all(not source.poll(1e9) for _ in range(2))
+    assert not source.has_more
+    with pytest.raises(RuntimeError):
+        source.submit(Request(rid=99, prompt=prompts[0], max_new=1))
+    assert_engine_quiescent(eng)
+    eng.release_arena()
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 graduates to served
+# ---------------------------------------------------------------------------
+def test_rwkv6_served_with_length_masked_prefill():
+    """The registry row is served now: the padded batched prefill masks
+    lengths exactly, so ragged serving matches a per-sequence oracle."""
+    cfg = get_config("rwkv6_7b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(2, 400, size=n) for n in (5, 11, 8)]
+
+    def pad8(p):
+        t = np.zeros(-(-len(p) // 8) * 8, np.int64)
+        t[:len(p)] = p
+        return t
+
+    def oracle(prompt):
+        st = model.init_state(1)
+        last, st = model.prefill(
+            params, {"tokens": jnp.asarray(pad8(prompt))[None]}, st,
+            jnp.asarray([len(prompt)], jnp.int32))
+        out = [int(jnp.argmax(last[0]))]
+        for _ in range(3):
+            logits, st = model.decode_step(params, jnp.asarray([out[-1]]),
+                                           st)
+            out.append(int(jnp.argmax(logits[0])))
+        return out
+
+    want = {i: oracle(p) for i, p in enumerate(prompts)}
+    eng = Engine(model, params, slots=2, max_seq=64, num_blocks=16,
+                 eos_id=-1, prefill_budget=None)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=4))
+    eng.run(max_steps=200)
+    got = {r.rid: list(r.generated) for r in eng.done}
+    assert got == want
+    eng.check_consistency()
+    eng.release_arena()
