@@ -55,6 +55,15 @@ per-request token identity between the modes plus
 ``prefill_tokens_saved > 0`` on the suffix run; both modes' tokens/s
 land in BENCH_transfers.json under ``modes``.
 
+``--smoke`` also runs ``decode_path_probe``: the scripted workload
+served with the device-resident decode path (persistent block tables,
+delta sync, one fused buffer-donated decode step -- the default) vs
+the eager full-rebuild fallback (``resident_tables=False``), gated on
+per-request token identity and on the resident path performing
+strictly fewer host uploads per step than eager's fixed two; each
+mode's tokens/s, phase breakdown and table-sync traffic land under
+``decode_path``.
+
 ``--smoke`` also runs ``mixed_arch_probe``: transformer + mamba2 +
 zamba2 served concurrently from ONE shared Arena through the
 architecture registry (``serve/arch.py``), gated on per-family token
@@ -113,7 +122,8 @@ def build(args, overlap: bool = True):
                  num_blocks=args.num_blocks, eos_id=-1,
                  watermark=args.watermark,
                  prefill_budget=args.prefill_budget,
-                 overlap_transfers=overlap)
+                 overlap_transfers=overlap,
+                 resident_tables=getattr(args, "resident_tables", True))
     return cfg, eng
 
 
@@ -268,6 +278,54 @@ def suffix_probe(args):
             "completed": done_by[mode],
         }
     out["token_identical"] = gen["suffix"] == gen["full-recompute"]
+    return out
+
+
+def decode_path_probe(args):
+    """Resident-decode section: the scripted forced-preemption workload
+    served twice -- device-resident tables + delta sync + the fused
+    donated decode tail (``resident_tables=True``, the default) vs the
+    eager full-rebuild fallback (``False``) -- pinning per-request
+    token identity between the paths and gating the whole point of the
+    refactor: the resident path must perform strictly fewer host
+    uploads per step than the eager path's fixed two (full table sync +
+    token vector).  Order-balanced best-of-2 per mode; each mode's
+    tokens/s, per-step phase breakdown and table-sync traffic land in
+    BENCH_serve.json under ``decode_path``.
+    """
+    import argparse as _ap
+
+    pargs = _ap.Namespace(**{**vars(args), "prefill_budget": None})
+    runs: dict = {"resident": [], "eager": []}
+    gen, stats_by, done_by = {}, {}, {}
+    for mode in ("resident", "eager", "eager", "resident"):
+        margs = _ap.Namespace(**{**vars(pargs),
+                                 "resident_tables": mode == "resident"})
+        cfg, eng = build(margs)
+        runs[mode].append(drive(cfg, eng, margs))
+        stats_by[mode] = eng.stats
+        gen[mode] = {r.rid: list(r.generated) for r in eng.done}
+        done_by[mode] = len(eng.done)
+    out = {}
+    for mode, dts in runs.items():
+        st = stats_by[mode]
+        out[mode] = {
+            "tokens_per_s": round(
+                st["decode_tokens"] / max(min(dts), 1e-9), 2),
+            "completed": done_by[mode],
+            "host_uploads": st["host_uploads"],
+            "host_uploads_per_step": round(st["host_uploads_per_step"], 3),
+            "table_sync_bytes": st["table_sync_bytes"],
+            "table_rows_updated": st["table_rows_updated"],
+            "phase_time_s": {k: round(v, 4)
+                             for k, v in st["phase_time_s"].items()},
+        }
+    out["token_identical"] = gen["resident"] == gen["eager"]
+    out["ok"] = (out["token_identical"]
+                 and done_by["resident"] == args.requests
+                 and done_by["eager"] == args.requests
+                 and out["resident"]["host_uploads_per_step"]
+                 < out["eager"]["host_uploads_per_step"])
     return out
 
 
@@ -596,6 +654,13 @@ def main(argv=None):
         "arena": eng.arena_stats().to_dict(),
         "transfers": st["transfers"],
         "overlap_transfers": True,
+        "resident_tables": st["resident_tables"],
+        "host_uploads": st["host_uploads"],
+        "host_uploads_per_step": round(st["host_uploads_per_step"], 3),
+        "table_sync_bytes": st["table_sync_bytes"],
+        "table_rows_updated": st["table_rows_updated"],
+        "phase_time_s": {k: round(v, 4)
+                         for k, v in st["phase_time_s"].items()},
         "all_ok": (len(eng.done) == args.requests
                    and st["prefix_hits"] > 0
                    and st["swap_out_bytes"]
@@ -654,6 +719,18 @@ def main(argv=None):
         report["all_ok"] = (report["all_ok"]
                             and sp["token_identical"]
                             and sp["suffix"]["prefill_tokens_saved"] > 0)
+        # CI gate: the resident decode path (device-persistent tables,
+        # delta sync, fused donated step tail) must decode token-
+        # identical to the eager full-rebuild fallback across the
+        # forced-preemption workload, while performing strictly fewer
+        # host uploads per step than eager's fixed two
+        dp = decode_path_probe(args)
+        report["decode_path"] = dp
+        transfers_doc["modes"]["decode+resident"] = \
+            dp["resident"]["tokens_per_s"]
+        transfers_doc["modes"]["decode+eager-rebuild"] = \
+            dp["eager"]["tokens_per_s"]
+        report["all_ok"] = report["all_ok"] and dp["ok"]
         # CI gate: the architecture registry must serve all three cache
         # disciplines from one shared Arena token-identically to each
         # family's standalone run, with a preemption round-trip through
@@ -701,6 +778,7 @@ def main(argv=None):
           f"prefill_saved={report['prefill_tokens_saved']},"
           f"mixed_arch_ok={report.get('mixed_arch', {}).get('ok', '-')},"
           f"migrate_ok={report.get('migrate', {}).get('ok', '-')},"
+          f"decode_path_ok={report.get('decode_path', {}).get('ok', '-')},"
           f"all_ok={report['all_ok']},json={OUT_JSON}")
     if not report["all_ok"]:
         raise SystemExit(1)

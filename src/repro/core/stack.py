@@ -124,6 +124,16 @@ class BlockStack:
         blk, off = divmod(self._top - 1, self.block_size)
         return self._blocks[blk][off]
 
+    def peek_n(self, k: int) -> List[Any]:
+        """Top ``k`` items, top-of-stack first, without popping (the
+        speculative resume window's read-only view).  Returns fewer when
+        the stack holds fewer."""
+        out = []
+        for i in range(min(k, self._top)):
+            blk, off = divmod(self._top - 1 - i, self.block_size)
+            out.append(self._blocks[blk][off])
+        return out
+
     @property
     def num_blocks(self) -> int:
         return len(self._blocks)

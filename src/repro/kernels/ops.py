@@ -62,6 +62,21 @@ def paged_attention(q, k_pool, v_pool, block_tables, seq_lens,
 
 
 @functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "window", "interpret"), donate_argnums=(3, 4))
+def paged_attention_append(q, k_new, v_new, k_pool, v_pool, block_tables,
+                           seq_lens,
+                           scale: Optional[float] = None,
+                           softcap: Optional[float] = None,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    """Fused append-then-attend decode step; pools donated (in-place)."""
+    return _pa.paged_attention_append(
+        q, k_new, v_new, k_pool, v_pool, block_tables, seq_lens,
+        scale=scale, softcap=softcap, window=window,
+        interpret=_use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
     "scale", "softcap", "window", "v_dim", "q_chunk", "interpret"))
 def paged_prefill_attention(q, k_pool, v_pool, block_tables, kv_lens,
                             q_starts,
@@ -111,4 +126,5 @@ tree_gather_ref = kref.tree_gather_ref
 tree_block_sum_ref = kref.tree_block_sum_ref
 tree_gather_rows_ref = kref.tree_gather_rows_ref
 paged_attention_ref = kref.paged_attention_ref
+paged_attention_append_ref = kref.paged_attention_append_ref
 paged_prefill_attention_ref = kref.paged_prefill_attention_ref

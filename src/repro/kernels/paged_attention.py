@@ -93,6 +93,153 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_append_kernel(tables_ref, lens_ref, q_ref, kn_ref, vn_ref,
+                         k_ref, v_ref, o_ref, ok_ref, ov_ref,
+                         m_scr, l_scr, acc_scr, *, block_tokens: int,
+                         scale: float, softcap: Optional[float],
+                         window: Optional[int], num_blocks_grid: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = lens_ref[b]
+    jt = jnp.minimum(seq_len // block_tokens, num_blocks_grid - 1)
+    off = seq_len - jt * block_tokens        # >= BT only when table full
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, HD)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (BT, HD)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)    # (BT, VD)
+
+    # Splice the new token's row into the tail block before scoring: the
+    # append happens in VMEM, on the block the scalar-prefetch table
+    # already DMA'd for this grid step -- no second pass over the pool.
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_tokens, 1), 0)
+    here = jnp.logical_and(j == jt, row == off)  # (BT, 1)
+    k = jnp.where(here, kn_ref[0, 0].astype(jnp.float32)[None, :], k)
+    v = jnp.where(here, vn_ref[0, 0].astype(jnp.float32)[None, :], v)
+
+    @pl.when(j == jt)
+    def _writeback():
+        ok_ref[0, :, 0, :] = k.astype(ok_ref.dtype)
+        ov_ref[0, :, 0, :] = v.astype(ov_ref.dtype)
+
+    s = jax.lax.dot_general(q * scale, k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, BT)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    pos = j * block_tokens + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < seq_len + 1
+    if window is not None:
+        valid = jnp.logical_and(valid, pos >= seq_len + 1 - window)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_scr[...]                          # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)              # (G, 1)
+    p = jnp.exp(s - m_new)                       # (G, BT)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == num_blocks_grid - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_append(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                           k_pool: jax.Array, v_pool: jax.Array,
+                           block_tables: jax.Array, seq_lens: jax.Array, *,
+                           scale: Optional[float] = None,
+                           softcap: Optional[float] = None,
+                           window: Optional[int] = None,
+                           interpret: bool = False):
+    """Fused append-then-attend flash decode (resident decode tail).
+
+    Same sweep as ``paged_attention``, but the new token's K/V rows are
+    written into the tail block *inside the kernel*: the scalar-prefetch
+    table already names the tail block, so at grid step ``j == lens[b]
+    // BT`` the kernel splices ``k_new/v_new`` into the in-VMEM block,
+    flushes it back to the pool through ``input_output_aliases`` (the
+    pools are donated, in-place), and attends over ``seq_lens + 1``
+    positions.  One launch replaces scatter-write + attention.
+
+    Tail blocks of live rows must be exclusively owned (the engine's COW
+    barrier guarantees this); rows parked on a shared sink block flush
+    in unspecified order, touching only sink garbage.  GQA/MQA only (no
+    MLA latent mode: the latent pool's value lanes alias the key pool).
+
+    q           : (B, KVH, G, HD)
+    k_new       : (B, KVH, HD);  v_new: (B, KVH, VD)
+    k_pool      : (NB, BT, KVH, HD);  v_pool: (NB, BT, KVH, VD)
+    block_tables: (B, MB) int32;  seq_lens: (B,) int32 (pre-append)
+    returns     : (o (B, KVH, G, VD), k_pool, v_pool)
+    """
+    B, KVH, G, HD = q.shape
+    NB, BT, KVH_k, HD_k = k_pool.shape
+    assert KVH_k == KVH and HD_k == HD, (q.shape, k_pool.shape)
+    assert k_new.shape == (B, KVH, HD), k_new.shape
+    MB = block_tables.shape[1]
+    VD = v_pool.shape[-1]
+    assert v_new.shape == (B, KVH, VD), v_new.shape
+    if scale is None:
+        scale = HD ** -0.5
+
+    kernel = functools.partial(
+        _paged_append_kernel, block_tokens=BT, scale=float(scale),
+        softcap=softcap, window=window, num_blocks_grid=MB)
+
+    def k_map(b, h, j, tbl, lens):
+        return (jnp.maximum(tbl[b, j], 0), 0, h, 0)
+
+    def tail_map(b, h, j, tbl, lens):
+        jt = jnp.minimum(lens[b] // BT, MB - 1)
+        return (jnp.maximum(tbl[b, jt], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, HD), lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, HD), lambda b, h, j, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, 1, VD), lambda b, h, j, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, BT, 1, HD), k_map),
+            pl.BlockSpec((1, BT, 1, VD), k_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, VD),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, BT, 1, HD), tail_map),
+            pl.BlockSpec((1, BT, 1, VD), tail_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, VD), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, KVH, G, VD), q.dtype),
+                   jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                   jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)],
+        interpret=interpret,
+        input_output_aliases={5: 1, 6: 2},
+    )(block_tables, seq_lens, q, k_new, v_new, k_pool, v_pool)
+
+
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, seq_lens: jax.Array, *,
                     scale: Optional[float] = None,

@@ -61,6 +61,42 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return o.astype(q.dtype)
 
 
+def paged_attention_append_ref(q: jax.Array, k_new: jax.Array,
+                               v_new: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               seq_lens: jax.Array, *,
+                               scale: Optional[float] = None,
+                               softcap: Optional[float] = None,
+                               window: Optional[int] = None):
+    """Append-then-attend decode step (fused-kernel oracle).
+
+    Writes the new token's K/V rows into the tail block named by the
+    table (``tables[b, seq_lens[b] // BT]`` at offset ``seq_lens[b] %
+    BT``), then attends over ``seq_lens + 1`` positions -- the resident
+    decode tail's single-pass discipline.  Returns ``(o, k_pool,
+    v_pool)``.  Rows whose table is full (``seq_lens == MB * BT``) drop
+    the write and attend over the full table; rows sharing a tail block
+    (empty slots parked on the sink) scatter in unspecified order, which
+    only ever touches sink garbage.
+
+    q     : (B, KVH, G, HD);  k_new: (B, KVH, HD);  v_new: (B, KVH, VD)
+    pools / tables / lens as in ``paged_attention_ref``.
+    """
+    B = q.shape[0]
+    NB, BT = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    jt = jnp.minimum(seq_lens // BT, MB - 1)
+    phys = jnp.maximum(block_tables[jnp.arange(B), jt], 0)
+    off = seq_lens - jt * BT                 # >= BT only when table full
+    k_pool = k_pool.at[phys, off].set(k_new.astype(k_pool.dtype),
+                                      mode="drop")
+    v_pool = v_pool.at[phys, off].set(v_new.astype(v_pool.dtype),
+                                      mode="drop")
+    o = paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens + 1,
+                            scale=scale, softcap=softcap, window=window)
+    return o, k_pool, v_pool
+
+
 def paged_prefill_attention_ref(q: jax.Array, k_pool: jax.Array,
                                 v_pool: jax.Array, block_tables: jax.Array,
                                 kv_lens: jax.Array, q_starts: jax.Array, *,

@@ -426,6 +426,33 @@ class DecoderLM:
         logits = self._head(p, x[:, None] if x.ndim == 2 else x)
         return logits.reshape(tokens.shape[0], -1), cache
 
+    def decode_fused(self, p: Params, tokens: jax.Array,
+                     cache: PagedKVCache, upd_slots: jax.Array,
+                     upd_tables: jax.Array, upd_lens: jax.Array):
+        """Resident decode tail: delta-scatter + decode + argmax in ONE
+        jitted, cache-donated trace.  ``upd_slots`` (W,) names the slots
+        whose mapping changed since the last step (padded with
+        ``slots``, dropped by the scatter); their rows/lens are spliced
+        into the device-resident table before the step.  Returns
+        ``(next_tokens (B,), cache)`` -- only the (B,) token array ever
+        crosses to host.  W is shape-bucketed, so steady state (W = 1
+        bucket or 0 dirty rows) reuses one warm executable."""
+        return self._jitted("decode_fused", self._decode_fused_impl)(
+            p, tokens, cache, upd_slots, upd_tables, upd_lens)
+
+    def _decode_fused_impl(self, p: Params, tokens: jax.Array,
+                           cache: PagedKVCache, upd_slots: jax.Array,
+                           upd_tables: jax.Array, upd_lens: jax.Array):
+        tables = cache.block_tables.at[upd_slots].set(upd_tables,
+                                                      mode="drop")
+        lens = cache.seq_lens.at[upd_slots].set(upd_lens, mode="drop")
+        cache = dataclasses.replace(cache, block_tables=tables,
+                                    seq_lens=lens)
+        # Same math as decode_step: _decode_step_impl is inlined into
+        # this trace, so resident vs eager token-identity is structural.
+        logits, cache = self._decode_step_impl(p, tokens, cache)
+        return jnp.argmax(logits, axis=-1), cache
+
     def prefill(self, p: Params, batch: Dict[str, jax.Array],
                 cache: PagedKVCache, lengths: jax.Array):
         """Run the forward pass and write the whole prompt's KV stream.

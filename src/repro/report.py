@@ -237,6 +237,55 @@ def fmt_family_table(doc: Dict) -> str:
     return "\n".join(out)
 
 
+def fmt_decode_path_table(doc: Dict) -> str:
+    """Render the resident-decode section of BENCH_serve.json: the
+    ``decode_path`` probe (device-persistent tables + delta sync + the
+    fused donated step tail vs the eager full-rebuild fallback) and the
+    workload run's per-step phase breakdown.
+
+    Degrades gracefully on pre-resident snapshots that lack the
+    section: renders an "n/a" row and says why, never KeyError (same
+    contract as the other section tables).
+    """
+    out = ["| mode | tokens/s | uploads/step | rows scattered | "
+           "sync bytes | completed |",
+           "|---|---|---|---|---|---|"]
+    dp = doc.get("decode_path")
+    if not dp or "resident" not in dp:
+        out.append("| n/a | n/a | n/a | n/a | n/a | n/a |")
+        out.append("")
+        out.append("no resident-decode section in this snapshot "
+                   "(pre-resident-path BENCH_serve.json)")
+        return "\n".join(out)
+
+    def cell(v):
+        return "n/a" if v is None else v
+
+    for mode in ("resident", "eager"):
+        r = dp.get(mode) or {}
+        tps = r.get("tokens_per_s")
+        out.append(
+            f"| {mode} | {'n/a' if tps is None else f'{tps:.1f}'} | "
+            f"{cell(r.get('host_uploads_per_step'))} | "
+            f"{cell(r.get('table_rows_updated'))} | "
+            f"{cell(r.get('table_sync_bytes'))} | "
+            f"{cell(r.get('completed'))} |")
+    out.append("")
+    out.append(f"token identical: {dp.get('token_identical', 'n/a')}")
+    ph = doc.get("phase_time_s")
+    if ph:
+        total = sum(ph.values()) or 1.0
+        shares = ", ".join(f"{k} {v / total:.0%}"
+                           for k, v in sorted(ph.items(),
+                                              key=lambda kv: -kv[1]))
+        out.append(f"workload step-phase wall share: {shares} "
+                   f"(uploads/step "
+                   f"{doc.get('host_uploads_per_step', 'n/a')}, "
+                   f"table sync bytes "
+                   f"{doc.get('table_sync_bytes', 'n/a')})")
+    return "\n".join(out)
+
+
 def fmt_migrate_table(doc: Dict) -> str:
     """Render the cross-process section (``migrate`` of
     BENCH_serve.json, or a standalone BENCH_migrate.json): the live
@@ -307,6 +356,8 @@ def main(path: str) -> None:
         print(fmt_tenant_latency_table(doc))
         print("\n### Architecture registry: per-family serving\n")
         print(fmt_family_table(doc))
+        print("\n### Resident decode path: delta sync + fused tail\n")
+        print(fmt_decode_path_table(doc))
         print("\n### Cross-process: live migration + disaggregation\n")
         print(fmt_migrate_table(doc))
         return

@@ -42,6 +42,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -266,6 +267,8 @@ class CacheStrategy:
     growing_classes: frozenset
     supports_prefix_sharing = False
     supports_suffix_prefill = False
+    #: engine-set: device tables/rows are resident and delta-maintained
+    resident = False
 
     # -- admission view (scheduler vector path) --
     def footprint(self, req) -> Dict[str, int]:
@@ -349,6 +352,63 @@ class CacheStrategy:
         """One decode step over the synced device state; returns logits."""
         raise NotImplementedError
 
+    # -- resident delta-sync protocol --
+    def _init_resident(self) -> None:
+        """Per-instance dirty-tracking state for the delta-sync path
+        (strategies call this from __init__; no super().__init__)."""
+        self._dirty: set = set()        # slots whose mapping changed
+        self._resident: set = set()     # slots synced as live last step
+        self._all_dirty = True          # first sync scatters every slot
+
+    def mark_dirty(self, slot: int) -> None:
+        """Mapping-mutation hook: ``slot``'s device rows must re-scatter
+        at the next sync (growth, COW fulfilment, fork, resume, swap-in,
+        adopt_device all route here via the engine)."""
+        self._dirty.add(slot)
+
+    def mark_all_dirty(self) -> None:
+        """Every slot's device rows are stale -- physical ids moved under
+        the tables (``compact()`` lease rewrite), including the sink the
+        empty slots point at."""
+        self._all_dirty = True
+
+    def _take_dirty(self, running) -> set:
+        """Slots to scatter this sync: dirty live slots plus departures
+        (slots that WERE live and must be reset to the sink, or their
+        stale tables would clobber reallocated blocks)."""
+        run = set(running)
+        if self._all_dirty:
+            upd = set(range(self.slots))
+            self._all_dirty = False
+        else:
+            upd = (self._dirty & run) | (self._resident - run)
+        self._dirty.clear()
+        self._resident = run
+        return upd
+
+    @staticmethod
+    def _bucket(n: int, slots: int) -> int:
+        """Power-of-two width for the update arrays, so repeats hit a
+        warm jit trace (pad entries index ``slots`` -> scatter-dropped)."""
+        return min(1 << (n - 1).bit_length(), slots) if n else 0
+
+    def full_sync_cost(self) -> Tuple[int, int]:
+        """(rows, bytes) one full-rebuild sync uploads -- the eager
+        fallback's per-step cost, reported beside the delta path's."""
+        raise NotImplementedError
+
+    def sync_device_state_delta(self, running) -> Tuple[int, int]:
+        """Delta read barrier: scatter only the dirty slots' rows and
+        stash the update arrays for ``decode_resident``; returns
+        (rows_updated, bytes_staged)."""
+        raise NotImplementedError
+
+    def decode_resident(self, params, tokens):
+        """Fused step tail: delta-scatter + state step + argmax in one
+        jitted, buffer-donated callable; returns the DEVICE (B,)
+        next-token array (the only thing that crosses to host)."""
+        raise NotImplementedError
+
     def prefill(self, params, batch) -> Tuple[np.ndarray, int]:
         """ONE padded prefill for ``[(slot, req, shared), ...]``;
         returns (next-token per row, prompt tokens billed)."""
@@ -370,6 +430,10 @@ class CacheStrategy:
         for c in self.pool_classes:
             src, _ = self.arena.compact(c)
             moved += len(src)
+        if moved:
+            # leases were rewritten under the tables: every resident
+            # row (including the empty slots' sink pointer) is stale
+            self.mark_all_dirty()
         return moved
 
     # -- restart / teardown / audit --
@@ -412,11 +476,22 @@ class PagedKVStrategy(CacheStrategy):
         self.mgr = PagedKVManager(kvcfg, arena=arena,
                                   pool_class=pool_prefix + "kv")
         self._sink = self.mgr.reserve_sink()
+        # resident tables must START all-sink / length-0: the created
+        # cache fills tables with NULL (-1), and jax scatter WRAPS
+        # negative indices -- an untouched empty slot would aim every
+        # padded decode write at the pool's last block.  (Harmless for
+        # the eager fallback, which rebuilds the full table per step.)
+        self.cache = dataclasses.replace(
+            self.cache,
+            block_tables=jnp.full_like(self.cache.block_tables, self.sink),
+            seq_lens=jnp.zeros_like(self.cache.seq_lens))
         self.store = HostBlockStore(arena, self.mgr.pool_class)
         self.pool_classes = [self.mgr.pool_class]
         self.growing_classes = frozenset(self.pool_classes)
         self.supports_suffix_prefill = getattr(
             model, "supports_suffix_prefill", False)
+        self._init_resident()
+        self._upd = None
         arena.transfers.register_executor(
             self.mgr.pool_class, self._streams, self._set_streams)
 
@@ -534,6 +609,49 @@ class PagedKVStrategy(CacheStrategy):
                                                     self.cache)
         return logits
 
+    def full_sync_cost(self):
+        mb = self.cache.config.max_blocks_per_seq
+        return self.slots, self.slots * (mb + 1) * 4
+
+    def sync_device_state_delta(self, running):
+        """Delta read barrier: the device table is the cached translation
+        structure; only slots whose mapping changed since the last step
+        re-scatter.  Live-migration write tracking stays per-step (the
+        coming decode appends at ``tokens_held`` regardless of table
+        churn), read off the host mapping without building any table."""
+        bt = self.cache.config.block_tokens
+        writes = []
+        for slot, req in running.items():
+            self.mgr.mapping(req.rid).assert_settled()
+            writes.append(int(self.mgr.block_ids(req.rid)
+                              [req.tokens_held // bt]))
+        self.mgr.allocator.note_write(writes)
+        upd = self._take_dirty(running)
+        mb = self.cache.config.max_blocks_per_seq
+        W = self._bucket(len(upd), self.slots)
+        upd_slots = np.full(W, self.slots, np.int32)   # pad -> dropped
+        upd_tables = np.full((W, mb), self.sink, np.int32)
+        upd_lens = np.zeros(W, np.int32)
+        for i, slot in enumerate(sorted(upd)):
+            upd_slots[i] = slot
+            if slot in running:
+                req = running[slot]
+                upd_tables[i] = self.mgr.device_table(req.rid)
+                upd_lens[i] = req.tokens_held
+            # departed slots reset to all-sink / length 0: their stale
+            # tables would aim padded writes at reallocated blocks
+        self._upd = (upd_slots, upd_tables, upd_lens)
+        nbytes = (upd_slots.nbytes + upd_tables.nbytes + upd_lens.nbytes
+                  if W else 0)
+        return len(upd), nbytes
+
+    def decode_resident(self, params, tokens):
+        upd_slots, upd_tables, upd_lens = self._upd
+        nxt, self.cache = self.model.decode_fused(
+            params, tokens, self.cache, jnp.asarray(upd_slots),
+            jnp.asarray(upd_tables), jnp.asarray(upd_lens))
+        return nxt
+
     def prefill(self, params, batch):
         """Rows padded to the longest block-aligned prompt; per-row
         prefill tables redirect padding AND COW-aliased prefix blocks to
@@ -647,6 +765,17 @@ class PagedKVStrategy(CacheStrategy):
             assert all(alloc.is_allocated(b) for b in tbl)
             assert lens[slot] == req.tokens_held, (slot, lens[slot],
                                                    req.tokens_held)
+        if self.resident and not self._all_dirty:
+            # resident shadow vs host truth: a missed mark_dirty hook
+            # surfaces HERE, not as a silent wrong-block read
+            dev = np.asarray(self.cache.block_tables)
+            for slot, req in running.items():
+                if slot in self._dirty:
+                    continue            # scatter staged for next sync
+                want = self.mgr.device_table(req.rid)
+                assert np.array_equal(dev[slot], want), (
+                    f"slot {slot}: resident table diverged from mapping "
+                    f"truth (missed dirty mark?)")
         transfers = self.arena.transfers
         transit = set(transfers.in_transit(self.mgr.pool_class))
         assert len(self.store) + len(transit) == len(self.mgr.swapped)
@@ -700,6 +829,10 @@ class ConstantStateStrategy(CacheStrategy):
         # padded prefill must keep the SSD chunk divisibility invariant
         self._pad = max(1, getattr(model.cfg.ssm, "chunk", 1))
         self._rows = np.full(slots, self.sink, np.int32)
+        self._init_resident()
+        self._upd = None
+        self._rows_dev = None           # device-resident row indices
+        self._fused = None              # cached fused decode jit
 
     @property
     def sink(self) -> int:
@@ -795,6 +928,53 @@ class ConstantStateStrategy(CacheStrategy):
             self.model.state_to_rows(new_state))
         return logits
 
+    def full_sync_cost(self):
+        return self.slots, self.slots * 4
+
+    def sync_device_state_delta(self, running):
+        for slot, req in running.items():
+            self.mgr.mapping(req.rid).assert_settled()
+        # every decode scatters fresh state into every running row
+        self.mgr.allocator.note_write(
+            [int(self.mgr.row(req.rid)) for req in running.values()])
+        upd = self._take_dirty(running)
+        W = self._bucket(len(upd), self.slots)
+        upd_slots = np.full(W, self.slots, np.int32)   # pad -> dropped
+        upd_rows = np.full(W, self.sink, np.int32)
+        for i, slot in enumerate(sorted(upd)):
+            upd_slots[i] = slot
+            if slot in running:
+                upd_rows[i] = self.mgr.row(running[slot].rid)
+            self._rows[slot] = upd_rows[i]             # host shadow
+        self._upd = (upd_slots, upd_rows)
+        return len(upd), (upd_slots.nbytes + upd_rows.nbytes if W else 0)
+
+    def _fused_fn(self):
+        """One jitted, pool-donated trace: row delta-scatter -> state
+        gather -> decode step -> state scatter-back -> argmax.  The row
+        index vector stays latched on device between steps."""
+        if self._fused is None:
+            model = self.model
+
+            def impl(p, tokens, pool, rows, upd_slots, upd_rows):
+                rows = rows.at[upd_slots].set(upd_rows, mode="drop")
+                state = model.rows_to_state(pool[rows])
+                logits, new_state = model.decode_step(p, tokens, state)
+                pool = pool.at[rows].set(model.state_to_rows(new_state))
+                return jnp.argmax(logits, axis=-1), pool, rows
+
+            self._fused = jax.jit(impl, donate_argnums=(2,))
+        return self._fused
+
+    def decode_resident(self, params, tokens):
+        if self._rows_dev is None:
+            self._rows_dev = jnp.full((self.slots,), self.sink, jnp.int32)
+        upd_slots, upd_rows = self._upd
+        nxt, self.mgr.pool, self._rows_dev = self._fused_fn()(
+            params, tokens, self.mgr.pool, self._rows_dev,
+            jnp.asarray(upd_slots), jnp.asarray(upd_rows))
+        return nxt
+
     def prefill(self, params, batch):
         """Padded batched prefill from zero state; ``lengths`` masks the
         right padding out of the SSM scan exactly, so this is
@@ -850,6 +1030,15 @@ class ConstantStateStrategy(CacheStrategy):
             m = self.mgr.mapping(req.rid)
             assert len(m) == 1 and m.placement == "device"
             assert alloc.is_allocated(m.block_ids()[0])
+        if (self.resident and not self._all_dirty
+                and self._rows_dev is not None):
+            dev = np.asarray(self._rows_dev)
+            for slot, req in running.items():
+                if slot in self._dirty:
+                    continue
+                assert dev[slot] == self.mgr.row(req.rid), (
+                    f"slot {slot}: resident state row diverged from "
+                    f"mapping truth (missed dirty mark?)")
         transfers = self.arena.transfers
         transit = set(transfers.in_transit(self.mgr.pool_class))
         assert len(self.store) + len(transit) == len(self.mgr.swapped)
@@ -898,6 +1087,15 @@ class CompositeStrategy(CacheStrategy):
         chunk = max(1, getattr(model.cfg.ssm, "chunk", 1))
         self._pad = bt * chunk // math.gcd(bt, chunk)
         self._rows = np.full(slots, self.state_sink, np.int32)
+        # resident tables start all-sink / length-0 (see PagedKVStrategy)
+        self.cache = dataclasses.replace(
+            self.cache,
+            block_tables=jnp.full_like(self.cache.block_tables, self.sink),
+            seq_lens=jnp.zeros_like(self.cache.seq_lens))
+        self._init_resident()
+        self._upd = None
+        self._rows_dev = None
+        self._fused = None
         arena.transfers.register_executor(
             self.mgr.pool_class, self._streams, self._set_streams)
 
@@ -1005,10 +1203,93 @@ class CompositeStrategy(CacheStrategy):
         logits, new_state = self.model.decode_step(params, tokens, state)
         self.state_mgr.pool = self.state_mgr.pool.at[idx].set(
             self.model.state_to_rows(new_state.conv, new_state.ssd))
+        # carry the advanced seq_lens forward too (PagedKVStrategy keeps
+        # the whole returned cache): between steps the device lens must
+        # equal tokens_held, which check_consistency audits
         self.cache = dataclasses.replace(
             self.cache, k_pool=new_state.kv.k_pool,
-            v_pool=new_state.kv.v_pool)
+            v_pool=new_state.kv.v_pool, seq_lens=new_state.kv.seq_lens)
         return logits
+
+    def full_sync_cost(self):
+        mb = self.cache.config.max_blocks_per_seq
+        return self.slots, self.slots * (mb + 2) * 4
+
+    def sync_device_state_delta(self, running):
+        """Both disciplines' deltas ride ONE update-slot vector: a slot
+        is dirty for its KV table and its state row together (admission,
+        swap and release move both classes atomically)."""
+        bt = self.cache.config.block_tokens
+        kv_writes, st_writes = [], []
+        for slot, req in running.items():
+            self.mgr.mapping(req.rid).assert_settled()
+            self.state_mgr.mapping(req.rid).assert_settled()
+            kv_writes.append(int(self.mgr.block_ids(req.rid)
+                                 [req.tokens_held // bt]))
+            st_writes.append(int(self.state_mgr.row(req.rid)))
+        self.mgr.allocator.note_write(kv_writes)
+        self.state_mgr.allocator.note_write(st_writes)
+        upd = self._take_dirty(running)
+        mb = self.cache.config.max_blocks_per_seq
+        W = self._bucket(len(upd), self.slots)
+        upd_slots = np.full(W, self.slots, np.int32)   # pad -> dropped
+        upd_tables = np.full((W, mb), self.sink, np.int32)
+        upd_lens = np.zeros(W, np.int32)
+        upd_rows = np.full(W, self.state_sink, np.int32)
+        for i, slot in enumerate(sorted(upd)):
+            upd_slots[i] = slot
+            if slot in running:
+                req = running[slot]
+                upd_tables[i] = self.mgr.device_table(req.rid)
+                upd_lens[i] = req.tokens_held
+                upd_rows[i] = self.state_mgr.row(req.rid)
+            self._rows[slot] = upd_rows[i]             # host shadow
+        self._upd = (upd_slots, upd_tables, upd_lens, upd_rows)
+        nbytes = (upd_slots.nbytes + upd_tables.nbytes + upd_lens.nbytes
+                  + upd_rows.nbytes if W else 0)
+        return len(upd), nbytes
+
+    def _fused_fn(self):
+        """One jitted trace for the hybrid tail: table/len/row
+        delta-scatter -> state gather -> decode (KV append inside) ->
+        state scatter-back -> argmax; the KV cache and state pool are
+        both donated."""
+        if self._fused is None:
+            from repro.models.zamba2 import ZambaState
+            model = self.model
+
+            def impl(p, tokens, cache, pool, rows, upd_slots, upd_tables,
+                     upd_lens, upd_rows):
+                tables = cache.block_tables.at[upd_slots].set(
+                    upd_tables, mode="drop")
+                lens = cache.seq_lens.at[upd_slots].set(upd_lens,
+                                                        mode="drop")
+                rows = rows.at[upd_slots].set(upd_rows, mode="drop")
+                cache = dataclasses.replace(cache, block_tables=tables,
+                                            seq_lens=lens)
+                conv, ssd = model.rows_to_state(pool[rows])
+                logits, st = model.decode_step(
+                    p, tokens, ZambaState(conv, ssd, cache))
+                pool = pool.at[rows].set(
+                    model.state_to_rows(st.conv, st.ssd))
+                return jnp.argmax(logits, axis=-1), st.kv, pool, rows
+
+            self._fused = jax.jit(impl, donate_argnums=(2, 3))
+        return self._fused
+
+    def decode_resident(self, params, tokens):
+        if self._rows_dev is None:
+            self._rows_dev = jnp.full((self.slots,), self.state_sink,
+                                      jnp.int32)
+        upd_slots, upd_tables, upd_lens, upd_rows = self._upd
+        nxt, self.cache, self.state_mgr.pool, self._rows_dev = (
+            self._fused_fn()(params, tokens, self.cache,
+                             self.state_mgr.pool, self._rows_dev,
+                             jnp.asarray(upd_slots),
+                             jnp.asarray(upd_tables),
+                             jnp.asarray(upd_lens),
+                             jnp.asarray(upd_rows)))
+        return nxt
 
     def prefill(self, params, batch):
         """One padded call writes BOTH disciplines: paged KV lands in
@@ -1090,6 +1371,19 @@ class CompositeStrategy(CacheStrategy):
             assert len(tbl) * bt >= req.tokens_held
             assert lens[slot] == req.tokens_held
             assert len(self.state_mgr.mapping(req.rid)) == 1
+        if self.resident and not self._all_dirty:
+            dev = np.asarray(self.cache.block_tables)
+            rows_dev = (np.asarray(self._rows_dev)
+                        if self._rows_dev is not None else None)
+            for slot, req in running.items():
+                if slot in self._dirty:
+                    continue
+                want = self.mgr.device_table(req.rid)
+                assert np.array_equal(dev[slot], want), (
+                    f"slot {slot}: resident KV table diverged")
+                if rows_dev is not None:
+                    assert rows_dev[slot] == self.state_mgr.row(req.rid), (
+                        f"slot {slot}: resident state row diverged")
         transfers = self.arena.transfers
         for mgr, store in ((self.mgr, self.store),
                            (self.state_mgr, self.state_store)):

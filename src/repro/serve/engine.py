@@ -102,6 +102,7 @@ class Engine:
                  overlap_transfers: bool = True,
                  prefetch: bool = True,
                  suffix_prefill: bool = True,
+                 resident_tables: bool = True,
                  pool_prefix: str = "",
                  state_blocks: Optional[int] = None):
         self.model = model
@@ -158,6 +159,21 @@ class Engine:
                                and self.strategy.supports_prefix_sharing)
         self.suffix_prefill = (suffix_prefill
                                and self.strategy.supports_suffix_prefill)
+        # resident decode path: device tables/rows are incrementally
+        # maintained (delta scatter of dirty slots only) and the step
+        # tail runs as ONE jitted, buffer-donated callable with the
+        # next-token vector latched on device.  ``resident_tables=False``
+        # is the pinned full-rebuild fallback, mirroring the
+        # ``overlap_transfers``/``drain()`` pattern.
+        self.resident_tables = resident_tables
+        self.strategy.resident = resident_tables
+        self._tok_dev = None           # device-latched next-token vector
+        self._tok_dirty = True         # host wrote _next_tok -> re-upload
+        self.host_uploads = 0          # step tails with any h2d upload
+        self.table_sync_bytes = 0
+        self.table_rows_updated = 0
+        self.phase_time = {"dispatch": 0.0, "sync": 0.0, "decode": 0.0,
+                           "retire": 0.0}
         self.running: Dict[int, Request] = {}   # slot -> req
         self.done: List[Request] = []
         self._prefix_map: Dict[Tuple[int, bytes], List[int]] = {}
@@ -385,6 +401,11 @@ class Engine:
         req.slot = slot
         self.running[slot] = req
         self._register_prefix(req)
+        # every placement path (admit, resume, fork, swap-in commit,
+        # disaggregation adopt, migration restore) lands here: the
+        # slot's device rows and its host-written next token are stale
+        self.strategy.mark_dirty(slot)
+        self._tok_dirty = True
 
     def _batched_prefill(self, batch: List[Tuple[int, Request, int]]) -> None:
         """ONE padded prefill call for all of this step's admissions.
@@ -465,7 +486,15 @@ class Engine:
         schedule would have had, so pressure behavior stays
         decision-identical to the ``drain()`` fallback.
         """
-        for rid in self.strategy.prefetched_ids():
+        spec = self.strategy.prefetched_ids()
+        if spec:
+            # likelihood-ordered: the scheduler's resume window ranks
+            # candidates by resume order, so cancel the LEAST likely
+            # speculation first -- the top-of-window prefetch (the next
+            # actual resume) is the last to be withdrawn
+            order = {req.rid: i
+                     for i, req in enumerate(self.sched.resume_candidates())}
+            rid = max(spec, key=lambda r: order.get(r, len(order)))
             self.strategy.cancel_prefetch(rid)
             self.prefetch_cancels += 1
             return rid
@@ -504,10 +533,12 @@ class Engine:
                 continue
             req = self.running[slot]
             try:
-                grown += len(self.strategy.extend(req.rid,
-                                                  req.tokens_held + 1))
+                new = self.strategy.extend(req.rid, req.tokens_held + 1)
             except LeaseRevokedError:
                 continue
+            if new:
+                grown += len(new)
+                self.strategy.mark_dirty(slot)
         return grown
 
     def _cow_barrier(self) -> int:
@@ -537,6 +568,9 @@ class Engine:
             if plan is not None:
                 self.cow_copies += 1
                 copies += 1
+                # fulfilment swapped a fresh private block under the
+                # shared position -- the slot's table row changed
+                self.strategy.mark_dirty(slot)
         return copies
 
     # ---------------- compaction (Arena defrag) ----------------
@@ -614,6 +648,7 @@ class Engine:
         launches on the background h2d lane, overlapping the decode
         too.
         """
+        t_step = time.perf_counter()
         self.transfers.complete_dispatched()
         # deadline arithmetic runs on the step counter (a deterministic
         # virtual clock), never the wall clock
@@ -633,12 +668,44 @@ class Engine:
         self.transfers.dispatch(lanes=(URGENT,))
         self._maybe_prefetch()
         self.transfers.dispatch(lanes=(BACKGROUND,))
-        self._sync_device_state()
-        tokens = jnp.asarray(self._next_tok)
+        t_sync = time.perf_counter()
+        self.phase_time["dispatch"] += t_sync - t_step
+        uploads = 0
+        if self.resident_tables:
+            rows, nbytes = self.strategy.sync_device_state_delta(
+                self.running)
+            if rows:
+                uploads += 1
+        else:
+            self._sync_device_state()
+            rows, nbytes = self.strategy.full_sync_cost()
+            uploads += 1
+        self.table_rows_updated += rows
+        self.table_sync_bytes += nbytes
         t0 = time.perf_counter()
-        logits = self.strategy.decode(self.params, tokens)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # forces completion
-        self.sched.observe_decode(time.perf_counter() - t0)
+        self.phase_time["sync"] += t0 - t_sync
+        if self.resident_tables:
+            if self._tok_dirty or self._tok_dev is None:
+                tok_dev = jnp.asarray(self._next_tok)
+                self._tok_dirty = False
+                uploads += 1
+            else:
+                # steady state: this step's inputs ARE last step's
+                # argmax, still latched on device -- zero uploads
+                tok_dev = self._tok_dev
+            nxt_dev = self.strategy.decode_resident(self.params, tok_dev)
+            self._tok_dev = nxt_dev
+            nxt = np.asarray(nxt_dev)   # the (B,) host crossing
+            tokens = self._next_tok     # host truth of this step's inputs
+        else:
+            tokens = jnp.asarray(self._next_tok)
+            uploads += 1
+            logits = self.strategy.decode(self.params, tokens)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))  # completion
+        t_retire = time.perf_counter()
+        self.phase_time["decode"] += t_retire - t0
+        self.host_uploads += uploads
+        self.sched.observe_decode(t_retire - t0)
         # compute mark: any dispatched host copy that completes -- or
         # speculative scatter that commits -- after this point genuinely
         # overlapped a decode (honest per-engine `overlapped`)
@@ -654,6 +721,7 @@ class Engine:
                 self.strategy.release(req.rid)
                 self._deregister_prefix(req)
                 del self.running[slot]
+        self.phase_time["retire"] += time.perf_counter() - t_retire
 
     def serve(self, source=None, max_steps: int = 10_000) -> List[Request]:
         """Arrival-driven serving loop: the continuous-batching request
@@ -722,6 +790,13 @@ class Engine:
                                   / max(self.store.stats.swap_ins, 1)
                                   if self.prefetches else 0.0),
             "pool_utilization": self.strategy.utilization,
+            "resident_tables": self.resident_tables,
+            "host_uploads": self.host_uploads,
+            "host_uploads_per_step": (self.host_uploads
+                                      / max(self.steps, 1)),
+            "table_sync_bytes": self.table_sync_bytes,
+            "table_rows_updated": self.table_rows_updated,
+            "phase_time_s": dict(self.phase_time),
             "compactions": self.arena.compactions,
             "blocks_compacted": self.arena.blocks_compacted,
             "watermark_effective": self.sched.watermark,

@@ -434,17 +434,24 @@ class Scheduler:
     def has_work(self) -> bool:
         return len(self.policy) > 0 or len(self.preempted) > 0
 
+    #: speculative resume window: how deep into the preempted stack the
+    #: prefetcher may look (top-k, most-likely-next first)
+    prefetch_window = 2
+
     def resume_candidates(self) -> List[Request]:
-        """The LIFO resume candidate(s), most-likely-next first.
+        """The LIFO resume candidates, most-likely-next first (top-k
+        window, ``prefetch_window`` deep).
 
         This is the policy surface the speculative prefetch rides: the
         head of the preempted stack is the next sequence a freed slot
-        will resume, so the engine can enqueue its swap-in on the
-        background h2d lane WHILE decode runs and commit (or cancel) it
-        when the admission decision actually lands.  Peeking never
-        changes scheduling state.
+        will resume and the second entry follows it, so the engine can
+        enqueue their swap-ins on the background h2d lane WHILE decode
+        runs and commit (or cancel) them when the admission decision
+        actually lands.  The ordering doubles as the cancellation
+        likelihood ranking under pressure: entries deeper in the window
+        are withdrawn first.  Peeking never changes scheduling state.
         """
-        return [self.preempted.peek()] if len(self.preempted) > 0 else []
+        return self.preempted.peek_n(self.prefetch_window)
 
     # ---------------- admission ----------------
     def _stamp(self, req: Request) -> Request:

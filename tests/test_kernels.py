@@ -179,6 +179,130 @@ def test_paged_prefill_last_token_matches_decode_kernel(rng):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("B,KVH,G,HD,BT,MB", [
+    (2, 1, 8, 64, 16, 4),      # MQA
+    (3, 2, 4, 128, 32, 3),     # GQA
+    (1, 4, 1, 64, 8, 8),       # MHA-ish
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_paged_attention_append_sweep(B, KVH, G, HD, BT, MB, dtype, rng):
+    """Fused append-then-attend: the kernel writes the new token's K/V
+    rows into the tail block (aliased in place) and attends over
+    ``lens + 1`` in the same pass.  Pools must match the oracle's
+    exactly -- the splice is a dtype-roundtrip write, every other row
+    of the tail block is read and written back unchanged."""
+    NB = B * MB + 2
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(dtype))
+    k_new = jnp.asarray(rng.randn(B, KVH, HD).astype(dtype))
+    v_new = jnp.asarray(rng.randn(B, KVH, HD).astype(dtype))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(dtype))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(dtype))
+    # distinct blocks across rows: live tails are exclusively owned
+    # (the engine's COW barrier guarantees this before every decode)
+    tables = jnp.asarray(rng.permutation(NB)[: B * MB].reshape(B, MB)
+                         .astype(np.int32))
+    lens = jnp.asarray(rng.randint(0, MB * BT, B).astype(np.int32))
+    # oracle first: the jitted fused step DONATES the pools
+    ref_o, ref_k, ref_v = ops.paged_attention_append_ref(
+        q, k_new, v_new, k_pool, v_pool, tables, lens)
+    out, k_out, v_out = ops.paged_attention_append(
+        q, k_new, v_new, k_pool, v_pool, tables, lens, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_o, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_array_equal(np.asarray(k_out, np.float32),
+                                  np.asarray(ref_k, np.float32))
+    np.testing.assert_array_equal(np.asarray(v_out, np.float32),
+                                  np.asarray(ref_v, np.float32))
+
+
+@pytest.mark.parametrize("softcap,window", [(None, None), (30.0, None),
+                                            (None, 40), (50.0, 24)])
+def test_paged_attention_append_softcap_window(softcap, window, rng):
+    B, KVH, G, HD, BT, MB = 2, 2, 2, 64, 16, 5
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(np.float32))
+    k_new = jnp.asarray(rng.randn(B, KVH, HD).astype(np.float32))
+    v_new = jnp.asarray(rng.randn(B, KVH, HD).astype(np.float32))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(np.arange(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([61, 33], np.int32))
+    ref_o, ref_k, ref_v = ops.paged_attention_append_ref(
+        q, k_new, v_new, k_pool, v_pool, tables, lens,
+        softcap=softcap, window=window)
+    out, k_out, v_out = ops.paged_attention_append(
+        q, k_new, v_new, k_pool, v_pool, tables, lens,
+        softcap=softcap, window=window, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_o),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_array_equal(np.asarray(k_out), np.asarray(ref_k))
+    np.testing.assert_array_equal(np.asarray(v_out), np.asarray(ref_v))
+
+
+def test_paged_attention_append_edges(rng):
+    """lens == 0 writes position 0 of the first block; lens == MB * BT
+    (full table) drops the write and attends the whole table -- both
+    must match the oracle's ``mode=\"drop\"`` discipline."""
+    B, KVH, G, HD, BT, MB = 2, 2, 2, 64, 8, 3
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(np.float32))
+    k_new = jnp.asarray(rng.randn(B, KVH, HD).astype(np.float32))
+    v_new = jnp.asarray(rng.randn(B, KVH, HD).astype(np.float32))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(rng.permutation(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([0, MB * BT], np.int32))
+    k_before = np.asarray(k_pool).copy()
+    ref_o, ref_k, ref_v = ops.paged_attention_append_ref(
+        q, k_new, v_new, k_pool, v_pool, tables, lens)
+    out, k_out, v_out = ops.paged_attention_append(
+        q, k_new, v_new, k_pool, v_pool, tables, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_o),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_array_equal(np.asarray(k_out), np.asarray(ref_k))
+    np.testing.assert_array_equal(np.asarray(v_out), np.asarray(ref_v))
+    # row 0: the new K row really landed at block tables[0, 0], offset 0
+    np.testing.assert_allclose(
+        np.asarray(k_out)[int(tables[0, 0]), 0],
+        np.asarray(k_new)[0], rtol=0, atol=0)
+    # row 1 (full): pools untouched anywhere row 1's table points
+    for j in range(MB):
+        np.testing.assert_array_equal(
+            np.asarray(k_out)[int(tables[1, j])],
+            k_before[int(tables[1, j])])
+
+
+def test_paged_attention_append_matches_write_then_attend(rng):
+    """The fused step == scatter the rows yourself, then run the plain
+    decode kernel over ``lens + 1`` (the eager path's two dispatches)."""
+    B, KVH, G, HD, BT, MB = 2, 2, 4, 64, 8, 4
+    NB = B * MB
+    q = jnp.asarray(rng.randn(B, KVH, G, HD).astype(np.float32))
+    k_new = jnp.asarray(rng.randn(B, KVH, HD).astype(np.float32))
+    v_new = jnp.asarray(rng.randn(B, KVH, HD).astype(np.float32))
+    k_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    v_pool = jnp.asarray(rng.randn(NB, BT, KVH, HD).astype(np.float32))
+    tables = jnp.asarray(rng.permutation(NB).reshape(B, MB).astype(np.int32))
+    lens = jnp.asarray(np.array([19, 7], np.int32))
+    jt = np.asarray(lens) // BT
+    phys = np.asarray(tables)[np.arange(B), jt]
+    off = np.asarray(lens) - jt * BT
+    k_ref = np.asarray(k_pool).copy()
+    v_ref = np.asarray(v_pool).copy()
+    k_ref[phys, off] = np.asarray(k_new)
+    v_ref[phys, off] = np.asarray(v_new)
+    out, k_out, v_out = ops.paged_attention_append(
+        q, k_new, v_new, k_pool, v_pool, tables, lens, interpret=True)
+    dec = ops.paged_attention(q, jnp.asarray(k_ref), jnp.asarray(v_ref),
+                              tables, lens + 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dec),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(k_out), k_ref)
+    np.testing.assert_array_equal(np.asarray(v_out), v_ref)
+
+
 @pytest.mark.parametrize("nb,blk", [(10, (4, 8)), (6, (16,)), (12, (2, 4, 8))])
 def test_block_copy_plan(nb, blk, rng):
     """Device-side compaction/swap-in: apply a (src, dst) copy plan."""

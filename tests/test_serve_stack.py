@@ -244,16 +244,22 @@ def test_scheduler_adaptive_prefill_budget():
 
 
 def test_scheduler_resume_candidates_peek():
-    """``resume_candidates`` exposes the LIFO head without popping --
-    the surface the engine's speculative prefetch rides."""
+    """``resume_candidates`` exposes the top-k LIFO window without
+    popping -- the surface the engine's speculative prefetch rides,
+    most-likely-next first (the ordering is also the cancellation
+    ranking under pressure)."""
     sched = Scheduler()
     assert sched.resume_candidates() == []
     a = Request(rid=0, prompt=np.arange(8), max_new=8)
     b = Request(rid=1, prompt=np.arange(8), max_new=8)
+    c = Request(rid=2, prompt=np.arange(8), max_new=8)
     sched.on_preempt(a)
+    assert [r.rid for r in sched.resume_candidates()] == [0]
     sched.on_preempt(b)
-    assert [r.rid for r in sched.resume_candidates()] == [1]   # LIFO top
-    assert len(sched.preempted) == 2           # peek does not pop
+    sched.on_preempt(c)
+    # top-k=2 window, LIFO top first; deeper entries stay invisible
+    assert [r.rid for r in sched.resume_candidates()] == [2, 1]
+    assert len(sched.preempted) == 3           # peek does not pop
     assert sched.resume_candidates()[0] is sched.preempted.peek()
 
 
